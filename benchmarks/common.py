@@ -1,0 +1,150 @@
+"""Shared harness for the paper-figure benchmarks (CPU tiny-scale).
+
+All figures compare *relative* behaviour (MoD vs vanilla vs controls) on
+identical synthetic data — the paper's methodology at reduced scale. The
+synthetic stream (Zipf + deterministic successor overlay) has genuinely
+easy and hard tokens, so routing has signal to learn.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import (
+    AttentionConfig,
+    MoDConfig,
+    MoEConfig,
+    ModelConfig,
+    OptimConfig,
+    TrainConfig,
+)
+from repro.data.synthetic import SyntheticLM
+from repro.models import api
+from repro.train.loop import make_train_state, make_train_step
+
+
+def tiny_config(
+    mod: bool = True,
+    capacity: float = 0.125,
+    every: int = 2,
+    router_type: str = "learned",
+    moe: Optional[MoEConfig] = None,
+    d_model: int = 128,
+    n_layers: int = 6,
+    vocab: int = 512,
+    seq: int = 128,
+    d_ff_mult: int = 2,
+) -> ModelConfig:
+    return ModelConfig(
+        name="bench",
+        family="moe" if (moe and moe.enabled) else "dense",
+        n_layers=n_layers,
+        d_model=d_model,
+        d_ff=d_ff_mult * d_model,
+        vocab=vocab,
+        max_seq_len=seq,
+        dtype="float32",
+        attn=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=d_model // 4),
+        mod=MoDConfig(
+            enabled=mod,
+            capacity_ratio=capacity,
+            every=every,
+            round_to=1,
+            router_type=router_type,
+            gate="sigmoid",  # stable at tiny scale; raw-gate variant in tests
+        ),
+        moe=moe or MoEConfig(),
+    )
+
+
+def flops_per_token_fwd(cfg: ModelConfig, seq: int) -> float:
+    """Analytic forward FLOPs per token (matmuls + attention quadratic),
+    accounting for MoD capacity (the paper's §3.2 accounting)."""
+    D, F, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    nq, nkv = cfg.attn.n_heads, cfg.attn.n_kv_heads
+    proj = 2 * D * (nq * hd + 2 * nkv * hd + nq * hd)  # qkv + o
+    mlp_mults = 3 if cfg.glu else 2
+    if cfg.moe.enabled:
+        fe = cfg.moe.d_ff_expert or F
+        mlp = 2 * mlp_mults * D * fe * cfg.moe.top_k
+    else:
+        mlp = 2 * mlp_mults * D * F
+    attn_quad_full = 2 * 2 * seq * nq * hd  # qk + pv per token over seq keys
+    per_full_block = proj + mlp + attn_quad_full
+    n_groups, has_full, has_mod, n_tail = _structure(cfg)
+    total = 0.0
+    if has_full:
+        total += n_groups * per_full_block
+    if has_mod:
+        c = cfg.mod.capacity_ratio
+        attn_quad_mod = 2 * 2 * (c * seq) * nq * hd
+        total += n_groups * c * (proj + mlp + attn_quad_mod / max(c, 1e-9) * c)
+    total += n_tail * per_full_block
+    total += 2 * D * cfg.vocab  # unembed
+    return total
+
+
+def _structure(cfg):
+    from repro.models.transformer import group_structure
+
+    return group_structure(cfg)
+
+
+def train_bench(
+    cfg: ModelConfig,
+    steps: int = 150,
+    batch: int = 8,
+    seq: int = 128,
+    seed: int = 0,
+    lr: float = 1e-3,
+    eval_batches: int = 4,
+) -> Dict[str, float]:
+    """Train on the synthetic stream; return final train/eval loss + speed."""
+    tcfg = TrainConfig(
+        global_batch=batch,
+        seq_len=seq,
+        optim=OptimConfig(lr=lr, warmup_steps=max(20, steps // 20), total_steps=steps),
+        seed=seed,
+    )
+    data = SyntheticLM(cfg.vocab, seq, seed=123)
+    state = make_train_state(jax.random.PRNGKey(seed), cfg)
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+
+    t_compile = time.time()
+    b0 = {k: jnp.asarray(v) for k, v in data.batch(0, batch).items()}
+    state, metrics = step_fn(state, b0)
+    jax.block_until_ready(metrics["loss"])
+    compile_s = time.time() - t_compile
+
+    losses = []
+    t0 = time.time()
+    for i in range(1, steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i, batch).items()}
+        state, metrics = step_fn(state, b)
+        if i % 25 == 0 or i == steps - 1:
+            losses.append(float(metrics["ce"]))
+    jax.block_until_ready(metrics["loss"])
+    train_s = time.time() - t0
+
+    # held-out eval (disjoint step indices)
+    eval_loss = 0.0
+    eval_fn = jax.jit(lambda p, b: api.model_loss(p, cfg, b)[1]["ce"])
+    for j in range(eval_batches):
+        b = {k: jnp.asarray(v) for k, v in data.batch(10_000 + j, batch).items()}
+        eval_loss += float(eval_fn(state["params"], b))
+    eval_loss /= eval_batches
+
+    return {
+        "final_train_ce": losses[-1],
+        "eval_ce": eval_loss,
+        "steps_per_s": (steps - 1) / train_s,
+        "compile_s": compile_s,
+        "flops_per_tok_fwd": flops_per_token_fwd(cfg, seq),
+        "_state": state,  # for downstream analysis benches
+        "_data": data,
+    }

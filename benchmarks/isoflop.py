@@ -1,0 +1,70 @@
+"""Paper Fig. 3/4 (isoFLOP behaviour of MoD) at CPU tiny-scale.
+
+Reproduces the paper's qualitative claims:
+  (1) an MoD transformer (12.5% capacity, every other block) matches or
+      beats the vanilla baseline at equal tokens while using fewer
+      forward-pass FLOPs;
+  (2) at *equal training FLOPs* (MoD trained proportionally more steps) MoD
+      is strictly better — the "down and to the right" isoFLOP shift;
+  (3) stochastic (Gaussian) routing is drastically worse — learned routing
+      is what matters (paper Fig. 3, control).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import flops_per_token_fwd, tiny_config, train_bench
+
+STEPS = 150
+BATCH = 8
+SEQ = 128
+
+
+def run(include_stochastic: bool = True, capacities=(0.125,)) -> List[Dict]:
+    rows: List[Dict] = []
+    base_cfg = tiny_config(mod=False)
+    base = train_bench(base_cfg, steps=STEPS, batch=BATCH, seq=SEQ)
+    base_flops = base["flops_per_tok_fwd"]
+    rows.append(
+        dict(name="vanilla", steps=STEPS, eval_ce=base["eval_ce"],
+             rel_fwd_flops=1.0, steps_per_s=base["steps_per_s"])
+    )
+    for cap in capacities:
+        cfg = tiny_config(mod=True, capacity=cap)
+        r = train_bench(cfg, steps=STEPS, batch=BATCH, seq=SEQ)
+        rel = r["flops_per_tok_fwd"] / base_flops
+        rows.append(
+            dict(name=f"mod_cap{int(cap*100)}", steps=STEPS, eval_ce=r["eval_ce"],
+                 rel_fwd_flops=rel, steps_per_s=r["steps_per_s"])
+        )
+        # isoFLOP: train MoD for 1/rel more steps (same total training FLOPs)
+        iso_steps = int(STEPS / rel)
+        r2 = train_bench(cfg, steps=iso_steps, batch=BATCH, seq=SEQ)
+        rows.append(
+            dict(name=f"mod_cap{int(cap*100)}_isoflop", steps=iso_steps,
+                 eval_ce=r2["eval_ce"], rel_fwd_flops=rel, steps_per_s=r2["steps_per_s"])
+        )
+    if include_stochastic:
+        cfg = tiny_config(mod=True, router_type="stochastic")
+        r = train_bench(cfg, steps=STEPS, batch=BATCH, seq=SEQ)
+        rows.append(
+            dict(name="mod_stochastic_control", steps=STEPS, eval_ce=r["eval_ce"],
+                 rel_fwd_flops=r["flops_per_tok_fwd"] / base_flops,
+                 steps_per_s=r["steps_per_s"])
+        )
+    return rows
+
+
+def main() -> List[str]:
+    rows = run()
+    out = []
+    for r in rows:
+        out.append(
+            f"isoflop/{r['name']},{r['eval_ce']:.4f},"
+            f"rel_fwd_flops={r['rel_fwd_flops']:.3f};steps={r['steps']};sps={r['steps_per_s']:.2f}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,40 @@
+"""Paper Fig. 7 (MoDE): MoD composes with MoE.
+
+Three models at matched size/data: token-choice MoE baseline, staged MoDE
+(MoD routing around blocks whose MLP is the MoE), and integrated MoDE
+(no-op experts inside the MoE router). Paper: MoDE variants improve on the
+MoE baseline per FLOP; integrated beats naive capacity reduction.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import tiny_config, train_bench
+from repro.config import MoEConfig
+
+STEPS = 120
+
+
+def run() -> List[Dict]:
+    moe = MoEConfig(enabled=True, n_experts=4, top_k=2, d_ff_expert=128)
+    rows = []
+    # MoE baseline (no MoD)
+    r = train_bench(tiny_config(mod=False, moe=moe, n_layers=4), steps=STEPS)
+    rows.append(dict(name="moe_baseline", eval_ce=r["eval_ce"], sps=r["steps_per_s"]))
+    # staged MoDE
+    r = train_bench(tiny_config(mod=True, moe=moe, n_layers=4), steps=STEPS)
+    rows.append(dict(name="mode_staged", eval_ce=r["eval_ce"], sps=r["steps_per_s"]))
+    # integrated MoDE (no-op experts, MoD router off)
+    moe_i = MoEConfig(enabled=True, n_experts=4, top_k=2, d_ff_expert=128,
+                      mode_variant="integrated", n_noop_experts=2)
+    r = train_bench(tiny_config(mod=False, moe=moe_i, n_layers=4), steps=STEPS)
+    rows.append(dict(name="mode_integrated", eval_ce=r["eval_ce"], sps=r["steps_per_s"]))
+    return rows
+
+
+def main() -> List[str]:
+    return [f"mode/{r['name']},{r['eval_ce']:.4f},sps={r['sps']:.2f}" for r in run()]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

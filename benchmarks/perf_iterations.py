@@ -1,0 +1,229 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> re-analyse.
+
+Each experiment is a named variant of one of the three chosen cells; for
+every variant we recompute the three roofline terms (same methodology as
+benchmarks/roofline.py) and log hypothesis/before/after/verdict into
+results/perf_log.json, which EXPERIMENTS.md §Perf renders.
+
+Cells (chosen per the assignment):
+  A. granite-8b x decode_32k   — most collective-bound cell
+  B. olmoe-1b-7b x prefill_32k — worst roofline fraction (EP dispatch)
+  C. granite-8b x train_4k     — most representative of the paper's technique
+"""
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from benchmarks import roofline as RL
+from repro.config import SHAPES, ModelConfig, get_config
+
+
+def measure(
+    arch: str,
+    shape_name: str,
+    cfg_mut: Optional[Callable[[ModelConfig], ModelConfig]] = None,
+    fsdp: bool = True,
+    microbatches: int = 8,
+    probes: bool = True,
+    attn_flags: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Full-depth dryrun (collectives/memory) + unrolled probes (flops)."""
+    from repro.launch import dryrun as DR
+    from repro.models import attention as ATT_MOD
+
+    saved = {}
+    for k, v in (attn_flags or {}).items():
+        saved[k] = getattr(ATT_MOD, k)
+        setattr(ATT_MOD, k, v)
+
+    cfg = get_config(arch)
+    if cfg_mut is not None:
+        cfg = cfg_mut(cfg)
+    full = DR.run_cell(
+        arch, shape_name, multi_pod=False, fsdp=fsdp,
+        cfg_override=cfg, microbatches=microbatches,
+    )
+    if full["status"] != "ok":
+        return {"status": full["status"], "error": full.get("error")}
+    wire = full["collectives"]["total_wire_bytes_per_device"]
+    if cfg.dtype == "bfloat16":
+        wire = wire / 2.0  # CPU promotes bf16 -> f32 (see roofline notes)
+    g_full = RL.full_groups(cfg)
+
+    def probe(g, dense):
+        from repro.models import attention as ATT
+
+        pcfg = RL.depth_variant(cfg, g)
+        old = ATT._DENSE_LIMIT
+        if dense:
+            ATT._DENSE_LIMIT = 1 << 62
+        try:
+            rec = DR.run_cell(arch, shape_name, multi_pod=False, fsdp=fsdp,
+                              collect_hlo=False, cfg_override=pcfg, microbatches=1)
+        finally:
+            ATT._DENSE_LIMIT = old
+        assert rec["status"] == "ok", rec
+        return rec["cost"]["flops"]
+
+    if probes:
+        f1, f2 = probe(1, True), probe(2, True)
+        flops = f1 + (g_full - 1) * max(f2 - f1, 0.0)
+    else:
+        flops = full["cost"]["flops"]
+
+    for k, v in saved.items():
+        setattr(ATT_MOD, k, v)
+    shape = SHAPES[shape_name]
+    mem = RL.analytic_memory_bytes(cfg, shape, microbatches)
+    terms = {
+        "compute_ms": 1e3 * flops / RL.PEAK_FLOPS,
+        "memory_ms": 1e3 * mem / RL.HBM_BW,
+        "collective_ms": 1e3 * wire / RL.ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    return {
+        "status": "ok",
+        **terms,
+        "dominant": dom,
+        "bound_ms": terms[dom],
+        "temp_gib": full["memory"]["temp_bytes"] / 2**30,
+        "wire_gib": wire / 2**30,
+        "flops_per_dev": flops,
+    }
+
+
+EXPERIMENTS = []
+
+
+def exp(cell, name, hypothesis, **kw):
+    EXPERIMENTS.append((cell, name, hypothesis, kw))
+
+
+# --------------------------------------------------------------------------
+# Cell A: granite-8b x decode_32k (collective-bound)
+# --------------------------------------------------------------------------
+exp("A:granite-8b/decode_32k", "baseline(fsdp)",
+    "Baseline: serving with the training-time FSDP param sharding and "
+    "GSPMD's default attention strategy.",
+    arch="granite-8b", shape_name="decode_32k", probes=False,
+    attn_flags={"DECODE_TP_CONSTRAINT": False})
+exp("A:granite-8b/decode_32k", "tp-only-params",
+    "Hypothesis: FSDP all-gathers ~1 GiB of weights per token step; "
+    "serving with TP-only resident params should drop collective >10x. "
+    "(REFUTED: weights were never the bulk — the per-layer traffic is the "
+    "KV cache itself, see next iteration.)",
+    arch="granite-8b", shape_name="decode_32k", probes=False, fsdp=False,
+    attn_flags={"DECODE_TP_CONSTRAINT": False})
+exp("A:granite-8b/decode_32k", "q-hd-shard-constraint",
+    "Diagnosis (per-op HLO report): GSPMD all-gathers the ENTIRE per-layer "
+    "KV cache (1 GiB x 18 groups/step) because Q is head-sharded while the "
+    "8-kv-head cache can only shard head_dim over the 16-way model axis. "
+    "Constraining Q/K/V to head_dim sharding makes QK^T a partial "
+    "contraction with a ~32 MiB scores psum per group. Expect ~10x lower "
+    "collective term.",
+    arch="granite-8b", shape_name="decode_32k", probes=False, fsdp=False,
+    attn_flags={"DECODE_TP_CONSTRAINT": True})
+exp("A:granite-8b/decode_32k", "mod-vs-dense-decode",
+    "Reproduction check: the dense twin under identical sharding. MoD "
+    "halves per-step block work and shrinks half the KV caches 8x — "
+    "expect the dense model's collective+memory terms above MoD's.",
+    arch="granite-8b-dense", shape_name="decode_32k", probes=False, fsdp=False,
+    attn_flags={"DECODE_TP_CONSTRAINT": True})
+
+# --------------------------------------------------------------------------
+# Cell B: olmoe-1b-7b x prefill_32k (worst fraction: EP dispatch traffic)
+# --------------------------------------------------------------------------
+exp("B:olmoe-1b-7b/prefill_32k", "baseline",
+    "Baseline EP dispatch: per-sequence capacity-bucketed gather with "
+    "E->model sharding.",
+    arch="olmoe-1b-7b", shape_name="prefill_32k")
+exp("B:olmoe-1b-7b/prefill_32k", "capacity-1.0",
+    "Dispatch/combine traffic scales with expert capacity; cutting the "
+    "capacity factor 1.25 -> 1.0 trims 20% of xe/ye bytes moved at <0.5% "
+    "quality cost (paper-style top-k drops are rare at 32k tokens/seq). "
+    "Expect ~15-20% lower collective term.",
+    arch="olmoe-1b-7b", shape_name="prefill_32k",
+    cfg_mut=lambda c: dataclasses.replace(
+        c, moe=dataclasses.replace(c.moe, capacity_factor=1.0)))
+exp("B:olmoe-1b-7b/prefill_32k", "bf16-combine",
+    "The worst cell's traffic is the cross-expert combine: a f32 (B,S,D) "
+    "all-reduce over the EP/model axis per MoE layer (~537 MiB/layer/dev). "
+    "Accumulating the combine in bf16 halves those wire bytes; top-8 "
+    "addends in bf16 cost ~2-3 bits of mantissa on a residual-scale "
+    "tensor. Expect ~35-45% lower collective term.",
+    arch="olmoe-1b-7b", shape_name="prefill_32k",
+    cfg_mut=lambda c: dataclasses.replace(
+        c, moe=dataclasses.replace(c.moe, capacity_factor=1.0,
+                                   combine_dtype="bfloat16")))
+exp("B:olmoe-1b-7b/prefill_32k", "no-fsdp-prefill",
+    "Prefill is inference: dropping FSDP removes per-layer weight "
+    "all-gathers (olmoe total params ~7B -> 0.9GiB/chip TP-sharded). "
+    "Expect a further collective drop.",
+    arch="olmoe-1b-7b", shape_name="prefill_32k", fsdp=False,
+    cfg_mut=lambda c: dataclasses.replace(
+        c, moe=dataclasses.replace(c.moe, capacity_factor=1.0,
+                                   combine_dtype="bfloat16")))
+
+# --------------------------------------------------------------------------
+# Cell C: granite-8b x train_4k (the paper's setting)
+# --------------------------------------------------------------------------
+exp("C:granite-8b/train_4k", "baseline(paper,remat=full)",
+    "Paper-faithful MoD training step, full remat (recompute = +1 forward "
+    "~ +33% of the 6ND compute).",
+    arch="granite-8b", shape_name="train_4k")
+exp("C:granite-8b/train_4k", "selective-remat",
+    "Remat only needs to drop the elementwise intermediates; saving dot "
+    "outputs (dots_with_no_batch_dims_saveable) removes most of the "
+    "recompute FLOPs for ~1.4 GiB more activations/device. Expect the "
+    "compute term to drop ~20-25% while staying under HBM.",
+    arch="granite-8b", shape_name="train_4k",
+    cfg_mut=lambda c: dataclasses.replace(c, remat="selective"))
+exp("C:granite-8b/train_4k", "dense-baseline-isoflop",
+    "Reproduction check (paper Fig. 3/4): the dense twin's compute term "
+    "should be ~1.5-1.7x the MoD model's — the paper's forward-FLOP "
+    "saving, visible directly in the compiled roofline.",
+    arch="granite-8b-dense", shape_name="train_4k")
+
+# --------------------------------------------------------------------------
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/perf_log.json")
+    ap.add_argument("--cell", default=None, help="run only experiments whose cell matches")
+    args = ap.parse_args()
+    log = []
+    for cell, name, hypothesis, kw in EXPERIMENTS:
+        if args.cell and not cell.startswith(args.cell):
+            continue
+        print(f"[perf] {cell} :: {name}")
+        sys.stdout.flush()
+        try:
+            res = measure(**kw)
+        except Exception as e:
+            res = {"status": "failed", "error": f"{type(e).__name__}: {e}"}
+        entry = {"cell": cell, "name": name, "hypothesis": hypothesis, **res}
+        log.append(entry)
+        if res.get("status") == "ok":
+            print(f"       C={res['compute_ms']:9.2f}ms M={res['memory_ms']:8.2f}ms "
+                  f"X={res['collective_ms']:8.2f}ms -> {res['dominant']} "
+                  f"(temp {res['temp_gib']:.2f} GiB)")
+        else:
+            print(f"       {res}")
+        sys.stdout.flush()
+        with open(args.out, "w") as f:
+            json.dump(log, f, indent=1)
+    print(f"[perf] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,357 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis from the compiled dry-run artifacts.
+
+Three terms per (arch x shape), single-pod mesh (16x16 = 256 chips):
+
+    compute    = HLO_FLOPs / (chips * 197e12)          [bf16 peak / chip]
+    memory     = HLO_bytes / (chips * 819e9)           [HBM bw / chip]
+    collective = wire_bytes / (chips * 50e9)           [ICI / link]
+
+Methodology notes (all three sourced from the compiled module):
+
+1. ``cost_analysis()`` counts a while-loop (lax.scan) body ONCE regardless
+   of trip count, so the full-depth scan-form module under-reports FLOPs by
+   ~L x. The probes therefore compile two reduced-depth variants (G=1, G=2
+   layer groups) with **unrolled** layer loops (cfg.unroll_layers) and
+   microbatches=1, then extrapolate: body = f(G2) - f(G1);
+   full = f(G1) + (G_full - 1) * body. Unrolling makes every layer visible
+   to the cost model; total step FLOPs are microbatch-invariant.
+2. The flash-attention block-pair scan is *inside* a layer, so its interior
+   would also be counted once. For the compute term the probes force the
+   dense-attention path (``_DENSE_LIMIT = inf``) so attention FLOPs appear
+   fully; this matches masked-dense semantics (the TPU Pallas kernel does
+   ~half of that for causal masks — noted in EXPERIMENTS.md).
+3. Collective traffic is parsed from the full-depth compiled HLO with
+   ``known_trip_count`` multipliers (launch.hlo_analysis), so it needs no
+   extrapolation.
+4. XLA:CPU ``bytes accessed`` models ZERO fusion (every op's operands and
+   results count as HBM traffic) and over-reports by ~30x vs a fused TPU
+   module. The operative memory term is therefore the documented analytic
+   traffic model (:func:`analytic_memory_bytes`); the HLO number is kept as
+   an upper bound column.
+5. Numbers are per-device (post-SPMD module). MODEL_FLOPS = 6ND (train) or
+   2ND (inference), N = active params; the ratio MODEL_FLOPS/HLO_FLOPs
+   flags remat/redundancy waste (and shows MoD's saving: HLO < 6ND).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.config import SHAPES, ModelConfig, get_config, shape_applicable
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+CHIPS = 256  # single-pod roofline mesh
+
+
+# --------------------------------------------------------------------------
+# depth variants
+# --------------------------------------------------------------------------
+
+
+def full_groups(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid_attn_every
+    if cfg.mod.enabled and cfg.mod.every == 2:
+        return cfg.n_layers // 2
+    return cfg.n_layers
+
+
+def depth_variant(cfg: ModelConfig, g: int) -> ModelConfig:
+    # probes compile UNROLLED so cost_analysis sees every layer (a lax.scan
+    # body is counted once regardless of trip count).
+    if cfg.family == "hybrid":
+        return dataclasses.replace(
+            cfg, n_layers=cfg.hybrid_attn_every * g, unroll_layers=True
+        )
+    per = 2 if (cfg.mod.enabled and cfg.mod.every == 2) else 1
+    repl: Dict[str, Any] = {"n_layers": per * g, "unroll_layers": True}
+    if cfg.family == "encdec":
+        repl["n_enc_layers"] = 2 * g  # scale encoder scan with the probe too
+    return dataclasses.replace(cfg, **repl)
+
+
+def _enc_scale(cfg: ModelConfig, g_full: int) -> float:
+    # encdec probes scale enc layers 2g vs full 4: linear extrapolation in g
+    # stays exact because both scans scale together only if
+    # n_enc_layers == 2 * g_full; warn otherwise (whisper: 4 == 2*2 OK).
+    return 1.0
+
+
+def probe_cost(arch: str, shape_name: str, g: int, dense_attn: bool) -> Dict[str, float]:
+    """Compile a reduced-depth cell and return per-device cost numbers."""
+    from repro.launch import dryrun as DR
+    from repro.models import attention as ATT
+
+    cfg = depth_variant(get_config(arch), g)
+    old_limit = ATT._DENSE_LIMIT
+    if dense_attn:
+        ATT._DENSE_LIMIT = 1 << 62
+    try:
+        # microbatches=1: total step FLOPs are microbatch-count invariant,
+        # and probing without the accumulation loop keeps the module unrolled
+        rec = DR.run_cell(
+            arch, shape_name, multi_pod=False, collect_hlo=False,
+            cfg_override=cfg, microbatches=1,
+        )
+    finally:
+        ATT._DENSE_LIMIT = old_limit
+    if rec["status"] != "ok":
+        raise RuntimeError(f"probe failed: {rec}")
+    return {"flops": rec["cost"]["flops"], "bytes": rec["cost"]["bytes_accessed"]}
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """Analytic MODEL_FLOPS per step (global): 6ND train / 2ND inference."""
+    n = cfg.active_params_per_token()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analytic_memory_bytes(cfg: ModelConfig, shape, microbatches: int = 8) -> float:
+    """Per-device HBM traffic estimate for one step (the operative memory
+    term — XLA:CPU ``bytes accessed`` models zero fusion and over-counts
+    ~30x; EXPERIMENTS.md reports both).
+
+    Coefficients (documented, deliberately simple):
+      - weights: TP-sharded bf16 copy read once per forward and once per
+        backward pass, per microbatch; optimizer state (f32 m, v, p) r/w
+        once per step, fully sharded (FSDP).
+      - activations: ~12 HBM passes of the (B_mb, S, D) stream per layer
+        forward (x, norms, qkvo, mlp up/gate/down, residual), doubled for
+        backward and again +12 for remat recompute when remat=full.
+      - attention: flash-style — Q,K,V,O traffic only (in the passes);
+        MoD layers carry capacity_ratio of the stream.
+      - logits/CE: 3 f32 passes over (B_mb, S, V/model).
+      - decode: weights once + full KV/state cache read + token writes.
+    """
+    P = cfg.n_params()
+    dt = 2  # bf16
+    model_ax, chips = 16, CHIPS
+    W_dev = P * dt / model_ax  # TP-sharded weight bytes per device
+    opt_dev = P * (4 + 4 + 4 + 2) * 2 / chips  # m,v,p32 r/w, fully sharded
+    B_dev = max(1, shape.global_batch // 16)  # data-parallel shard
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+
+    # effective stream fraction with MoD (half the layers at capacity c)
+    mod_frac = 1.0
+    if cfg.mod.enabled and cfg.mod.every == 2:
+        mod_frac = 0.5 * (1.0 + cfg.mod.capacity_ratio)
+
+    if shape.kind == "train":
+        mb = max(1, microbatches)
+        act = B_dev * shape.seq_len * D * dt  # one stream pass (full batch)
+        passes = 12 + 12 + (12 if cfg.remat == "full" else 0)
+        act_traffic = act * L * passes * mod_frac
+        weight_traffic = W_dev * 2 * mb  # fwd+bwd re-read per microbatch
+        logits = B_dev * shape.seq_len * (V / model_ax) * 4 * 3
+        return weight_traffic + opt_dev + act_traffic + logits
+    if shape.kind == "prefill":
+        act = B_dev * shape.seq_len * D * dt
+        return W_dev + act * L * 12 * mod_frac
+    # decode: weights + cache traffic
+    cache = 0.0
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        n_full = L // (2 if cfg.mod.enabled else 1) if cfg.family != "hybrid" else L // cfg.hybrid_attn_every
+        kv_dev = (
+            n_full
+            * B_dev
+            * shape.seq_len
+            * cfg.attn.n_kv_heads
+            * cfg.head_dim
+            * 2  # K and V
+            * dt
+            / model_ax
+            * (model_ax if cfg.attn.n_kv_heads * 0 else 1)
+        )
+        if cfg.mod.enabled and cfg.family != "hybrid":
+            kv_dev += (
+                (L // 2) * B_dev * cfg.mod.capacity(shape.seq_len)
+                * cfg.attn.n_kv_heads * cfg.head_dim * 2 * dt / model_ax
+            )
+        cache += kv_dev
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.models.ssm import dims as ssm_dims
+
+        _, d_inner, H, ds = ssm_dims(cfg)
+        cache += L * B_dev * H * cfg.ssm.head_dim * ds * 4 * 2 / model_ax  # r+w
+    return W_dev + cache
+
+
+def analyze_cell(
+    arch: str, shape_name: str, dryrun_rec: Optional[Dict] = None, probes: bool = True,
+    flops_override: Optional[float] = None,
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": why}
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "status": "ok"}
+
+    from repro.launch import dryrun as DR
+
+    if dryrun_rec is None:
+        dryrun_rec = DR.run_cell(arch, shape_name, multi_pod=False)
+    if dryrun_rec.get("status") != "ok":
+        return {"arch": arch, "shape": shape_name, "status": "failed", "rec": dryrun_rec}
+
+    raw_flops = dryrun_rec["cost"]["flops"]
+    raw_bytes = dryrun_rec["cost"]["bytes_accessed"]
+    wire = dryrun_rec.get("collectives", {}).get("total_wire_bytes_per_device", 0.0)
+    # XLA:CPU promotes bf16 compute to f32 wholesale, so activation
+    # collectives appear at 2x their TPU width; correct for bf16 configs.
+    if cfg.dtype == "bfloat16":
+        wire = wire / 2.0
+    g_full = full_groups(cfg)
+
+    if flops_override is not None:
+        flops_full = flops_override
+        bytes_full = raw_bytes
+    elif probes:
+        c1 = probe_cost(arch, shape_name, 1, dense_attn=True)
+        c2 = probe_cost(arch, shape_name, 2, dense_attn=True)
+        body_f = max(c2["flops"] - c1["flops"], 0.0)
+        flops_full = c1["flops"] + (g_full - 1) * body_f
+        b1 = probe_cost(arch, shape_name, 1, dense_attn=False)
+        b2 = probe_cost(arch, shape_name, 2, dense_attn=False)
+        body_b = max(b2["bytes"] - b1["bytes"], 0.0)
+        bytes_full = b1["bytes"] + (g_full - 1) * body_b
+    elif False:
+        pass
+    else:
+        flops_full, bytes_full = raw_flops, raw_bytes
+
+    mem_analytic = analytic_memory_bytes(cfg, shape)
+    compute_t = flops_full / PEAK_FLOPS
+    memory_t = mem_analytic / HBM_BW  # operative term (HLO bytes = upper bound)
+    memory_t_hlo = bytes_full / HBM_BW
+    collective_t = wire / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": collective_t}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / CHIPS
+    rec.update(
+        {
+            "family": cfg.family,
+            "raw_flops_per_dev": raw_flops,
+            "flops_per_dev": flops_full,
+            "bytes_per_dev": bytes_full,
+            "wire_bytes_per_dev": wire,
+            "compute_s": compute_t,
+            "memory_s": memory_t,
+            "memory_s_hlo_upper": memory_t_hlo,
+            "analytic_memory_bytes": mem_analytic,
+            "collective_s": collective_t,
+            "dominant": dominant,
+            "roofline_frac": compute_t / bound if bound > 0 else 0.0,
+            "model_flops_global": mf,
+            "model_flops_per_dev": mf_dev,
+            "useful_ratio": mf_dev / flops_full if flops_full else 0.0,
+            "mfu_bound": mf_dev / (PEAK_FLOPS * bound) if bound > 0 else 0.0,
+            "memory_per_dev_temp_gib": dryrun_rec["memory"]["temp_bytes"] / 2**30,
+        }
+    )
+    return rec
+
+
+def to_markdown(rows) -> str:
+    hdr = (
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | bound | "
+        "roofline frac | MODEL/HLO | MFU bound |\n|---|---|---|---|---|---|---|---|---|\n"
+    )
+    out = [hdr]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']} "
+                f"({r.get('reason','')[:40]}) | — | — | — |\n"
+            )
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | {r['dominant']} | "
+            f"{r['roofline_frac']:.2f} | {r['useful_ratio']:.2f} | {r['mfu_bound']:.2f} |\n"
+        )
+    return "".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-json", default="results/dryrun_all.json")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--reuse-flops", default=None,
+                    help="prior roofline.json: reuse its probe FLOPs, refresh "
+                         "collectives/memory from --dryrun-json")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+
+    base = {}
+    if os.path.exists(args.dryrun_json):
+        with open(args.dryrun_json) as f:
+            for r in json.load(f):
+                if r.get("mesh") == "16x16":
+                    base[(r["arch"], r["shape"])] = r
+
+    flops_cache = {}
+    if args.reuse_flops and os.path.exists(args.reuse_flops):
+        with open(args.reuse_flops) as f:
+            for r in json.load(f):
+                if r.get("status") == "ok":
+                    flops_cache[(r["arch"], r["shape"])] = r["flops_per_dev"]
+
+    from repro.launch.dryrun import ASSIGNED_ARCHS
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    rows = []
+    for a in archs:
+        for s in shapes:
+            try:
+                cached = flops_cache.get((a, s))
+                r = analyze_cell(
+                    a, s, base.get((a, s)),
+                    probes=(not args.no_probes) and cached is None,
+                    flops_override=cached,
+                )
+            except Exception as e:
+                r = {"arch": a, "shape": s, "status": "failed", "error": str(e)[:200]}
+            rows.append(r)
+            if r.get("status") == "ok":
+                print(
+                    f"[roofline] {a:24s} {s:12s} C={r['compute_s']*1e3:9.2f}ms "
+                    f"M={r['memory_s']*1e3:8.2f}ms X={r['collective_s']*1e3:8.2f}ms "
+                    f"-> {r['dominant']:10s} frac={r['roofline_frac']:.2f} "
+                    f"useful={r['useful_ratio']:.2f}"
+                )
+            else:
+                print(f"[roofline] {a:24s} {s:12s} {r['status']} {r.get('reason', r.get('error',''))[:60]}")
+            sys.stdout.flush()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    with open(args.out.replace(".json", ".md"), "w") as f:
+        f.write(to_markdown(rows))
+    print(f"[roofline] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints ``name,value,derived`` CSV lines. The heavyweight roofline analysis
+(512-device compiles) lives in ``benchmarks/roofline.py`` and is invoked
+separately; ``--quick`` trims training steps for CI-speed runs.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only isoflop,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer steps (smoke)")
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+
+    if args.quick:
+        import benchmarks.isoflop as iso
+        import benchmarks.mode as mode
+
+        iso.STEPS = 60
+        mode.STEPS = 50
+
+    sections = {
+        "flops_table": lambda: __import__("benchmarks.flops_table", fromlist=["main"]).main(),
+        "isoflop": lambda: __import__("benchmarks.isoflop", fromlist=["main"]).main(),
+        "routing": lambda: __import__("benchmarks.routing_analysis", fromlist=["main"]).main(),
+        "sampling": lambda: __import__("benchmarks.sampling", fromlist=["main"]).main(),
+        "mode": lambda: __import__("benchmarks.mode", fromlist=["main"]).main(),
+    }
+    chosen = args.only.split(",") if args.only else list(sections)
+
+    print("name,value,derived")
+    ok = True
+    for name in chosen:
+        t0 = time.time()
+        try:
+            for line in sections[name]():
+                print(line)
+            print(f"_meta/{name}_wall_s,{time.time()-t0:.1f},")
+        except Exception as e:  # keep the suite going; report the failure
+            ok = False
+            print(f"_error/{name},{type(e).__name__},{str(e)[:120]}")
+        sys.stdout.flush()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

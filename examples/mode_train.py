@@ -1,0 +1,33 @@
+"""MoDE (paper §4.3): composing Mixture-of-Depths with Mixture-of-Experts.
+
+Trains three matched models — a token-choice MoE baseline, *staged* MoDE
+(MoD routing around blocks whose MLP is the MoE), and *integrated* MoDE
+(no-op experts inside the MoE router) — and compares losses, mirroring
+paper Fig. 7 at CPU scale.
+
+  PYTHONPATH=src python examples/mode_train.py
+"""
+from benchmarks.common import tiny_config, train_bench
+from repro.config import MoEConfig
+
+STEPS = 80
+
+moe = MoEConfig(enabled=True, n_experts=4, top_k=2, d_ff_expert=128)
+print("1/3 MoE baseline...")
+base = train_bench(tiny_config(mod=False, moe=moe, n_layers=4), steps=STEPS)
+print(f"    eval ce {base['eval_ce']:.4f}")
+
+print("2/3 staged MoDE (MoD around MoE blocks)...")
+staged = train_bench(tiny_config(mod=True, moe=moe, n_layers=4), steps=STEPS)
+print(f"    eval ce {staged['eval_ce']:.4f}")
+
+print("3/3 integrated MoDE (no-op experts)...")
+moe_i = MoEConfig(enabled=True, n_experts=4, top_k=2, d_ff_expert=128,
+                  mode_variant="integrated", n_noop_experts=2)
+integrated = train_bench(tiny_config(mod=False, moe=moe_i, n_layers=4), steps=STEPS)
+print(f"    eval ce {integrated['eval_ce']:.4f}")
+
+print("\nsummary (lower is better):")
+print(f"  moe baseline     {base['eval_ce']:.4f}  ({base['steps_per_s']:.2f} steps/s)")
+print(f"  staged MoDE      {staged['eval_ce']:.4f}  ({staged['steps_per_s']:.2f} steps/s)")
+print(f"  integrated MoDE  {integrated['eval_ce']:.4f}  ({integrated['steps_per_s']:.2f} steps/s)")

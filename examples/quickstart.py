@@ -1,0 +1,63 @@
+"""Quickstart: train a small Mixture-of-Depths LM in ~a minute on CPU.
+
+Shows the public API end to end: config -> init -> jitted train step ->
+MoD routing telemetry -> autoregressive sampling with *causal* routing.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    AttentionConfig,
+    MoDConfig,
+    ModelConfig,
+    OptimConfig,
+    TrainConfig,
+)
+from repro.data.synthetic import SyntheticLM
+from repro.models import api
+from repro.train.loop import make_train_state, make_train_step
+from repro.train.serve import greedy_generate
+
+# 1. A model config with MoD as a first-class feature: 12.5%-capacity
+#    routed blocks interleaved with full blocks (the paper's optimum).
+cfg = ModelConfig(
+    name="quickstart-mod",
+    n_layers=6,
+    d_model=128,
+    d_ff=256,
+    vocab=512,
+    max_seq_len=128,
+    dtype="float32",
+    attn=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=32),
+    mod=MoDConfig(enabled=True, capacity_ratio=0.125, every=2, round_to=1,
+                  gate="sigmoid", sampling="predictor"),
+)
+
+STEPS = 60
+tcfg = TrainConfig(global_batch=8, seq_len=128,
+                   optim=OptimConfig(lr=1e-3, warmup_steps=10, total_steps=STEPS))
+
+# 2. Data + state + step.
+data = SyntheticLM(cfg.vocab, tcfg.seq_len, seed=0)
+state = make_train_state(jax.random.PRNGKey(0), cfg)
+step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+
+print(f"params: {sum(x.size for x in jax.tree.leaves(state['params'])):,}")
+for i in range(STEPS):
+    batch = {k: jnp.asarray(v) for k, v in data.batch(i, tcfg.global_batch).items()}
+    state, m = step(state, batch)
+    if (i + 1) % 10 == 0:
+        print(
+            f"step {i+1:3d}  ce={float(m['ce']):.3f}  "
+            f"router>0.5: {float(m['mod/frac_above_half']):.3f} "
+            f"(target {cfg.mod.capacity_ratio})  "
+            f"predictor acc: {float(m['mod/predictor_acc']):.3f}"
+        )
+
+# 3. Sample autoregressively — routing decisions are causal (predictor).
+prompt = jnp.asarray(data.batch(10_000, 1)["tokens"][:, :16])
+out = greedy_generate(state["params"], cfg, prompt, n_tokens=16)
+print("prompt:      ", prompt[0].tolist())
+print("continuation:", out[0, 16:].tolist())

@@ -1,0 +1,38 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8 [arXiv:2409.02060].
+
+16L d_model=2048 16H (GQA kv=16) d_ff=1024/expert vocab=50304, MoE 64e top-8.
+"""
+from repro.config import AttentionConfig, MoDConfig, MoEConfig, ModelConfig, register
+
+
+def _base(mod: bool) -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b" + ("" if mod else "-dense"),
+        family="moe",
+        n_layers=16,
+        d_model=2048,
+        d_ff=1024,
+        vocab=50304,
+        max_seq_len=32768,
+        attn=AttentionConfig(n_heads=16, n_kv_heads=16, head_dim=128),
+        moe=MoEConfig(
+            enabled=True,
+            n_experts=64,
+            top_k=8,
+            d_ff_expert=1024,
+            mode_variant="staged" if mod else "none",
+        ),
+        mod=MoDConfig(enabled=mod, capacity_ratio=0.125, every=2),
+        dtype="bfloat16",
+        remat="full",
+    )
+
+
+@register("olmoe-1b-7b")
+def olmoe() -> ModelConfig:
+    return _base(mod=True)
+
+
+@register("olmoe-1b-7b-dense")
+def olmoe_dense() -> ModelConfig:
+    return _base(mod=False)

@@ -1,0 +1,12 @@
+"""Mixture-of-Depths core: routing, MoD block wrapper, causal predictor, MoDE."""
+from repro.core.router import (  # noqa: F401
+    apply_gate,
+    init_predictor,
+    init_router,
+    mod_select,
+    predictor_logits,
+    predictor_loss_and_acc,
+    router_aux_loss,
+    router_logits,
+)
+from repro.core.mod_block import apply_mod, decode_route_select  # noqa: F401

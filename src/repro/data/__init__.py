@@ -1,0 +1,3 @@
+"""Data substrate: deterministic synthetic LM stream, packing, sharded loader."""
+from repro.data.synthetic import SyntheticLM  # noqa: F401
+from repro.data.loader import ShardedLoader  # noqa: F401

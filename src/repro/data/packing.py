@@ -1,0 +1,50 @@
+"""Sequence packing: concatenate variable-length documents into fixed-length
+training rows with segment ids, and a loss mask that drops cross-document
+prediction targets.
+
+Packing is greedy first-fit in arrival order (deterministic). Segment ids
+let the attention mask (and the MoD router, which is segment-agnostic by
+design — routing weights are per-token) treat documents independently.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Sequence
+
+import numpy as np
+
+
+def pack_documents(
+    docs: Sequence[np.ndarray], seq_len: int, pad_id: int = 0
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields dict(tokens, labels, segment_ids, loss_mask) rows."""
+    buf_toks: List[int] = []
+    buf_segs: List[int] = []
+    seg = 1
+    for doc in docs:
+        d = list(map(int, doc))
+        while d:
+            space = seq_len + 1 - len(buf_toks)
+            take, d = d[:space], d[space:]
+            buf_toks.extend(take)
+            buf_segs.extend([seg] * len(take))
+            if len(buf_toks) == seq_len + 1:
+                yield _emit(buf_toks, buf_segs, seq_len)
+                buf_toks, buf_segs = [], []
+        seg += 1
+    if buf_toks:
+        pad = seq_len + 1 - len(buf_toks)
+        buf_toks.extend([pad_id] * pad)
+        buf_segs.extend([0] * pad)
+        yield _emit(buf_toks, buf_segs, seq_len)
+
+
+def _emit(toks: List[int], segs: List[int], seq_len: int) -> Dict[str, np.ndarray]:
+    t = np.asarray(toks, np.int32)
+    s = np.asarray(segs, np.int32)
+    same_seg = (s[1:] == s[:-1]) & (s[1:] > 0)
+    return {
+        "tokens": t[:-1],
+        "labels": t[1:],
+        "segment_ids": s[:-1],
+        "loss_mask": same_seg.astype(np.float32),
+    }

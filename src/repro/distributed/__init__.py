@@ -1,0 +1,7 @@
+"""Distribution: sharding rules, meshes, pipeline parallelism, collectives."""
+from repro.distributed.sharding import (  # noqa: F401
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+- flash_attention: causal GQA flash attention with explicit position masks
+  (serves both vanilla blocks and MoD's gathered sub-sequences)
+- ssd: Mamba2 SSD intra-chunk kernel (the quadratic hot loop)
+- swiglu: fused SwiGLU MLP (gate/up matmuls + silu + down, one VMEM pass)
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd dispatching wrapper
+in ops.py. On this CPU container kernels execute via ``interpret=True``;
+on TPU the same pallas_call lowers to Mosaic.
+"""

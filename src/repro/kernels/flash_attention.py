@@ -1,0 +1,151 @@
+"""Pallas TPU flash attention (GQA + explicit position masking).
+
+Tiling: grid = (B, nq, Nq, Nk); the last axis is "arbitrary" (sequential)
+and accumulates the online softmax in VMEM scratch. Query/output blocks are
+(block_q, head_dim); K/V blocks are (block_kv, head_dim), both sized so the
+working set (q + k + v + scores + acc ≈ 2·bq·hd + 2·bkv·hd + bq·bkv floats)
+fits comfortably in the ~16 MiB/core VMEM with MXU-aligned (multiple-of-128)
+dims. GQA is expressed in the K/V index_map (query head h reads kv head
+h·nkv/nq), so no K/V replication is materialized.
+
+Masking is position-based: q_pos/kv_pos int32 arrays ride along in their own
+blocks; causality is ``kv_pos <= q_pos`` on *original* token positions,
+which makes the same kernel serve vanilla blocks (positions = arange) and
+MoD routed blocks (sorted gathered positions). pos = -1 marks padding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_KV = 512
+
+
+def _flash_kernel(
+    qpos_ref,
+    kpos_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    n_kv_blocks: int,
+):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+    v = v_ref[0, 0]  # (bkv, hd)
+    qp = qpos_ref[0]  # (bq,)
+    kp = kpos_ref[0]  # (bkv,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bkv)
+    valid = (kp[None, :] >= 0) & (qp[:, None] >= 0)
+    if causal:
+        valid &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        valid &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]  # (bq,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_safe = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_safe), 0.0)
+    l_new = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finish():
+        l_fin = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l_fin[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, nq, hd)
+    k: jax.Array,  # (B, Skv, nkv, hd)
+    v: jax.Array,
+    q_pos: jax.Array,  # (B, Sq) int32
+    kv_pos: jax.Array,  # (B, Skv) int32
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, Sq, nq, hd)."""
+    B, Sq, nq, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    assert nq % nkv == 0
+    scale = scale if scale is not None else 1.0 / (hd**0.5)
+    bq, bkv = min(block_q, Sq), min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    Nq, Nk = Sq // bq, Skv // bkv
+
+    # heads-first layout so blocks are contiguous (B, n, S, hd)
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+
+    grid = (B, nq, Nq, Nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, n_kv_blocks=Nk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, bkv), lambda b, h, i, j: (b, j)),
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j, _nkv=nkv, _nq=nq: (b, h * _nkv // _nq, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j, _nkv=nkv, _nq=nq: (b, h * _nkv // _nq, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, hd), jnp.float32),  # acc
+            _vmem((bq, 1), jnp.float32),  # running max
+            _vmem((bq, 1), jnp.float32),  # running denominator
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, qh, kh, vh)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _vmem(shape, dtype):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover - interpret-only environments
+        return pl.MemorySpace.ANY  # type: ignore

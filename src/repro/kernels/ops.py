@@ -1,0 +1,44 @@
+"""Jit'd dispatching wrappers for the Pallas kernels.
+
+On TPU these call the Mosaic-compiled kernels; on CPU (this container) they
+run ``interpret=True`` so the exact kernel bodies are validated against the
+ref.py oracles. ``use_pallas()`` is the single switch the model layer
+consults.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd as _ssd
+from repro.kernels import swiglu as _sw
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale", "interpret"))
+def flash_attention_op(
+    q, k, v, q_pos, kv_pos, *, causal=True, window=0, scale=None, interpret=None
+):
+    interp = on_cpu() if interpret is None else interpret
+    return _fa.flash_attention(
+        q, k, v, q_pos, kv_pos, causal=causal, window=window, scale=scale, interpret=interp
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk_op(x, loglam, dt, Bm, Cm, *, interpret=None):
+    interp = on_cpu() if interpret is None else interpret
+    return _ssd.ssd_intra_chunk(x, loglam, dt, Bm, Cm, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def swiglu_op(x, w_gate, w_up, w_down, *, interpret=None):
+    interp = on_cpu() if interpret is None else interpret
+    return _sw.swiglu(x, w_gate, w_up, w_down, interpret=interp)

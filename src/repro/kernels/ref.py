@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Deliberately written as the most direct O(n^2)/O(n*d) formulations —
+independent of the blocked/online implementations they validate.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, nq, hd)
+    k: jax.Array,  # (B, Skv, nkv, hd)
+    v: jax.Array,
+    q_pos: jax.Array,  # (B, Sq)
+    kv_pos: jax.Array,  # (B, Skv)
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, nq, hd = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    scale = scale if scale is not None else 1.0 / (hd**0.5)
+    kr = jnp.repeat(k, g, axis=2)  # (B, Skv, nq, hd)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)) * scale
+    valid = (kv_pos[:, None, :] >= 0) & (q_pos[:, :, None] >= 0)
+    if causal:
+        valid &= kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window > 0:
+        valid &= q_pos[:, :, None] - kv_pos[:, None, :] < window
+    s = jnp.where(valid[:, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with nothing valid -> zero output (matches online-softmax guard)
+    any_valid = jnp.any(valid, axis=-1)[:, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vr.dtype), vr)
+    return out.astype(q.dtype)
+
+
+def ssd_chunk_ref(
+    x: jax.Array,  # (Q, hd) one chunk, one head
+    loglam: jax.Array,  # (Q,) = dt * A  (<= 0)
+    dt: jax.Array,  # (Q,)
+    Bm: jax.Array,  # (Q, ds)
+    Cm: jax.Array,  # (Q, ds)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential-recurrence oracle for one SSD chunk.
+
+    Returns (y_intra (Q, hd), state_increment (hd, ds)); the recurrence
+    starts from a zero state so y here is the *intra-chunk* contribution.
+    """
+    Q, hd = x.shape
+    ds = Bm.shape[-1]
+    s = jnp.zeros((hd, ds), jnp.float32)
+    ys = []
+    for t in range(Q):
+        lam = jnp.exp(loglam[t])
+        s = lam * s + dt[t] * jnp.outer(x[t].astype(jnp.float32), Bm[t].astype(jnp.float32))
+        ys.append(s @ Cm[t].astype(jnp.float32))
+    return jnp.stack(ys), s
+
+
+def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk quadratic.
+
+The chunked SSD algorithm splits into (a) an intra-chunk attention-like
+quadratic — the compute hot-spot, O(Q^2) per chunk with MXU-friendly
+matmuls — and (b) a cheap sequential cross-chunk state scan. This kernel
+computes (a) plus the per-chunk state increment; (b) stays in lax (it is
+latency-, not compute-, bound).
+
+Grid = (B, H, NC): one program per (batch, head, chunk). VMEM working set
+per program: x (Q, hd) + B/C (Q, ds) + the (Q, Q) decay/score tile + the
+(hd, ds) increment — with Q=128, hd=64, ds=128 this is ~250 KiB, far under
+VMEM; Q and ds are 128-multiples for MXU alignment.
+
+Outputs per program:
+  y_intra (Q, hd)   = M @ x        where M_ij = C_i.B_j exp(l_i-l_j) dt_j, j<=i
+  inc     (hd, ds)  = sum_j exp(l_Q - l_j) dt_j x_j B_j^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, loglam_ref, dt_ref, b_ref, c_ref, y_ref, inc_ref):
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # (Q, hd)
+    loglam = loglam_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    Q = x.shape[0]
+
+    l = jnp.cumsum(loglam)  # (Q,)
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C_i . B_j
+    decay = jnp.exp(l[:, None] - l[None, :])  # l_i - l_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    M = jnp.where(jj <= ii, CB * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, hd)
+    w = jnp.exp(l[-1] - l) * dt  # (Q,)
+    inc = jax.lax.dot_general(
+        x * w[:, None], Bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (hd, ds)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    inc_ref[0, 0, 0] = inc
+
+
+def ssd_intra_chunk(
+    x: jax.Array,  # (B, H, NC, Q, hd)
+    loglam: jax.Array,  # (B, H, NC, Q)
+    dt: jax.Array,  # (B, H, NC, Q)
+    Bm: jax.Array,  # (B, NC, Q, ds)
+    Cm: jax.Array,  # (B, NC, Q, ds)
+    *,
+    interpret: bool = False,
+):
+    """Returns (y_intra (B,H,NC,Q,hd) f32, inc (B,H,NC,hd,ds) f32)."""
+    B, H, NC, Q, hd = x.shape
+    ds = Bm.shape[-1]
+    grid = (B, H, NC)
+    y, inc = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, hd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, hd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, hd, ds), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, NC, Q, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, NC, hd, ds), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, loglam, dt, Bm, Cm)
+    return y, inc

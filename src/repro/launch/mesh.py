@@ -1,0 +1,31 @@
+"""Mesh construction. Functions, never module-level constants — importing
+this module must not touch jax device state (the dry-run sets
+XLA_FLAGS before any jax initialization)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Production topology: one TPU v5e pod = 16x16 = 256 chips,
+    ("data", "model"); multi-pod doubles it with a leading "pod" axis
+    (2 x 16 x 16 = 512 chips) over which data parallelism spans DCN/ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(cfg: MeshConfig) -> Mesh:
+    """Mesh from an explicit MeshConfig (tests / small runs)."""
+    return jax.make_mesh(
+        cfg.shape, cfg.axis_names, axis_types=(AxisType.Auto,) * len(cfg.shape)
+    )
+
+
+def single_device_mesh() -> Mesh:
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)

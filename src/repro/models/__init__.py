@@ -1,0 +1,1 @@
+"""Model zoo: dense GQA LMs, MoE, Mamba2 SSD, hybrid, enc-dec, VLM backbone."""

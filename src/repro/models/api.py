@@ -1,0 +1,179 @@
+"""Family dispatcher — the single entry point used by train/serve/dryrun.
+
+Each architecture family maps onto (init, forward, loss, caches, decode):
+
+    dense / moe / vlm  -> models.transformer
+    ssm                -> models.ssm_lm (mamba2)
+    hybrid             -> models.ssm_lm (zamba2)
+    encdec             -> models.encdec (whisper)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given (arch × shape) cell — the dry-run lowers against
+these without allocating anything.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeSpec
+from repro.models import encdec as ED
+from repro.models import ssm_lm as SL
+from repro.models import transformer as T
+from repro.models.layers import cross_entropy
+
+Params = Dict[str, Any]
+Aux = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# init / forward / decode dispatch
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.init_lm(key, cfg)
+    if cfg.family == "ssm":
+        return SL.init_lm(key, cfg)
+    if cfg.family == "hybrid":
+        return SL.init_hybrid(key, cfg)
+    if cfg.family == "encdec":
+        return ED.init_encdec(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def model_forward(
+    params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], rng=None,
+    last_only: bool = False,
+) -> Tuple[jax.Array, Aux]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.forward(
+            params,
+            cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            positions=batch.get("positions"),
+            rng=rng,
+            last_only=last_only,
+        )
+    if cfg.family == "ssm":
+        return SL.forward(params, cfg, tokens=batch.get("tokens"), rng=rng, last_only=last_only)
+    if cfg.family == "hybrid":
+        return SL.forward_hybrid(
+            params, cfg, tokens=batch.get("tokens"), rng=rng, last_only=last_only
+        )
+    if cfg.family == "encdec":
+        return ED.forward(
+            params, cfg, batch["tokens"], batch["enc_emb"], rng=rng, last_only=last_only
+        )
+    raise ValueError(cfg.family)
+
+
+def combine_losses(ce: jax.Array, aux: Aux, cfg: ModelConfig) -> jax.Array:
+    loss = ce
+    if cfg.mod.enabled:
+        if "mod/router_bce" in aux:
+            loss = loss + cfg.mod.aux_loss_weight * aux["mod/router_bce"]
+        if "mod/predictor_bce" in aux:
+            loss = loss + aux["mod/predictor_bce"]  # stop-grad: trains predictor only
+    for k, v in aux.items():
+        if k.endswith("moe/lb_loss"):
+            loss = loss + cfg.moe.load_balance_weight * v
+        elif k.endswith("moe/z_loss"):
+            loss = loss + cfg.moe.router_z_weight * v
+    return loss
+
+
+def model_loss(
+    params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], rng=None
+) -> Tuple[jax.Array, Aux]:
+    logits, aux = model_forward(params, cfg, batch, rng)
+    ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    loss = combine_losses(ce, aux, cfg)
+    aux = dict(aux)
+    aux["ce"] = ce
+    aux["loss"] = loss
+    return loss, aux
+
+
+def make_caches(cfg: ModelConfig, batch: int, ctx: int, specs: bool = False) -> Params:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.make_cache(cfg, batch, ctx, specs)
+    if cfg.family == "ssm":
+        return SL.make_cache(cfg, batch, ctx, specs)
+    if cfg.family == "hybrid":
+        return SL.make_hybrid_cache(cfg, batch, ctx, specs)
+    if cfg.family == "encdec":
+        return ED.make_cache(cfg, batch, ctx, specs)
+    raise ValueError(cfg.family)
+
+
+def model_decode(
+    params: Params, caches: Params, cfg: ModelConfig, token: jax.Array, pos: jax.Array
+) -> Tuple[jax.Array, Params, Aux]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.decode_step(params, caches, cfg, token, pos)
+    if cfg.family == "ssm":
+        return SL.decode_step(params, caches, cfg, token, pos)
+    if cfg.family == "hybrid":
+        return SL.decode_step_hybrid(params, caches, cfg, token, pos)
+    if cfg.family == "encdec":
+        return ED.decode_step(params, caches, cfg, token, pos)
+    raise ValueError(cfg.family)
+
+
+def model_prefill(
+    params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], ctx: int
+) -> Tuple[jax.Array, Params]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.prefill(
+            params,
+            cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            positions=batch.get("positions"),
+            ctx=ctx,
+        )
+    raise NotImplementedError(f"prefill for family {cfg.family} uses forward+decode")
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function of this cell.
+
+    train/prefill cells -> inputs of ``train_step``/``forward``;
+    decode cells -> inputs of ``serve_step`` (token + pos + caches).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            # frontend stub: pre-merged text+patch embeddings + M-RoPE ids
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, D), dt)
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        elif cfg.family == "encdec":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            specs["enc_emb"] = jax.ShapeDtypeStruct((B, cfg.enc_seq_len, D), dt)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+
+    # decode: one new token against a ctx = S cache
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+        "caches": make_caches(cfg, B, S, specs=True),
+    }

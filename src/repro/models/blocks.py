@@ -1,0 +1,96 @@
+"""Standard pre-norm transformer block (dense or MoE MLP), in three forms:
+
+- ``block_apply``   : full residual block on a (sub)sequence
+- ``block_delta``   : the block's residual *contribution* (for MoD Eq. 1)
+- ``block_decode``  : one-token step against a KV cache
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models.layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+
+Params = Dict[str, jax.Array]
+Aux = Dict[str, jax.Array]
+
+
+def init_block(key, cfg: ModelConfig, use_moe: bool = False) -> Params:
+    ks = jax.random.split(key, 2)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "attn": A.init_attention(ks[0], cfg),
+    }
+    if use_moe:
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def _ffn(p: Params, h: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, Aux]:
+    hn = rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if "moe" in p:
+        return MOE.moe_mlp(p["moe"], hn, cfg)
+    return mlp(p["mlp"], hn, cfg), {}
+
+
+def block_apply(
+    p: Params, x: jax.Array, positions: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, Aux]:
+    a = A.self_attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions, cfg)
+    h = x + a
+    m, aux = _ffn(p, h, cfg)
+    return h + m, aux
+
+
+def block_delta(
+    p: Params, x: jax.Array, positions: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, Aux]:
+    """f(X̃) in paper Eq. 1: attention + MLP contribution (no outer residual)."""
+    a = A.self_attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions, cfg)
+    h = x + a
+    m, aux = _ffn(p, h, cfg)
+    return a + m, aux
+
+
+def block_prefill(
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Params,
+    cfg: ModelConfig,
+    write_mask: Optional[jax.Array] = None,
+    delta_only: bool = False,
+) -> Tuple[jax.Array, Params, Aux]:
+    a, cache = A.prefill_self_attention(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions, cache, cfg, write_mask
+    )
+    h = x + a
+    m, aux = _ffn(p, h, cfg)
+    out = (a + m) if delta_only else (h + m)
+    return out, cache, aux
+
+
+def block_decode(
+    p: Params,
+    x: jax.Array,  # (B, 1, D)
+    positions: jax.Array,  # (B,1) or (3,B,1)
+    cache: Params,
+    cfg: ModelConfig,
+    delta_only: bool = False,
+) -> Tuple[jax.Array, Params, Aux]:
+    a, cache = A.decode_attention(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions, cache, cfg
+    )
+    h = x + a
+    m, aux = _ffn(p, h, cfg)
+    out = (a + m) if delta_only else (h + m)
+    return out, cache, aux

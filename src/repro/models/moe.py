@@ -1,0 +1,119 @@
+"""Token-choice top-k MoE with per-sequence capacity-bucketed dispatch.
+
+Dispatch strategy: dispatch groups are *sequences* (GShard-style groups), so
+the position-in-expert cumsum runs within a sequence — batch-parallel and
+free of cross-device dependencies under data parallelism. Per sequence we
+compute each token-choice's queue position via a choice-major cumsum over a
+(kS, E) one-hot (first choices win capacity), build a ``(E, C)`` gather
+index, run the stacked expert MLPs as batched einsums over the expert
+dimension, and combine with a scatter-add. Expert weights lead with E, so
+``E -> "model"`` sharding gives expert parallelism under pjit (dispatch
+becomes all-to-all traffic on the model axis).
+
+Integrated MoDE (paper §4.3): ``n_noop_experts`` extra router columns whose
+"experts" are no-ops — tokens routed there receive zero update, reproducing
+MoD's residual path inside the MoE router.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import _dense_init
+
+Params = Dict[str, jax.Array]
+Aux = Dict[str, jax.Array]
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    E = cfg.moe.n_experts
+    E_total = E + cfg.moe.n_noop_experts
+    Fe = cfg.moe.d_ff_expert or cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router_w": _dense_init(ks[0], D, (D, E_total), jnp.float32),
+        "w_up": _dense_init(ks[1], D, (E, D, Fe), dtype),
+        "w_down": _dense_init(ks[2], Fe, (E, Fe, D), dtype),
+    }
+    if cfg.glu:
+        p["w_gate"] = _dense_init(ks[3], D, (E, D, Fe), dtype)
+    return p
+
+
+def expert_capacity(seq_len: int, cfg: ModelConfig) -> int:
+    """Per-sequence per-expert capacity."""
+    E = cfg.moe.n_experts
+    c = int(cfg.moe.capacity_factor * seq_len * cfg.moe.top_k / E)
+    return max(1, -(-c // 8) * 8 if c >= 8 else c)
+
+
+def moe_mlp(
+    params: Params, x: jax.Array, cfg: ModelConfig, rng: Optional[jax.Array] = None
+) -> Tuple[jax.Array, Aux]:
+    B, S, D = x.shape
+    E = cfg.moe.n_experts
+    E_total = E + cfg.moe.n_noop_experts
+    k = cfg.moe.top_k
+    C = expert_capacity(S, cfg)
+
+    logits = (x.astype(jnp.float32) @ params["router_w"]).astype(jnp.float32)  # (B,S,Et)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, k)  # (B,S,k)
+
+    # --- position-in-expert via choice-major cumsum (per sequence) ---------
+    sel_f = jnp.swapaxes(sel, 1, 2).reshape(B, k * S)  # 1st choices first
+    gate_f = jnp.swapaxes(gate, 1, 2).reshape(B, k * S)
+    tok_f = jnp.tile(jnp.arange(S, dtype=jnp.int32), (B, k))
+    onehot = jax.nn.one_hot(sel_f, E, dtype=jnp.int32)  # (B,kS,E); noop -> 0
+    pos_in_e = jnp.sum(jnp.cumsum(onehot, axis=1) * onehot, axis=-1) - 1  # (B,kS)
+    is_real = sel_f < E
+    keep = is_real & (pos_in_e >= 0) & (pos_in_e < C)
+
+    # --- dispatch index (B, E, C) ------------------------------------------
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    e_safe = jnp.where(keep, sel_f, E)
+    p_safe = jnp.where(keep, pos_in_e, C)
+    disp = jnp.full((B, E + 1, C + 1), S, jnp.int32)
+    disp = disp.at[bidx, e_safe, p_safe].set(tok_f)[:, :E, :C]  # sentinel S = pad
+    slot_gate = jnp.zeros((B, E + 1, C + 1), jnp.float32)
+    slot_gate = slot_gate.at[bidx, e_safe, p_safe].set(jnp.where(keep, gate_f, 0.0))[:, :E, :C]
+
+    # --- expert computation (batched over E; shard E over "model") --------
+    xpad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)  # (B,S+1,D)
+    xe = xpad[bidx[:, :, None], disp]  # (B,E,C,D)
+    up = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    if "w_gate" in params:
+        up = act(jnp.einsum("becd,edf->becf", xe, params["w_gate"])) * up
+    else:
+        up = act(up)
+    ye = jnp.einsum("becf,efd->becd", up, params["w_down"])  # (B,E,C,D)
+
+    # --- combine: gated scatter-add back to token order --------------------
+    # combine_dtype=bfloat16 halves the EP-axis all-reduce wire bytes at the
+    # cost of bf16 accumulation across <= top_k addends (see §Perf log).
+    cdt = jnp.dtype(cfg.moe.combine_dtype)
+    ye_g = (ye.astype(jnp.float32) * slot_gate[..., None]).astype(cdt)
+    out = jnp.zeros((B, S + 1, D), cdt)
+    out = out.at[bidx[:, :, None], disp].add(ye_g)[:, :S]
+    out = out.astype(x.dtype)
+
+    # --- aux losses ---------------------------------------------------------
+    lp = logits.reshape(-1, E_total)
+    top1 = jnp.argmax(lp, axis=-1)
+    f_e = jnp.mean(jax.nn.one_hot(top1, E_total, dtype=jnp.float32), axis=0)
+    P_e = jnp.mean(probs.reshape(-1, E_total), axis=0)
+    lb = E_total * jnp.sum(f_e * P_e)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(lp, axis=-1)))
+    dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / jnp.maximum(
+        jnp.sum(is_real.astype(jnp.float32)), 1.0
+    )
+    aux: Aux = {"moe/lb_loss": lb, "moe/z_loss": z, "moe/drop_frac": dropped}
+    if cfg.moe.n_noop_experts > 0:
+        aux["moe/noop_frac"] = jnp.mean((sel >= E).astype(jnp.float32))
+    return out, aux

@@ -1,0 +1,250 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked train/prefill scan and
+O(1)-state decode step.
+
+Recurrence per head h (ngroups=1, B/C shared across heads):
+
+    S_t = exp(dt_t A_h) S_{t-1} + dt_t x_t ⊗ B_t          S: (hd, ds)
+    y_t = S_t C_t + D_h x_t
+
+Chunked SSD (arXiv:2405.21060): split the sequence into chunks of length Q;
+within a chunk the contribution is an attention-like quadratic form
+(M_ij = C_i·B_j · exp(l_i − l_j) · dt_j, j ≤ i with l = cumsum log-decay);
+across chunks a linear scan carries the state. The intra-chunk quadratic is
+the compute hot-spot and has a Pallas kernel (repro.kernels.ssd); this module
+is the pure-jnp reference/production-CPU path.
+
+TP note: projections are kept as separate tensors (w_z/w_x/w_B/w_C/w_dt)
+instead of mamba's fused in_proj so that the d_inner (= heads) dimension
+shards cleanly over the "model" mesh axis; B/C/dt are small and replicated.
+The depthwise conv applies to x/B/C independently, which is exactly
+equivalent to mamba2's conv over the concatenated xBC.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import _dense_init, rmsnorm
+
+Params = Dict[str, jax.Array]
+Aux = Dict[str, jax.Array]
+
+
+def dims(cfg: ModelConfig):
+    D = cfg.d_model
+    d_inner = cfg.ssm.expand * D
+    H = d_inner // cfg.ssm.head_dim
+    ds = cfg.ssm.d_state
+    return D, d_inner, H, ds
+
+
+def init_ssm_block(key, cfg: ModelConfig) -> Params:
+    D, d_inner, H, ds = dims(cfg)
+    W = cfg.ssm.d_conv
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 10)
+    u = jax.random.uniform(ks[0], (H,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "w_z": _dense_init(ks[1], D, (D, d_inner), dtype),
+        "w_x": _dense_init(ks[2], D, (D, d_inner), dtype),
+        "w_B": _dense_init(ks[3], D, (D, ds), dtype),
+        "w_C": _dense_init(ks[4], D, (D, ds), dtype),
+        "w_dt": _dense_init(ks[5], D, (D, H), dtype),
+        "conv_x": _dense_init(ks[6], W, (W, d_inner), dtype),
+        "conv_B": _dense_init(ks[7], W, (W, ds), dtype),
+        "conv_C": _dense_init(ks[8], W, (W, ds), dtype),
+        "conv_bx": jnp.zeros((d_inner,), dtype),
+        "conv_bB": jnp.zeros((ds,), dtype),
+        "conv_bC": jnp.zeros((ds,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "skip_D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "out_proj": _dense_init(ks[9], d_inner, (d_inner, D), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B,S,C); w: (W,C) depthwise causal conv."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(W):
+        out = out + pad[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_step(window: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """window: (B,W,C) — most recent W inputs; returns (B,C)."""
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    return out + b.astype(jnp.float32)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, hd)
+    dt: jax.Array,  # (B, S, H) — post-softplus, >= 0
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, S, ds)
+    Cm: jax.Array,  # (B, S, ds)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, hd, ds)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,hd), final_state (B,H,hd,ds))."""
+    B, S, H, hd = x.shape
+    ds = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} must be divisible by chunk {Q}"
+    N = S // Q
+
+    xc = x.reshape(B, N, Q, H, hd).astype(jnp.float32)
+    dtc = dt.reshape(B, N, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, N, Q, ds).astype(jnp.float32)
+    Cc = Cm.reshape(B, N, Q, ds).astype(jnp.float32)
+
+    loglam = dtc * A  # (B,N,Q,H), <= 0
+    l = jnp.cumsum(loglam, axis=2)  # inclusive cumsum
+    lQ = l[:, :, -1:, :]  # (B,N,1,H)
+
+    # --- intra-chunk quadratic (Pallas kernel target) ----------------------
+    CB = jnp.einsum("bnqs,bnps->bnqp", Cc, Bc)  # (B,N,Q,Q)
+    decay = jnp.exp(l[:, :, :, None, :] - l[:, :, None, :, :])  # (B,N,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask[None, None, :, :, None], CB[..., None] * decay, 0.0)
+    M = M * dtc[:, :, None, :, :]  # multiply dt_j
+    y_intra = jnp.einsum("bnqph,bnphd->bnqhd", M, xc)
+
+    # --- chunk-state increments + cross-chunk scan ------------------------
+    w = jnp.exp(lQ - l) * dtc  # (B,N,Q,H)
+    inc = jnp.einsum("bnqh,bnqhd,bnqs->bnhds", w, xc, Bc)  # (B,N,H,hd,ds)
+    chunk_decay = jnp.exp(lQ[:, :, 0, :])  # (B,N,H)
+
+    s0 = (
+        jnp.zeros((B, H, hd, ds), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def scan_body(s, args):
+        dcy, ic = args  # (B,H), (B,H,hd,ds)
+        s_new = s * dcy[..., None, None] + ic
+        return s_new, s  # emit state *entering* the chunk
+
+    final, states_prev = jax.lax.scan(
+        scan_body,
+        s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(inc, 1, 0)),
+    )
+    states_prev = jnp.moveaxis(states_prev, 0, 1)  # (B,N,H,hd,ds)
+
+    # --- inter-chunk contribution -----------------------------------------
+    y_inter = jnp.einsum("bnqh,bnqs,bnhds->bnqhd", jnp.exp(l), Cc, states_prev)
+    y = (y_intra + y_inter).reshape(B, S, H, hd)
+    return y.astype(x.dtype), final
+
+
+def ssd_step(
+    x: jax.Array,  # (B, H, hd)
+    dt: jax.Array,  # (B, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, ds)
+    Cm: jax.Array,  # (B, ds)
+    state: jax.Array,  # (B, H, hd, ds)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step of the SSD recurrence."""
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    lam = jnp.exp(dt32 * A)  # (B,H)
+    state = state * lam[..., None, None] + jnp.einsum(
+        "bh,bhd,bs->bhds", dt32, x32, Bm.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhds,bs->bhd", state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+def _project(params: Params, x: jax.Array):
+    z = x @ params["w_z"]
+    xs = x @ params["w_x"]
+    Bm = x @ params["w_B"]
+    Cm = x @ params["w_C"]
+    dt_raw = x @ params["w_dt"]
+    return z, xs, Bm, Cm, dt_raw
+
+
+def _post(params: Params, y: jax.Array, z: jax.Array, cfg: ModelConfig) -> jax.Array:
+    g = y * jax.nn.silu(z)
+    g = rmsnorm(params["norm"], g, cfg.norm_eps)
+    return g @ params["out_proj"]
+
+
+def ssm_block(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence Mamba2 block (train/prefill). x: (B,S,D) -> (B,S,D)."""
+    B, S, _ = x.shape
+    D, d_inner, H, ds = dims(cfg)
+    z, xs, Bm, Cm, dt_raw = _project(params, x)
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x"], params["conv_bx"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, params["conv_B"], params["conv_bB"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, params["conv_C"], params["conv_bC"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B, S, H, cfg.ssm.head_dim)
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm.chunk)
+    y = y.astype(jnp.float32) + params["skip_D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    return _post(params, y, z, cfg)
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype=None) -> Params:
+    D, d_inner, H, ds = dims(cfg)
+    W = cfg.ssm.d_conv
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "state": jnp.zeros((batch, H, cfg.ssm.head_dim, ds), jnp.float32),
+        "conv_x": jnp.zeros((batch, W - 1, d_inner), dt),
+        "conv_B": jnp.zeros((batch, W - 1, ds), dt),
+        "conv_C": jnp.zeros((batch, W - 1, ds), dt),
+    }
+
+
+def ssm_cache_specs(batch: int, cfg: ModelConfig) -> Params:
+    D, d_inner, H, ds = dims(cfg)
+    W = cfg.ssm.d_conv
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "state": jax.ShapeDtypeStruct((batch, H, cfg.ssm.head_dim, ds), jnp.float32),
+        "conv_x": jax.ShapeDtypeStruct((batch, W - 1, d_inner), dt),
+        "conv_B": jax.ShapeDtypeStruct((batch, W - 1, ds), dt),
+        "conv_C": jax.ShapeDtypeStruct((batch, W - 1, ds), dt),
+    }
+
+
+def ssm_block_decode(
+    params: Params, x: jax.Array, cache: Params, cfg: ModelConfig
+) -> Tuple[jax.Array, Params]:
+    """One-token decode. x: (B,1,D)."""
+    B = x.shape[0]
+    D, d_inner, H, ds = dims(cfg)
+    z, xs, Bm, Cm, dt_raw = _project(params, x)  # (B,1,*)
+    win_x = jnp.concatenate([cache["conv_x"], xs], axis=1)
+    win_B = jnp.concatenate([cache["conv_B"], Bm], axis=1)
+    win_C = jnp.concatenate([cache["conv_C"], Cm], axis=1)
+    xs_t = jax.nn.silu(_conv_step(win_x, params["conv_x"], params["conv_bx"])).astype(x.dtype)
+    Bm_t = jax.nn.silu(_conv_step(win_B, params["conv_B"], params["conv_bB"])).astype(jnp.float32)
+    Cm_t = jax.nn.silu(_conv_step(win_C, params["conv_C"], params["conv_bC"])).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    xh = xs_t.reshape(B, H, cfg.ssm.head_dim)
+    y, state = ssd_step(xh, dt, A, Bm_t, Cm_t, cache["state"])
+    y = y.astype(jnp.float32) + params["skip_D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    out = _post(params, y, z, cfg)
+    new_cache = {
+        "state": state,
+        "conv_x": win_x[:, 1:, :],
+        "conv_B": win_B[:, 1:, :],
+        "conv_C": win_C[:, 1:, :],
+    }
+    return out, new_cache

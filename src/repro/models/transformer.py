@@ -1,0 +1,337 @@
+"""Decoder-only LM assembly (dense / MoE / VLM backbones) with MoD routing.
+
+Layers are grouped for `jax.lax.scan` so HLO size and compile time are O(1)
+in depth (essential for the 512-chip dry-runs):
+
+- MoD off:            one group per layer: {"full": block}
+- MoD every=2 (paper): L//2 groups of {"full": block, "mod": routed block}
+- MoD every=1:        one group per layer: {"mod": routed block}
+
+Caches mirror the group structure and are scan-stacked along the group axis.
+MoD block KV caches are capacity-sized (``ratio * ctx``) — the paper's KV
+memory saving.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import mod_block as MODB
+from repro.core import router as R
+from repro.models import attention as A
+from repro.models import blocks as BLK
+from repro.distributed.sharding import constrain_batch
+from repro.utils import scan_or_loop
+from repro.models.layers import (
+    cross_entropy,
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    rmsnorm,
+    unembed,
+)
+
+Params = Dict[str, Any]
+Aux = Dict[str, jax.Array]
+
+
+def _prefix(tag: str, aux: Aux) -> Aux:
+    return {f"{tag}/{k}": v for k, v in aux.items()}
+
+
+def group_structure(cfg: ModelConfig) -> Tuple[int, bool, bool, int]:
+    """(n_groups, has_full, has_mod, n_tail_full)."""
+    L = cfg.n_layers
+    if not cfg.mod.enabled:
+        return L, True, False, 0
+    if cfg.mod.every <= 1:
+        return L, False, True, 0
+    assert cfg.mod.every == 2, "mod.every must be 1 or 2 (paper settings)"
+    return L // 2, True, True, L % 2
+
+
+def _use_moe(cfg: ModelConfig) -> bool:
+    return cfg.family == "moe" or cfg.moe.enabled
+
+
+def init_mod_wrap(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "block": BLK.init_block(ks[0], cfg, _use_moe(cfg)),
+        "router": R.init_router(ks[1], cfg),
+    }
+    if cfg.mod.sampling == "predictor":
+        p["predictor"] = R.init_predictor(ks[2], cfg)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    n_groups, has_full, has_mod, n_tail = group_structure(cfg)
+    ks = iter(jax.random.split(key, 8))
+    params: Params = {
+        "embed": init_embedding(next(ks), cfg),
+        "final_norm": init_rmsnorm(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+    groups: Params = {}
+    if has_full:
+        keys = jax.random.split(next(ks), n_groups)
+        groups["full"] = jax.vmap(lambda k: BLK.init_block(k, cfg, _use_moe(cfg)))(keys)
+    if has_mod:
+        keys = jax.random.split(next(ks), n_groups)
+        groups["mod"] = jax.vmap(lambda k: init_mod_wrap(k, cfg))(keys)
+    params["groups"] = groups
+    if n_tail:
+        params["tail"] = BLK.init_block(next(ks), cfg, _use_moe(cfg))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Training / teacher-forced forward
+# ---------------------------------------------------------------------------
+
+
+def _default_positions(x: jax.Array) -> jax.Array:
+    B, S = x.shape[0], x.shape[1]
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    rng: Optional[jax.Array] = None,
+    last_only: bool = False,
+) -> Tuple[jax.Array, Aux]:
+    """Full-sequence forward. Returns (logits (B,S,V), aux).
+
+    ``last_only`` slices to the final position *before* the unembedding so
+    serving prefill never materializes (B, S, V) logits."""
+    x = embed(params["embed"], tokens) if embeds is None else embeds
+    x = constrain_batch(x)
+    if positions is None:
+        positions = _default_positions(x)
+    key0 = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def body(carry, gp):
+        h, key = carry
+        key, sub = jax.random.split(key)
+        aux: Aux = {}
+        if "full" in gp:
+            h, a = BLK.block_apply(gp["full"], h, positions, cfg)
+            aux.update(_prefix("full", a))
+        if "mod" in gp:
+            def delta_fn(xs, ps):
+                return BLK.block_delta(gp["mod"]["block"], xs, ps, cfg)
+
+            h, a = MODB.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
+            aux.update(a)
+        return (constrain_batch(h), key), aux
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "selective":
+        # save matmul outputs, recompute elementwise: cuts the backward's
+        # full forward recompute (~fwd FLOPs) at the cost of storing the
+        # per-layer dot outputs
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    (x, _), aux_stack = scan_or_loop(body, (x, key0), params["groups"], unroll=cfg.unroll_layers)
+    aux = jax.tree.map(jnp.mean, aux_stack)
+    if "tail" in params:
+        x, a = BLK.block_apply(params["tail"], x, positions, cfg)
+        aux.update(_prefix("tail", a))
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, aux
+
+
+def lm_loss(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    rng: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Aux]:
+    """CE + weighted MoD/MoE auxiliary losses. batch: tokens/embeds, labels,
+    optional loss_mask / positions."""
+    logits, aux = forward(
+        params,
+        cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+        rng=rng,
+    )
+    ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    loss = ce
+    if cfg.mod.enabled:
+        if "mod/router_bce" in aux:
+            loss = loss + cfg.mod.aux_loss_weight * aux["mod/router_bce"]
+        if "mod/predictor_bce" in aux:
+            # stop-grad inputs: trains only the predictor head
+            loss = loss + aux["mod/predictor_bce"]
+    for k, v in aux.items():
+        if k.endswith("moe/lb_loss"):
+            loss = loss + cfg.moe.load_balance_weight * v
+        elif k.endswith("moe/z_loss"):
+            loss = loss + cfg.moe.router_z_weight * v
+    aux["ce"] = ce
+    aux["loss"] = loss
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg: ModelConfig, batch: int, ctx: int, specs: bool = False) -> Params:
+    """Scan-stacked KV caches matching the group structure."""
+    n_groups, has_full, has_mod, n_tail = group_structure(cfg)
+    mk = A.kv_cache_specs if specs else A.init_kv_cache
+
+    def stack(tree, n):
+        if specs:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree
+            )
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), tree)
+
+    caches: Params = {"groups": {}}
+    if has_full:
+        caches["groups"]["full"] = stack(mk(batch, ctx, cfg), n_groups)
+    if has_mod:
+        c_mod = cfg.mod.capacity(ctx)
+        caches["groups"]["mod"] = stack(mk(batch, c_mod, cfg), n_groups)
+    if n_tail:
+        caches["tail"] = mk(batch, ctx, cfg)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def _mod_prefill_group(gp, h, positions, cache, cfg):
+    logits = R.router_logits(gp["router"], h)
+    k = cfg.mod.capacity(h.shape[1])
+    idx, gate_logits, topk_mask = R.mod_select(logits, k, cfg.mod)
+    gate = R.apply_gate(gate_logits, cfg.mod)
+    h_sub = jnp.take_along_axis(h, idx[..., None], axis=1)
+    pos_sub = MODB._gather_positions(positions, idx)
+    delta, cache, inner = BLK.block_prefill(
+        gp["block"], h_sub, pos_sub, cache, cfg, delta_only=True
+    )
+    upd = (gate[..., None] * delta.astype(jnp.float32)).astype(h.dtype)
+    h = h.at[jnp.arange(h.shape[0])[:, None], idx].add(upd)
+    aux = dict(inner)
+    aux["mod/router_bce"] = R.router_aux_loss(logits, topk_mask)
+    return h, cache, aux, (logits, topk_mask)
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    ctx: Optional[int] = None,
+) -> Tuple[jax.Array, Params]:
+    """Teacher-forced pass that also populates caches. Returns (logits, caches)."""
+    x = embed(params["embed"], tokens) if embeds is None else embeds
+    x = constrain_batch(x)
+    B, S = x.shape[0], x.shape[1]
+    ctx = ctx or cfg.max_seq_len
+    if positions is None:
+        positions = _default_positions(x)
+    caches = make_cache(cfg, B, ctx)
+
+    def body(carry, xs):
+        h = carry
+        gp, gc = xs
+        new_c = {}
+        if "full" in gp:
+            h, c, _ = BLK.block_prefill(gp["full"], h, positions, gc["full"], cfg)
+            new_c["full"] = c
+        if "mod" in gp:
+            h, c, _, _ = _mod_prefill_group(gp["mod"], h, positions, gc["mod"], cfg)
+            new_c["mod"] = c
+        return constrain_batch(h), new_c
+
+    x, new_caches = scan_or_loop(body, x, (params["groups"], caches["groups"]), unroll=cfg.unroll_layers)
+    out_caches: Params = {"groups": new_caches}
+    if "tail" in params:
+        x, c, _ = BLK.block_prefill(params["tail"], x, positions, caches["tail"], cfg)
+        out_caches["tail"] = c
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, out_caches
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _mod_decode_group(gp, h, positions, cache, cfg):
+    """Batch-capacity MoD decode: top ceil(ratio*B) sequences route through."""
+    idx, gate, routed = MODB.decode_route_select(gp, h, cfg)
+    h_sub = jnp.take(h, idx, axis=0)
+    pos_sub = (
+        jnp.take(positions, idx, axis=1) if positions.ndim == 3 else jnp.take(positions, idx, axis=0)
+    )
+    cache_sub = jax.tree.map(lambda c: jnp.take(c, idx, axis=0), cache)
+    delta, cache_sub, _ = BLK.block_decode(
+        gp["block"], h_sub, pos_sub, cache_sub, cfg, delta_only=True
+    )
+    upd = (gate[:, None, None] * delta.astype(jnp.float32)).astype(h.dtype)
+    h = h.at[idx].add(upd)
+    cache = jax.tree.map(lambda c, cs: c.at[idx].set(cs), cache, cache_sub)
+    return h, cache, {"mod/decode_routed_frac": jnp.mean(routed.astype(jnp.float32))}
+
+
+def decode_step(
+    params: Params,
+    caches: Params,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # (B,) int32 — current absolute position
+) -> Tuple[jax.Array, Params, Aux]:
+    """One autoregressive step. Returns (logits (B,V), caches, aux)."""
+    x = constrain_batch(embed(params["embed"], token))  # (B,1,D)
+    if cfg.attn.pos_emb == "mrope":
+        positions = jnp.broadcast_to(pos[None, :, None], (3,) + pos.shape + (1,))
+    else:
+        positions = pos[:, None]
+
+    def body(h, xs):
+        gp, gc = xs
+        new_c = {}
+        aux: Aux = {}
+        if "full" in gp:
+            h, c, _ = BLK.block_decode(gp["full"], h, positions, gc["full"], cfg)
+            new_c["full"] = c
+        if "mod" in gp:
+            h, c, a = _mod_decode_group(gp["mod"], h, positions, gc["mod"], cfg)
+            new_c["mod"] = c
+            aux.update(a)
+        return constrain_batch(h), (new_c, aux)
+
+    x, (new_caches, aux_stack) = scan_or_loop(body, x, (params["groups"], caches["groups"]), unroll=cfg.unroll_layers)
+    out_caches: Params = {"groups": new_caches}
+    aux = jax.tree.map(jnp.mean, aux_stack)
+    if "tail" in params:
+        x, c, _ = BLK.block_decode(params["tail"], x, positions, caches["tail"], cfg)
+        out_caches["tail"] = c
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, out_caches, aux

@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+from repro.optim.adamw import adamw_init, adamw_update, OptState  # noqa: F401
+from repro.optim.schedule import cosine_schedule  # noqa: F401
+from repro.optim.clip import clip_by_global_norm  # noqa: F401

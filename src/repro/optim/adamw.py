@@ -1,0 +1,64 @@
+"""Decoupled AdamW on raw pytrees (no optax dependency).
+
+Moments are kept in f32 regardless of param dtype (bf16 training needs f32
+state); the update is computed in f32 and cast back. Weight decay is
+decoupled and skipped for 1-D params (norm scales, biases, routers) per
+standard practice.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimConfig
+
+OptState = Dict[str, Any]
+
+
+def adamw_init(params: Any) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decay_mask(p: jax.Array) -> jnp.float32:
+    return jnp.float32(1.0 if p.ndim >= 2 else 0.0)
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    opt: OptState,
+    cfg: OptimConfig,
+    lr: jax.Array,
+) -> Tuple[Any, OptState]:
+    count = opt["count"] + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * g32
+        v_new = b2 * v + (1.0 - b2) * jnp.square(g32)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        step = step + cfg.weight_decay * _decay_mask(p) * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,3 @@
+"""Training and serving loops."""
+from repro.train.loop import Trainer, make_train_state, make_train_step  # noqa: F401
+from repro.train.serve import make_serve_step  # noqa: F401

@@ -1,0 +1,68 @@
+"""Serving: prefill + batched decode with MoD batch-capacity routing.
+
+``make_serve_step`` returns the jit-able one-token step used by the decode
+dry-run cells and the sampling example. MoD blocks decide causally (via the
+trained predictor or the router sigmoid) and only the top ``ratio*B``
+scoring sequences run the block — static shapes, real FLOP savings
+(DESIGN.md §3, decode-time batched routing).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import api
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, caches, token, pos):
+        logits, caches, aux = api.model_decode(params, caches, cfg, token, pos)
+        return logits, caches, aux
+
+    return serve_step
+
+
+def greedy_generate(
+    params: Any,
+    cfg: ModelConfig,
+    prompt: jax.Array,  # (B, S0)
+    n_tokens: int,
+    ctx: Optional[int] = None,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Autoregressive generation (prefill + decode loop)."""
+    B, S0 = prompt.shape
+    ctx = ctx or (S0 + n_tokens)
+    if cfg.family in ("dense", "moe", "vlm"):
+        _, caches = api.model_prefill(params, cfg, {"tokens": prompt}, ctx)
+        last = prompt[:, -1:]
+        pos0 = S0 - 1
+        # prefill wrote all S0 tokens; re-decode the last token's logits
+    else:
+        # SSM/hybrid/encdec: build cache by stepping through the prompt
+        caches = api.make_caches(cfg, B, ctx)
+        for t in range(S0 - 1):
+            _, caches, _ = api.model_decode(
+                params, caches, cfg, prompt[:, t : t + 1], jnp.full((B,), t, jnp.int32)
+            )
+        last = prompt[:, -1:]
+        pos0 = S0 - 1
+
+    step = jax.jit(make_serve_step(cfg))
+    out = [prompt]
+    tok = last
+    key = rng if rng is not None else jax.random.PRNGKey(0)
+    for i in range(n_tokens):
+        pos = jnp.full((B,), pos0 + i, jnp.int32)
+        logits, caches, _ = step(params, caches, tok, pos)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,92 @@
+"""Small shared utilities: pytree helpers, PRNG splitting, param counting."""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def key_iter(seed_or_key) -> Iterator[jax.Array]:
+    """Infinite iterator of fresh PRNG keys."""
+    key = jax.random.PRNGKey(seed_or_key) if isinstance(seed_or_key, int) else seed_or_key
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def tree_size(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def flatten_dict(d: Dict[str, Any], prefix: str = "") -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in d.items():
+        path = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_dict(v, path))
+        else:
+            out[path] = v
+    return out
+
+
+def unflatten_dict(flat: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def has_nan(tree: Any) -> jax.Array:
+    leaves = [jnp.any(~jnp.isfinite(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.any(jnp.stack(leaves))
+
+
+def pretty_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024:
+            return f"{n:.2f} {unit}"
+        n /= 1024
+    return f"{n:.2f} PiB"
+
+
+def dump_json(obj: Any, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, default=float)
+
+
+def scan_or_loop(body, carry, xs_tree, unroll: bool = False):
+    """lax.scan, or an unrolled python loop over the leading axis.
+
+    The unrolled form exists for the roofline probes: XLA's cost_analysis
+    counts a while-loop body ONCE regardless of trip count, so per-layer
+    FLOPs/bytes are only visible in an unrolled module. Semantics match
+    lax.scan (stacked ys).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if not unroll:
+        return jax.lax.scan(body, carry, xs_tree)
+    n = jax.tree.leaves(xs_tree)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs_tree))
+        ys.append(y)
+    ys_stacked = jax.tree.map(lambda *z: jnp.stack(z), *ys)
+    return carry, ys_stacked

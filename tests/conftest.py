@@ -1,0 +1,11 @@
+import os
+
+# Tests must see exactly ONE device — the 512-device fan-out belongs only
+# to launch/dryrun.py (per the dry-run contract). Guard against pollution.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
+    "tests must run without the dry-run's 512-device XLA flag"
+)

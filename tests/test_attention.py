@@ -1,0 +1,127 @@
+"""Attention: blocked-vs-dense equivalence, RoPE properties, KV caches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as A
+from repro.models.layers import apply_mrope, apply_rope
+from tests.helpers import tiny_cfg
+
+
+def _qkv(key, B, S, nq, nkv, hd):
+    ks = jax.random.split(key, 3)
+    return (
+        jax.random.normal(ks[0], (B, S, nq, hd)),
+        jax.random.normal(ks[1], (B, S, nkv, hd)),
+        jax.random.normal(ks[2], (B, S, nkv, hd)),
+    )
+
+
+@pytest.mark.parametrize("S,nq,nkv,hd", [(96, 4, 2, 16), (128, 4, 1, 32), (80, 2, 2, 8)])
+def test_blocked_matches_dense(S, nq, nkv, hd):
+    cfg = tiny_cfg()
+    cfg = dataclasses.replace(cfg, attn=dataclasses.replace(cfg.attn, n_heads=nq, n_kv_heads=nkv, head_dim=hd))
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, S, nq, nkv, hd)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (2, S))
+    old = A.BLOCK_Q, A.BLOCK_KV
+    A.BLOCK_Q, A.BLOCK_KV = 32, 16
+    try:
+        out = A.attend_blocked(q, k, v, pos, pos, cfg)
+    finally:
+        A.BLOCK_Q, A.BLOCK_KV = old
+    ref = A.attend(q, k, v, A.make_mask(pos, pos, True), cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_blocked_gradients_match_dense():
+    cfg = tiny_cfg()
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 64, 4, 2, 16)
+    pos = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32)[None], (2, 64))
+    mask = A.make_mask(pos, pos, True)
+    old = A.BLOCK_Q, A.BLOCK_KV
+    A.BLOCK_Q, A.BLOCK_KV = 16, 16
+    try:
+        gb = jax.grad(lambda q, k, v: jnp.sum(jnp.sin(A.attend_blocked(q, k, v, pos, pos, cfg))), (0, 1, 2))(q, k, v)
+    finally:
+        A.BLOCK_Q, A.BLOCK_KV = old
+    gd = jax.grad(lambda q, k, v: jnp.sum(jnp.sin(A.attend(q, k, v, mask, cfg))), (0, 1, 2))(q, k, v)
+    for a, b in zip(gb, gd):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_rope_relative_property():
+    """q·k after RoPE depends only on relative distance."""
+    hd = 32
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, hd))
+
+    def score(pq, pk):
+        qr = apply_rope(q, jnp.asarray([[pq]], jnp.int32), 10000.0)
+        kr = apply_rope(k, jnp.asarray([[pk]], jnp.int32), 10000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert score(10, 7) == pytest.approx(score(110, 107), rel=1e-4)
+    assert score(10, 7) != pytest.approx(score(10, 4), rel=1e-3)
+
+
+def test_mrope_reduces_to_rope_when_streams_equal():
+    hd, B, S = 32, 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    pos3 = jnp.broadcast_to(pos[None], (3, B, S))
+    a = apply_rope(x, pos, 10000.0)
+    b = apply_mrope(x, pos3, 10000.0, (4, 6, 6))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_kv_cache_ring_write_and_mask():
+    cfg = tiny_cfg()
+    B, C = 2, 8
+    cache = A.init_kv_cache(B, C, cfg)
+    nkv, hd = cfg.attn.n_kv_heads, cfg.head_dim
+    k = jnp.ones((B, 3, nkv, hd))
+    pos = jnp.asarray([[0, 1, 2], [0, 1, 2]], jnp.int32)
+    cache = A.cache_write(cache, k, k, pos)
+    assert cache["cursor"].tolist() == [3, 3]
+    assert np.asarray(cache["pos"])[:, :3].tolist() == [[0, 1, 2]] * 2
+    assert (np.asarray(cache["pos"])[:, 3:] == -1).all()
+    # masked write: second entry skipped
+    wm = jnp.asarray([[True, False, True]])
+    cache2 = A.init_kv_cache(1, C, cfg)
+    cache2 = A.cache_write(cache2, k[:1], k[:1], pos[:1], wm)
+    assert cache2["cursor"].tolist() == [2]
+    assert np.asarray(cache2["pos"])[0, :2].tolist() == [0, 2]
+    # ring overwrite beyond capacity
+    cache3 = A.init_kv_cache(1, 4, cfg)
+    p = jnp.arange(6, dtype=jnp.int32)[None]
+    cache3 = A.cache_write(cache3, jnp.ones((1, 6, nkv, hd)), jnp.ones((1, 6, nkv, hd)), p)
+    assert cache3["cursor"].tolist() == [6]
+    assert sorted(np.asarray(cache3["pos"])[0].tolist()) == [2, 3, 4, 5]
+
+
+def test_decode_matches_full_forward_per_layer():
+    cfg = tiny_cfg()
+    B, S = 2, 12
+    key = jax.random.PRNGKey(0)
+    params = A.init_attention(key, cfg)
+    x = jax.random.normal(key, (B, S, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    full = A.self_attention(params, x, pos, cfg)
+    cache = A.init_kv_cache(B, S, cfg)
+    outs = []
+    for t in range(S):
+        o, cache = A.decode_attention(params, x[:, t : t + 1], pos[:, t : t + 1], cache, cfg)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-5)
+
+
+def test_sliding_window_mask():
+    pos = jnp.arange(6, dtype=jnp.int32)[None]
+    m = A.make_mask(pos, pos, causal=True, window=2)
+    m = np.asarray(m)[0]
+    assert m[5, 5] and m[5, 4] and not m[5, 3]

@@ -1,0 +1,61 @@
+"""Data substrate: determinism, sharding, packing properties."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.data.packing import pack_documents
+from repro.data.synthetic import SyntheticLM
+
+
+def test_synthetic_determinism():
+    a = SyntheticLM(256, 32, seed=7).batch(3, 4)
+    b = SyntheticLM(256, 32, seed=7).batch(3, 4)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    c = SyntheticLM(256, 32, seed=8).batch(3, 4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    b = SyntheticLM(256, 32, seed=0).batch(0, 2)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_shards_partition_global_batch():
+    src = SyntheticLM(256, 16, seed=0)
+    full = src.batch(5, 8)
+    parts = [src.batch(5, 8, shard=i, n_shards=4) for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate([p["tokens"] for p in parts]), full["tokens"])
+
+
+def test_structure_is_learnable_signal():
+    """The copy-overlay makes successor transitions predictable — verify the
+    deterministic transition appears at the configured rate."""
+    src = SyntheticLM(512, 4096, seed=0, p_copy=0.5)
+    seq = src.sequence(0)
+    hits = (src.successor[seq[:-1]] == seq[1:]).mean()
+    assert 0.4 < hits < 0.65
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    docs=st.lists(st.integers(1, 40), min_size=1, max_size=8),
+    seq_len=st.integers(4, 32),
+)
+def test_packing_preserves_all_tokens(docs, seq_len):
+    rng = np.random.default_rng(0)
+    doc_arrays = [rng.integers(1, 100, size=n) for n in docs]
+    rows = list(pack_documents(doc_arrays, seq_len))
+    # every document token appears in the packed stream exactly once
+    packed = np.concatenate([np.concatenate([r["tokens"], r["labels"][-1:]]) for r in rows])
+    n_real = sum(len(d) for d in doc_arrays)
+    flat = np.concatenate(doc_arrays)
+    # token+final-label reconstruction contains all doc tokens in order
+    seg = np.concatenate([np.concatenate([r["segment_ids"], r["segment_ids"][-1:]]) for r in rows])
+    np.testing.assert_array_equal(packed[seg > 0][:n_real], flat)
+    for r in rows:
+        assert r["tokens"].shape == (seq_len,)
+        assert r["loss_mask"].shape == (seq_len,)
+        # loss is never computed across document boundaries
+        cross = (r["segment_ids"][1:] != r["segment_ids"][:-1])
+        assert (r["loss_mask"][:-1][cross[: seq_len - 1]] == 0).all()

@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd import ssd_intra_chunk
+from repro.kernels.swiglu import swiglu
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Skv,nq,nkv,hd,bq,bkv,causal",
+    [
+        (2, 128, 128, 4, 2, 32, 64, 64, True),
+        (1, 256, 256, 2, 1, 16, 128, 64, True),
+        (2, 128, 64, 4, 4, 32, 64, 64, False),  # cross-attention shape
+        (1, 64, 64, 8, 2, 64, 32, 32, True),
+    ],
+)
+def test_flash_attention_sweep(B, Sq, Skv, nq, nkv, hd, bq, bkv, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, nq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, nkv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, nkv, hd)).astype(dtype)
+    qp = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
+    out = flash_attention(q, k, v, qp, kp, causal=causal, block_q=bq, block_kv=bkv, interpret=True)
+    want = ref.attention_ref(q, k, v, qp, kp, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=ATOL[dtype]
+    )
+
+
+def test_flash_attention_mod_positions():
+    """Non-contiguous sorted positions (MoD gathered sub-sequence)."""
+    B, S, nq, nkv, hd = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, S, nq, hd))
+    k = jax.random.normal(ks[1], (B, S, nkv, hd))
+    v = jax.random.normal(ks[2], (B, S, nkv, hd))
+    pos = jnp.sort(
+        jnp.stack(
+            [jax.random.choice(jax.random.fold_in(ks[3], b), 500, (S,), replace=False) for b in range(B)]
+        ),
+        axis=1,
+    ).astype(jnp.int32)
+    out = flash_attention(q, k, v, pos, pos, causal=True, block_q=32, block_kv=32, interpret=True)
+    want = ref.attention_ref(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_padding_positions():
+    """pos = -1 entries (padding / empty cache slots) are masked out."""
+    B, S, nq, nkv, hd = 1, 64, 2, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, nq, hd))
+    k = jax.random.normal(ks[1], (B, S, nkv, hd))
+    v = jax.random.normal(ks[2], (B, S, nkv, hd))
+    pos = jnp.where(jnp.arange(S) < 40, jnp.arange(S), -1).astype(jnp.int32)[None]
+    out = flash_attention(q, k, v, pos, pos, causal=True, block_q=32, block_kv=32, interpret=True)
+    want = ref.attention_ref(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,NC,Q,hd,ds", [(2, 3, 4, 32, 16, 8), (1, 2, 2, 64, 32, 16)])
+def test_ssd_intra_chunk_sweep(B, H, NC, Q, hd, ds, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, H, NC, Q, hd)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H, NC, Q))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    loglam = (dt * A[None, :, None, None]).astype(jnp.float32)
+    Bm = jax.random.normal(ks[3], (B, NC, Q, ds)).astype(dtype)
+    Cm = jax.random.normal(ks[4], (B, NC, Q, ds)).astype(dtype)
+    y, inc = ssd_intra_chunk(x, loglam, dt, Bm, Cm, interpret=True)
+    for b in range(B):
+        for h in range(H):
+            for c in range(NC):
+                yr, incr = ref.ssd_chunk_ref(x[b, h, c], loglam[b, h, c], dt[b, h, c], Bm[b, c], Cm[b, c])
+                atol = 2e-4 if dtype == jnp.float32 else 5e-2
+                np.testing.assert_allclose(np.asarray(y[b, h, c]), np.asarray(yr), atol=atol)
+                np.testing.assert_allclose(np.asarray(inc[b, h, c]), np.asarray(incr), atol=atol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,D,F,bm,bf", [(64, 32, 128, 32, 64), (128, 64, 64, 64, 64)])
+def test_swiglu_sweep(M, D, F, bm, bf, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = (jax.random.normal(ks[0], (M, D)) * 0.5).astype(dtype)
+    wg = (jax.random.normal(ks[1], (D, F)) * 0.2).astype(dtype)
+    wu = (jax.random.normal(ks[2], (D, F)) * 0.2).astype(dtype)
+    wd = (jax.random.normal(ks[3], (F, D)) * 0.2).astype(dtype)
+    out = swiglu(x, wg, wu, wd, block_m=bm, block_f=bf, interpret=True)
+    want = ref.swiglu_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=2e-5 if dtype == jnp.float32 else 5e-2,
+    )
+
+
+def test_flash_attention_matches_model_attend():
+    """Kernel agrees with the model layer's dense attend (same semantics)."""
+    from repro.models import attention as MA
+    from tests.helpers import tiny_cfg
+
+    cfg = tiny_cfg()
+    B, S = 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, 4, 16))
+    k = jax.random.normal(ks[1], (B, S, 2, 16))
+    v = jax.random.normal(ks[2], (B, S, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    out = flash_attention(q, k, v, pos, pos, causal=True, block_q=32, block_kv=32, interpret=True)
+    want = MA.attend(q, k, v, MA.make_mask(pos, pos, True), cfg).reshape(B, S, 4, 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)

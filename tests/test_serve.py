@@ -1,0 +1,77 @@
+"""Serving: prefill/decode consistency, MoD caches, generation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MoDConfig
+from repro.models import api
+from repro.models import transformer as T
+from repro.train.serve import greedy_generate
+from tests.helpers import tiny_cfg
+
+
+def test_vanilla_prefill_decode_matches_forward():
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    B, S = 2, 24
+    key = jax.random.PRNGKey(0)
+    params = api.init_model(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full, _ = T.forward(params, cfg, tokens=toks)
+    _, caches = T.prefill(params, cfg, tokens=toks[:, : S - 1], ctx=S)
+    logits, caches, _ = T.decode_step(
+        params, caches, cfg, toks[:, S - 1 : S], jnp.full((B,), S - 1, jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, -1]), atol=2e-4)
+
+
+def test_mod_prefill_writes_capacity_cache():
+    cfg = tiny_cfg()
+    B, S = 2, 16
+    key = jax.random.PRNGKey(0)
+    params = api.init_model(key, cfg)
+    _, caches = T.prefill(params, cfg, tokens=jax.random.randint(key, (B, S), 0, cfg.vocab), ctx=S)
+    mod_cache = caches["groups"]["mod"]
+    k_cap = cfg.mod.capacity(S)
+    # MoD cache is capacity-sized (the paper's KV saving) and exactly the
+    # routed tokens were written
+    assert mod_cache["k"].shape[2] == k_cap
+    assert np.asarray(mod_cache["cursor"]).tolist() == [[k_cap] * B] * mod_cache["cursor"].shape[0]
+    full_cache = caches["groups"]["full"]
+    assert np.asarray(full_cache["cursor"]).tolist() == [[S] * B] * full_cache["cursor"].shape[0]
+
+
+def test_mod_decode_routes_capacity_fraction_of_batch():
+    cfg = tiny_cfg()
+    B = 8
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    caches = api.make_caches(cfg, B, 32)
+    _, caches, aux = api.model_decode(
+        params, caches, cfg, jnp.zeros((B, 1), jnp.int32), jnp.zeros((B,), jnp.int32)
+    )
+    kb = max(1, round(cfg.mod.capacity_ratio * B))
+    assert float(aux["mod/decode_routed_frac"]) == pytest.approx(kb / B)
+    # only routed sequences wrote into the mod cache
+    cursors = np.asarray(caches["groups"]["mod"]["cursor"])
+    assert (cursors.sum(axis=-1) == kb).all()
+
+
+def test_greedy_generate_dense_and_mod():
+    for mod in (False, True):
+        cfg = tiny_cfg(mod=MoDConfig(enabled=mod, capacity_ratio=0.25, round_to=1))
+        params = api.init_model(jax.random.PRNGKey(0), cfg)
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        out = greedy_generate(params, cfg, prompt, n_tokens=6, ctx=16)
+        assert out.shape == (1, 10)
+        assert (np.asarray(out) >= 0).all() and (np.asarray(out) < cfg.vocab).all()
+
+
+def test_generation_deterministic_greedy():
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[5, 6, 7]], jnp.int32)
+    a = greedy_generate(params, cfg, prompt, n_tokens=5, ctx=16)
+    b = greedy_generate(params, cfg, prompt, n_tokens=5, ctx=16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
