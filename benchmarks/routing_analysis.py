@@ -6,9 +6,14 @@ Checks the paper's two observations:
     weights land above 0.5 (paper histogram, right panel);
   - routing decisions are token-dependent (some tokens engage many blocks,
     others none — we report the across-token variance of blocks-engaged).
+
+Also measures the routed-dispatch cost of the two `core/routing.py`
+backends ("xla" vs "pallas" fused gather/scatter) so the kernel's benefit
+is a number in the log, not an assertion.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List
 
 import jax
@@ -16,27 +21,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import tiny_config, train_bench
-from repro.core import router as R
-from repro.models import api
+from repro.config import with_mod_backend
+from repro.core import routing as ROUT
 
 
-def run(steps: int = 150) -> Dict[str, float]:
-    cfg = tiny_config(mod=True)
+def run(steps: int = 150, backend: str = "xla") -> Dict[str, float]:
+    cfg = with_mod_backend(tiny_config(mod=True), backend)
     r = train_bench(cfg, steps=steps)
     state, data = r["_state"], r["_data"]
     params = state["params"]
 
     batch = {k: jnp.asarray(v) for k, v in data.batch(20_000, 8).items()}
 
-    # per-block router stats on held-out data
-    x = None
-    logits_all = []
-    masks = []
-
     def collect(params, tokens):
-        from repro.models.layers import embed, rmsnorm
+        from repro.models.layers import embed
         from repro.models import blocks as BLK
-        from repro.core import mod_block as MODB
 
         h = embed(params["embed"], tokens)
         pos = jnp.broadcast_to(jnp.arange(h.shape[1], dtype=jnp.int32)[None], h.shape[:2])
@@ -46,15 +45,13 @@ def run(steps: int = 150) -> Dict[str, float]:
             gf = jax.tree.map(lambda a: a[i], params["groups"]["full"])
             gm = jax.tree.map(lambda a: a[i], params["groups"]["mod"])
             h, _ = BLK.block_apply(gf, h, pos, cfg)
-            lg = R.router_logits(gm["router"], h)
-            k = cfg.mod.capacity(h.shape[1])
-            idx, gl, mask = R.mod_select(lg, k, cfg.mod)
-            outs.append((lg, mask))
+            decision = ROUT.decide_tokens(gm, h, cfg)
+            outs.append((decision.logits, decision.mask))
 
             def dfn(xs, ps):
                 return BLK.block_delta(gm["block"], xs, ps, cfg)
 
-            h, _ = MODB.apply_mod(gm, h, pos, dfn, cfg)
+            h, _ = ROUT.execute_routed(decision, h, dfn, cfg, pos)
         return outs
 
     outs = jax.jit(collect)(params, batch["tokens"])
@@ -73,12 +70,60 @@ def run(steps: int = 150) -> Dict[str, float]:
     }
 
 
+def dispatch_bench(
+    B: int = 4,
+    S: int = 1024,
+    D: int = 512,
+    ratio: float = 0.125,
+    iters: int = 20,
+    dtype=jnp.float32,
+) -> Dict[str, float]:
+    """Wall-clock of one gather + gated scatter-add round trip per backend.
+
+    Measures the dispatch/combine halves of `execute_routed` in isolation
+    (identity block) so the xla-vs-pallas comparison is not washed out by
+    block FLOPs. Note: on this CPU container the pallas kernels run in
+    interpret mode — the number that matters for the roofline is the TPU
+    one; this still catches regressions and orders of magnitude.
+    """
+    k = max(1, int(round(ratio * S)))
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (B, S, D)).astype(dtype)
+    logits = jax.random.normal(ks[1], (B, S))
+    _, idx = jax.lax.top_k(logits, k)
+    idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+    gate = jax.random.normal(ks[2], (B, k))
+
+    def round_trip(backend):
+        def f(x):
+            sub = ROUT._gather_tokens(x, idx, backend)
+            return ROUT._scatter_add_tokens(x, idx, sub, gate, backend)
+
+        return jax.jit(f)
+
+    out: Dict[str, float] = {}
+    for backend in ("xla", "pallas"):
+        f = round_trip(backend)
+        jax.block_until_ready(f(x))  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            y = f(x)
+        jax.block_until_ready(y)
+        out[f"dispatch_{backend}_us"] = 1e6 * (time.perf_counter() - t0) / iters
+    out["dispatch_shape"] = float(B * S * D)
+    return out
+
+
 def main() -> List[str]:
     m = run()
+    d = dispatch_bench()
     return [
         f"routing/frac_sigmoid_above_half,{m['frac_sigmoid_above_half']:.4f},target~{m['capacity_ratio']}",
         f"routing/blocks_engaged_mean,{m['blocks_engaged_mean']:.3f},of {m['n_routed_blocks']}",
         f"routing/blocks_engaged_std,{m['blocks_engaged_std']:.3f},token-dependence",
+        f"routing/dispatch_xla_us,{d['dispatch_xla_us']:.1f},gather+scatter round trip",
+        f"routing/dispatch_pallas_us,{d['dispatch_pallas_us']:.1f},interpret-mode on CPU",
     ]
 
 

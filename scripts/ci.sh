@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite (includes the routing-backend equivalence
+# tests) on CPU. Pallas kernels run in interpret mode here; TPU runs use
+# the same entry point without JAX_PLATFORMS.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS=cpu
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+python -m pytest -x -q tests/test_routing_backends.py

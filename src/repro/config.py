@@ -40,6 +40,10 @@ class MoDConfig:
     round_to: int = 128
     # "learned" | "stochastic" (Gaussian control from the paper's Fig. 3)
     router_type: str = "learned"
+    # Dispatch backend for the routed-execution engine (core/routing.py):
+    # "xla" (take_along_axis / at[].add) | "pallas" (fused gather +
+    # gated scatter-add kernels, kernels/routing.py).
+    backend: str = "xla"
 
     def capacity(self, seq_len: int) -> int:
         c = int(round(self.capacity_ratio * seq_len))
@@ -320,6 +324,11 @@ def list_archs() -> List[str]:
 def _ensure_configs_imported() -> None:
     # configs/ modules self-register on import
     import repro.configs  # noqa: F401
+
+
+def with_mod_backend(cfg: ModelConfig, backend: str) -> ModelConfig:
+    """Same model, different routed-dispatch backend ("xla" | "pallas")."""
+    return dataclasses.replace(cfg, mod=dataclasses.replace(cfg.mod, backend=backend))
 
 
 def smoke_config(cfg: ModelConfig) -> ModelConfig:

@@ -1,4 +1,4 @@
-"""Mixture-of-Depths core: routing, MoD block wrapper, causal predictor, MoDE."""
+"""Mixture-of-Depths core: routers, the routed-execution engine, MoDE."""
 from repro.core.router import (  # noqa: F401
     apply_gate,
     init_predictor,
@@ -9,4 +9,13 @@ from repro.core.router import (  # noqa: F401
     router_aux_loss,
     router_logits,
 )
-from repro.core.mod_block import apply_mod, decode_route_select  # noqa: F401
+from repro.core.routing import (  # noqa: F401
+    RouteDecision,
+    apply_mod,
+    decide_batch,
+    decide_tokens,
+    execute_routed,
+    route_decode,
+    routing_aux,
+)
+from repro.core.mod_block import decode_route_select  # noqa: F401

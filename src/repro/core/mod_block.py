@@ -1,102 +1,41 @@
-"""MoD block wrapper: gather top-k tokens -> block -> gated scatter-add.
+"""Back-compat shim over the routed-execution engine (core/routing.py).
 
-Implements paper Eq. 1 with a static computation graph:
-
-    x_{l+1}[i] = x_l[i] + r_i * f(X̃)[i]   if i in top-k
-    x_{l+1}[i] = x_l[i]                    otherwise
-
-where ``f`` is the block's residual contribution computed on the gathered
-capacity-sized sub-sequence X̃ (self-attention sees only routed tokens —
-routing decides both which tokens are updated *and* which are attendable,
-§3.2). ``r_i`` multiplies the output so the router is on the gradient path.
+The gather -> block -> gated scatter-add wiring that used to live here is
+now :mod:`repro.core.routing` (RouteDecision + execute_routed with
+xla/pallas backends). These wrappers keep the historical entry points
+importable; new code should call the engine directly.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core import router as R
+from repro.core import routing as ROUT
+from repro.core.routing import Aux, BlockDeltaFn, Params, gather_positions  # noqa: F401
 
-Params = Dict[str, jax.Array]
-Aux = Dict[str, jax.Array]
-
-# block_delta_fn(x_sub, pos_sub) -> (delta_sub, aux) — the block's residual
-# update on the gathered sub-sequence plus any auxiliary outputs (e.g. MoE
-# balance losses when composing MoDE).
-BlockDeltaFn = Callable[[jax.Array, jax.Array], Tuple[jax.Array, Aux]]
-
-
-def _gather_positions(positions: jax.Array, idx: jax.Array) -> jax.Array:
-    """positions: (B,S) or (3,B,S); idx: (B,k)."""
-    if positions.ndim == 3:
-        return jnp.take_along_axis(positions, idx[None].repeat(3, 0), axis=2)
-    return jnp.take_along_axis(positions, idx, axis=1)
+_gather_positions = gather_positions  # historical private name
 
 
 def apply_mod(
-    params: Params,  # {"router": ..., "predictor": ...}
+    params: Params,
     x: jax.Array,  # (B, S, D)
     positions: jax.Array,  # (B,S) or (3,B,S)
     block_delta_fn: BlockDeltaFn,
     cfg: ModelConfig,
     rng: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Aux]:
-    B, S, D = x.shape
-    k = cfg.mod.capacity(S)
-
-    logits = R.router_logits(params["router"], x)  # (B,S) f32
-    idx, gate_logits, topk_mask = R.mod_select(logits, k, cfg.mod, rng)
-    gate = R.apply_gate(gate_logits, cfg.mod)  # (B,k) f32
-
-    x_sub = jnp.take_along_axis(x, idx[..., None], axis=1)  # (B,k,D)
-    pos_sub = _gather_positions(positions, idx)
-    delta, inner_aux = block_delta_fn(x_sub, pos_sub)  # (B,k,D)
-
-    update = (gate[..., None] * delta.astype(jnp.float32)).astype(x.dtype)
-    out = x.at[jnp.arange(B)[:, None], idx].add(update)
-
-    aux: Aux = dict(inner_aux)
-    aux.update({
-        "mod/router_bce": R.router_aux_loss(logits, topk_mask),
-        "mod/frac_above_half": jnp.mean((jax.nn.sigmoid(logits) > 0.5).astype(jnp.float32)),
-        "mod/gate_mean": jnp.mean(gate),
-    })
-    if "predictor" in params:
-        plogits = R.predictor_logits(params["predictor"], x)
-        ploss, pacc = R.predictor_loss_and_acc(plogits, topk_mask)
-        aux["mod/predictor_bce"] = ploss
-        aux["mod/predictor_acc"] = pacc
-    return out, aux
+    """Deprecated alias for :func:`repro.core.routing.apply_mod`."""
+    return ROUT.apply_mod(params, x, positions, block_delta_fn, cfg, rng)
 
 
 def decode_route_select(
     params: Params,
-    x: jax.Array,  # (B, 1, D) — one decode token per sequence
+    x: jax.Array,  # (B, 1, D)
     cfg: ModelConfig,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Causal decode-time routing (batch-capacity form).
-
-    The per-token *decision* must be causal: it comes from the predictor
-    (``sampling="predictor"``) or the router's own sigmoid
-    (``sampling="aux_loss"`` — r_i is itself causal; only training-time
-    *selection* was non-causal). To keep shapes static and realize FLOP
-    savings in batched serving, the top ``ceil(ratio·B)`` scoring sequences
-    in the batch go through the block this step.
-
-    Returns (idx (kb,), gate (kb,) f32, routed_mask (B,) bool).
-    """
-    B = x.shape[0]
-    kb = max(1, int(round(cfg.mod.capacity_ratio * B)))
-    if cfg.mod.sampling == "predictor" and "predictor" in params:
-        scores = R.predictor_logits(params["predictor"], x)[:, 0]  # (B,)
-    else:
-        scores = R.router_logits(params["router"], x)[:, 0]
-    _, idx = jax.lax.top_k(scores, kb)
-    idx = jnp.sort(idx).astype(jnp.int32)
-    gate_logits = R.router_logits(params["router"], x)[:, 0]  # causal gate
-    gate = R.apply_gate(jnp.take(gate_logits, idx), cfg.mod)
-    routed = jnp.zeros((B,), bool).at[idx].set(True)
-    return idx, gate, routed
+    """Deprecated: returns (idx, gate, routed_mask) from the engine's
+    batch-capacity :class:`~repro.core.routing.RouteDecision`."""
+    d = ROUT.decide_batch(params, x, cfg)
+    return d.idx, d.gate, d.mask

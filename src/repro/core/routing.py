@@ -1,0 +1,288 @@
+"""Unified routed-execution engine: route-select + dispatch + combine.
+
+Every MoD site in the codebase — train/teacher-forced forwards, prefill, and
+batched decode, across all four model families — goes through this module.
+The paper's Eq. 1,
+
+    x_{l+1}[i] = x_l[i] + r_i * f(X̃)[i]   if i routed
+    x_{l+1}[i] = x_l[i]                    otherwise
+
+factors into three pieces:
+
+1. a :class:`RouteDecision` — *which rows* participate and with *what gate*.
+   Two strategies share the interface:
+
+   - ``token_topk`` (train / prefill): per-sequence expert-choice top-k over
+     the time axis (paper §3.2); ``idx`` is (B, k).
+   - ``batch_capacity`` (decode): the causal score (trained predictor or
+     router sigmoid) ranks *sequences*, and the top ``ceil(ratio·B)`` run
+     the block this step; ``idx`` is (kb,). Shapes stay static, so the FLOP
+     saving is realizable in batched serving (DESIGN.md §Routing engine).
+
+2. :func:`execute_routed` — gather the routed rows, run the block's residual
+   ``block_delta_fn`` on the capacity-sized sub-tensor, and gated
+   scatter-add the result back, via a pluggable backend
+   (``MoDConfig.backend``):
+
+   - ``"xla"``: take_along_axis / at[].add — the reference path.
+   - ``"pallas"``: fused row-gather + gated scatter-add kernels
+     (kernels/routing.py) — one VMEM pass, MXU one-hot matmuls.
+
+   ``batch_capacity`` moves (kb, 1, D) rows — far below kernel-worthy size —
+   so it always uses XLA ops regardless of backend.
+
+3. aux/loss plumbing — :func:`routing_aux` emits the router BCE, predictor
+   BCE/acc and routing stats that train loops weight into the loss.
+
+New block types plug in as a single ``block_delta_fn`` (plus, for decode, a
+``block_fn`` that threads caches) instead of re-implementing the
+gather/scatter wiring per family.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import router as R
+
+Params = Dict[str, jax.Array]
+Aux = Dict[str, jax.Array]
+
+# block_delta_fn(x_sub, pos_sub) -> (delta_sub, aux) — the block's residual
+# update on the gathered sub-tensor plus any auxiliary outputs (e.g. MoE
+# balance losses when composing MoDE).
+BlockDeltaFn = Callable[[jax.Array, Optional[jax.Array]], Tuple[jax.Array, Aux]]
+
+
+class RouteDecision(NamedTuple):
+    """Which rows a routed block runs on, and how much their output counts.
+
+    strategy: "token_topk" (idx (B, k) over the time axis) or
+              "batch_capacity" (idx (kb,) over the batch axis).
+    idx:      routed row indices, sorted ascending, unique.
+    gate:     f32 router weight per routed row — multiplies the block output
+              so the router stays on the gradient path (paper Eq. 1).
+    mask:     routed-membership mask — (B, S) bool for token_topk (the
+              aux-loss target), (B,) bool for batch_capacity.
+    logits:   full router logits (B, S) f32 when the decision came from the
+              learned router on the full tensor (token_topk); None otherwise.
+    """
+
+    strategy: str
+    idx: jax.Array
+    gate: jax.Array
+    mask: jax.Array
+    logits: Optional[jax.Array] = None
+
+
+# ---------------------------------------------------------------------------
+# Route selection strategies
+# ---------------------------------------------------------------------------
+
+
+def decide_tokens(
+    params: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    rng: Optional[jax.Array] = None,
+) -> RouteDecision:
+    """Train/prefill strategy: expert-choice top-k over the sequence axis."""
+    k = cfg.mod.capacity(x.shape[1])
+    logits = R.router_logits(params["router"], x)  # (B, S) f32
+    idx, gate_logits, topk_mask = R.mod_select(logits, k, cfg.mod, rng)
+    gate = R.apply_gate(gate_logits, cfg.mod)
+    return RouteDecision("token_topk", idx, gate, topk_mask, logits)
+
+
+def decide_batch(
+    params: Params,
+    x: jax.Array,  # (B, 1, D) — one decode token per sequence
+    cfg: ModelConfig,
+) -> RouteDecision:
+    """Decode strategy: batch-capacity routing.
+
+    The per-token *decision* must be causal: it comes from the predictor
+    (``sampling="predictor"``) or the router's own sigmoid
+    (``sampling="aux_loss"`` — r_i is itself causal; only training-time
+    *selection* was non-causal). To keep shapes static and realize FLOP
+    savings in batched serving, the top ``ceil(ratio·B)`` scoring sequences
+    in the batch go through the block this step.
+    """
+    B = x.shape[0]
+    kb = max(1, int(round(cfg.mod.capacity_ratio * B)))
+    if cfg.mod.sampling == "predictor" and "predictor" in params:
+        scores = R.predictor_logits(params["predictor"], x)[:, 0]  # (B,)
+    else:
+        scores = R.router_logits(params["router"], x)[:, 0]
+    _, idx = jax.lax.top_k(scores, kb)
+    idx = jnp.sort(idx).astype(jnp.int32)
+    gate_logits = R.router_logits(params["router"], x)[:, 0]  # causal gate
+    gate = R.apply_gate(jnp.take(gate_logits, idx), cfg.mod)
+    routed = jnp.zeros((B,), bool).at[idx].set(True)
+    return RouteDecision("batch_capacity", idx, gate, routed)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch / combine backends
+# ---------------------------------------------------------------------------
+
+
+def _gather_tokens(x: jax.Array, idx: jax.Array, backend: str) -> jax.Array:
+    if backend == "pallas":
+        from repro.kernels.ops import gather_rows_op
+
+        return gather_rows_op(x, idx)
+    if backend != "xla":
+        raise ValueError(f"unknown MoD backend {backend!r} (want 'xla'|'pallas')")
+    return jnp.take_along_axis(x, idx[..., None], axis=1)
+
+
+def _scatter_add_tokens(
+    x: jax.Array, idx: jax.Array, delta: jax.Array, gate: jax.Array, backend: str
+) -> jax.Array:
+    if backend == "pallas":
+        from repro.kernels.ops import scatter_add_rows_op
+
+        return scatter_add_rows_op(x, idx, delta, gate)
+    if backend != "xla":
+        raise ValueError(f"unknown MoD backend {backend!r} (want 'xla'|'pallas')")
+    update = (gate[..., None] * delta.astype(jnp.float32)).astype(x.dtype)
+    B = x.shape[0]
+    return x.at[jnp.arange(B)[:, None], idx].add(update)
+
+
+def gather_positions(positions: jax.Array, idx: jax.Array) -> jax.Array:
+    """Token-axis position gather. positions: (B,S) or (3,B,S); idx: (B,k)."""
+    if positions.ndim == 3:
+        return jnp.take_along_axis(positions, idx[None].repeat(3, 0), axis=2)
+    return jnp.take_along_axis(positions, idx, axis=1)
+
+
+def _take_batch_positions(positions: jax.Array, idx: jax.Array) -> jax.Array:
+    """Batch-axis position gather. positions: (B,1) or (3,B,1); idx: (kb,)."""
+    if positions.ndim == 3:
+        return jnp.take(positions, idx, axis=1)
+    return jnp.take(positions, idx, axis=0)
+
+
+def gather_batch(decision: RouteDecision, tree):
+    """Gather the routed sequences' slices of a cache pytree (decode)."""
+    return jax.tree.map(lambda c: jnp.take(c, decision.idx, axis=0), tree)
+
+
+def scatter_batch(decision: RouteDecision, tree, sub):
+    """Write updated routed-sequence slices back into a cache pytree."""
+    return jax.tree.map(lambda c, cs: c.at[decision.idx].set(cs), tree, sub)
+
+
+def execute_routed(
+    decision: RouteDecision,
+    x: jax.Array,  # (B, S, D) token_topk / (B, 1, D) batch_capacity
+    block_delta_fn: BlockDeltaFn,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Aux]:
+    """Gather routed rows -> block residual -> gated scatter-add (Eq. 1)."""
+    if decision.strategy == "token_topk":
+        x_sub = _gather_tokens(x, decision.idx, cfg.mod.backend)
+        pos_sub = None if positions is None else gather_positions(positions, decision.idx)
+        delta, aux = block_delta_fn(x_sub, pos_sub)
+        out = _scatter_add_tokens(x, decision.idx, delta, decision.gate, cfg.mod.backend)
+        return out, aux
+
+    assert decision.strategy == "batch_capacity", decision.strategy
+    x_sub = jnp.take(x, decision.idx, axis=0)
+    pos_sub = None if positions is None else _take_batch_positions(positions, decision.idx)
+    delta, aux = block_delta_fn(x_sub, pos_sub)
+    update = (decision.gate[:, None, None] * delta.astype(jnp.float32)).astype(x.dtype)
+    return x.at[decision.idx].add(update), aux
+
+
+# ---------------------------------------------------------------------------
+# Aux losses / stats
+# ---------------------------------------------------------------------------
+
+
+def routing_aux(
+    decision: RouteDecision, params: Params, x: jax.Array, cfg: ModelConfig
+) -> Aux:
+    """Router BCE + stats (+ predictor BCE/acc) for a token_topk decision."""
+    aux: Aux = {
+        "mod/router_bce": R.router_aux_loss(decision.logits, decision.mask),
+        "mod/frac_above_half": jnp.mean(
+            (jax.nn.sigmoid(decision.logits) > 0.5).astype(jnp.float32)
+        ),
+        "mod/gate_mean": jnp.mean(decision.gate),
+    }
+    if "predictor" in params:
+        plogits = R.predictor_logits(params["predictor"], x)
+        ploss, pacc = R.predictor_loss_and_acc(plogits, decision.mask)
+        aux["mod/predictor_bce"] = ploss
+        aux["mod/predictor_acc"] = pacc
+    return aux
+
+
+def decode_aux(decision: RouteDecision) -> Aux:
+    return {"mod/decode_routed_frac": jnp.mean(decision.mask.astype(jnp.float32))}
+
+
+# ---------------------------------------------------------------------------
+# High-level entry points (what the model families call)
+# ---------------------------------------------------------------------------
+
+
+def apply_mod(
+    params: Params,  # {"router": ..., "predictor"?: ..., ...}
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S) or (3, B, S)
+    block_delta_fn: BlockDeltaFn,
+    cfg: ModelConfig,
+    rng: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Aux]:
+    """Train-time routed block: token top-k decision + routed execution."""
+    decision = decide_tokens(params, x, cfg, rng)
+    out, inner_aux = execute_routed(decision, x, block_delta_fn, cfg, positions)
+    aux: Aux = dict(inner_aux)
+    aux.update(routing_aux(decision, params, x, cfg))
+    return out, aux
+
+
+# block_fn(x_sub, pos_sub, caches_sub, decision) -> (delta, new_caches_sub, aux)
+DecodeBlockFn = Callable[
+    [jax.Array, Optional[jax.Array], Params, RouteDecision],
+    Tuple[jax.Array, Params, Aux],
+]
+
+
+def route_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, D)
+    caches: Params,
+    block_fn: DecodeBlockFn,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Params, Aux]:
+    """Decode-time routed block: batch-capacity decision + routed execution.
+
+    Gathers the routed sequences' cache slices, runs ``block_fn`` on the
+    (kb, 1, D) sub-batch, scatters both the gated delta and the updated
+    caches back. ``block_fn`` receives the decision so call sites can gather
+    any extra per-sequence state (e.g. encdec cross-KV) themselves.
+    """
+    decision = decide_batch(params, x, cfg)
+    caches_sub = gather_batch(decision, caches)
+    new_sub: Dict[str, Params] = {}
+
+    def delta_fn(x_sub, pos_sub):
+        delta, new_caches_sub, inner = block_fn(x_sub, pos_sub, caches_sub, decision)
+        new_sub["caches"] = new_caches_sub
+        return delta, inner
+
+    out, inner_aux = execute_routed(decision, x, delta_fn, cfg, positions)
+    new_caches = scatter_batch(decision, caches, new_sub["caches"])
+    aux: Aux = dict(inner_aux)
+    aux.update(decode_aux(decision))
+    return out, new_caches, aux

@@ -4,6 +4,8 @@
   (serves both vanilla blocks and MoD's gathered sub-sequences)
 - ssd: Mamba2 SSD intra-chunk kernel (the quadratic hot loop)
 - swiglu: fused SwiGLU MLP (gate/up matmuls + silu + down, one VMEM pass)
+- routing: fused MoD row-gather + gated scatter-add (the "pallas" backend
+  of the routed-execution engine in core/routing.py)
 
 Each kernel has a pure-jnp oracle in ref.py and a jit'd dispatching wrapper
 in ops.py. On this CPU container kernels execute via ``interpret=True``;

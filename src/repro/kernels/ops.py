@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import routing as _rt
 from repro.kernels import ssd as _ssd
 from repro.kernels import swiglu as _sw
 
@@ -42,3 +43,15 @@ def ssd_intra_chunk_op(x, loglam, dt, Bm, Cm, *, interpret=None):
 def swiglu_op(x, w_gate, w_up, w_down, *, interpret=None):
     interp = on_cpu() if interpret is None else interpret
     return _sw.swiglu(x, w_gate, w_up, w_down, interpret=interp)
+
+
+def gather_rows_op(x, idx, *, interpret=None):
+    """Fused MoD row-gather (core/routing.py "pallas" backend dispatch)."""
+    interp = on_cpu() if interpret is None else interpret
+    return _rt.gather_rows(x, idx, interpret=interp)
+
+
+def scatter_add_rows_op(x, idx, delta, gate, *, interpret=None):
+    """Fused MoD gated scatter-add (core/routing.py "pallas" backend combine)."""
+    interp = on_cpu() if interpret is None else interpret
+    return _rt.scatter_add_rows(x, idx, delta, gate, interpret=interp)

@@ -70,3 +70,28 @@ def ssd_chunk_ref(
 def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
     h = jax.nn.silu(x @ w_gate) * (x @ w_up)
     return h @ w_down
+
+
+def gather_rows_ref(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """MoD dispatch oracle: out[b, i] = x[b, idx[b, i]] via a dense one-hot
+    contraction (independent of both the XLA take_along_axis backend and the
+    blocked pallas kernel)."""
+    B, S, _ = x.shape
+    onehot = (idx[..., None] == jnp.arange(S)[None, None, :]).astype(jnp.float32)
+    out = jnp.einsum("bks,bsd->bkd", onehot, x.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def scatter_add_rows_ref(
+    x: jax.Array,  # (B, S, D)
+    idx: jax.Array,  # (B, k) unique per row
+    delta: jax.Array,  # (B, k, D)
+    gate: jax.Array,  # (B, k) f32
+) -> jax.Array:
+    """MoD combine oracle: out[b, s] = x[b, s] + cast(gate * delta) for the
+    (at most one, since top-k indices are unique) i with idx[b, i] == s."""
+    B, S, _ = x.shape
+    onehot = (idx[..., None] == jnp.arange(S)[None, None, :]).astype(jnp.float32)
+    gated = gate[..., None].astype(jnp.float32) * delta.astype(jnp.float32)
+    upd = jnp.einsum("bks,bkd->bsd", onehot, gated)
+    return x + upd.astype(x.dtype)

@@ -6,9 +6,20 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
 from repro.config import MeshConfig
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+
+    def _axis_kw(n: int):
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # older jax: Auto is the only (implicit) behaviour
+    AxisType = None
+
+    def _axis_kw(n: int):
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -17,15 +28,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     (2 x 16 x 16 = 512 chips) over which data parallelism spans DCN/ICI."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_mesh(cfg: MeshConfig) -> Mesh:
     """Mesh from an explicit MeshConfig (tests / small runs)."""
-    return jax.make_mesh(
-        cfg.shape, cfg.axis_names, axis_types=(AxisType.Auto,) * len(cfg.shape)
-    )
+    return jax.make_mesh(cfg.shape, cfg.axis_names, **_axis_kw(len(cfg.shape)))
 
 
 def single_device_mesh() -> Mesh:
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"), **_axis_kw(2))

@@ -1,6 +1,6 @@
 """Batched serving driver: prefill + MoD batch-capacity decode.
 
-Loads a checkpoint if given (otherwise random init), prefim a batch of
+Loads a checkpoint if given (otherwise random init), prefills a batch of
 prompts, decodes N tokens with causal predictor routing, and reports
 decode throughput. The decode step is the exact function the
 ``decode_*`` dry-run cells lower at 512 chips.

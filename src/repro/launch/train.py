@@ -24,6 +24,7 @@ from repro.data.synthetic import SyntheticLM
 from repro.distributed.sharding import batch_shardings, state_shardings
 from repro.launch.mesh import make_mesh
 from repro.train.loop import Trainer, make_train_step
+from repro.utils import mesh_scope
 
 
 def main() -> None:
@@ -71,7 +72,7 @@ def main() -> None:
         batch_axes=tuple(a for a in ("pod", "data") if a in mesh.shape),
     )
 
-    with jax.set_mesh(mesh):
+    with mesh_scope(mesh):
         step_raw = make_train_step(cfg, tcfg)
         # shard the state according to the rules; metrics replicated
         import jax.numpy as jnp

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core import mod_block as MODB
 from repro.core import router as R
+from repro.core import routing as ROUT
 from repro.models import attention as A
 from repro.models import blocks as BLK
 from repro.distributed.sharding import constrain_batch
@@ -140,7 +140,7 @@ def forward(
             def delta_fn(xs, ps):
                 return _dec_block(gp["mod"]["block"], xs, ps, enc_out, cfg, delta_only=True), {}
 
-            h, a = MODB.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
+            h, a = ROUT.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
             aux.update(a)
         return (constrain_batch(h), key), aux
 
@@ -246,16 +246,17 @@ def decode_step(
         new_c["full"] = {"self": sc, "cross": gc["full"]["cross"]}
         if "mod" in gp:
             mp, mc = gp["mod"], gc["mod"]
-            idx, gate, routed = MODB.decode_route_select(mp, h, cfg)
-            h_sub = jnp.take(h, idx, axis=0)
-            sc_sub = jax.tree.map(lambda c: jnp.take(c, idx, axis=0), mc["self"])
-            ckv_sub = jax.tree.map(lambda c: jnp.take(c, idx, axis=0), mc["cross"])
-            d, sc_sub = _dec_block_decode(
-                mp["block"], h_sub, jnp.take(positions, idx, axis=0), sc_sub, ckv_sub, cfg, True
-            )
-            upd = (gate[:, None, None] * d.astype(jnp.float32)).astype(h.dtype)
-            h = h.at[idx].add(upd)
-            new_self = jax.tree.map(lambda c, cs: c.at[idx].set(cs), mc["self"], sc_sub)
+
+            def block_fn(h_sub, pos_sub, sc_sub, decision):
+                # cross-KV is read-only: gather it here (via the decision)
+                # so the engine only scatters the mutated self-cache back
+                ckv_sub = ROUT.gather_batch(decision, mc["cross"])
+                d, sc = _dec_block_decode(
+                    mp["block"], h_sub, pos_sub, sc_sub, ckv_sub, cfg, True
+                )
+                return d, sc, {}
+
+            h, new_self, _ = ROUT.route_decode(mp, h, mc["self"], block_fn, cfg, positions)
             new_c["mod"] = {"self": new_self, "cross": mc["cross"]}
         return constrain_batch(h), new_c
 

@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core import mod_block as MODB
 from repro.core import router as R
+from repro.core import routing as ROUT
 from repro.models import attention as A
 from repro.models import blocks as BLK
 from repro.models import ssm as SSM
@@ -119,7 +119,7 @@ def forward(
             def delta_fn(xs, ps):
                 return _ssm_delta(gp["mod"]["block"], xs, cfg), {}
 
-            h, a = MODB.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
+            h, a = ROUT.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
             aux.update(a)
         return (constrain_batch(h), key), aux
 
@@ -179,14 +179,12 @@ def decode_step(
             h = h + d
             new_c["full"] = c
         if "mod" in gp:
-            idx, gate, routed = MODB.decode_route_select(gp["mod"], h, cfg)
-            h_sub = jnp.take(h, idx, axis=0)
-            c_sub = jax.tree.map(lambda c: jnp.take(c, idx, axis=0), gc["mod"])
-            d, c_sub = ssm_decode_delta(gp["mod"]["block"], h_sub, c_sub)
-            upd = (gate[:, None, None] * d.astype(jnp.float32)).astype(h.dtype)
-            h = h.at[idx].add(upd)
-            new_c["mod"] = jax.tree.map(lambda c, cs: c.at[idx].set(cs), gc["mod"], c_sub)
-            aux["mod/decode_routed_frac"] = jnp.mean(routed.astype(jnp.float32))
+            def block_fn(h_sub, pos_sub, c_sub, decision):
+                d, c = ssm_decode_delta(gp["mod"]["block"], h_sub, c_sub)
+                return d, c, {}
+
+            h, new_c["mod"], a = ROUT.route_decode(gp["mod"], h, gc["mod"], block_fn, cfg)
+            aux.update(a)
         return constrain_batch(h), (new_c, aux)
 
     x, (new_caches, aux_stack) = scan_or_loop(body, x, (params["groups"], caches["groups"]), unroll=cfg.unroll_layers)
@@ -271,7 +269,7 @@ def forward_hybrid(
             def delta_fn(xs, ps):
                 return _ssm_delta(gp["mod"]["block"], xs, cfg), {}
 
-            h, a = MODB.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
+            h, a = ROUT.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
             aux.update(a)
         return (constrain_batch(h), key), aux
 
@@ -339,13 +337,11 @@ def decode_step_hybrid(
         h = h + d
         new_c["full"] = c
         if "mod" in gp:
-            idx, gate, routed = MODB.decode_route_select(gp["mod"], h, cfg)
-            h_sub = jnp.take(h, idx, axis=0)
-            c_sub = jax.tree.map(lambda c_: jnp.take(c_, idx, axis=0), gc["mod"])
-            d, c_sub = ssm_decode_delta(gp["mod"]["block"], h_sub, c_sub)
-            upd = (gate[:, None, None] * d.astype(jnp.float32)).astype(h.dtype)
-            h = h.at[idx].add(upd)
-            new_c["mod"] = jax.tree.map(lambda c_, cs: c_.at[idx].set(cs), gc["mod"], c_sub)
+            def block_fn(h_sub, pos_sub, c_sub, decision):
+                d, c = ssm_decode_delta(gp["mod"]["block"], h_sub, c_sub)
+                return d, c, {}
+
+            h, new_c["mod"], _ = ROUT.route_decode(gp["mod"], h, gc["mod"], block_fn, cfg)
         return h, new_c
 
     def outer_body(h, xs):

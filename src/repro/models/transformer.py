@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core import mod_block as MODB
 from repro.core import router as R
+from repro.core import routing as ROUT
 from repro.models import attention as A
 from repro.models import blocks as BLK
 from repro.distributed.sharding import constrain_batch
@@ -129,7 +129,7 @@ def forward(
             def delta_fn(xs, ps):
                 return BLK.block_delta(gp["mod"]["block"], xs, ps, cfg)
 
-            h, a = MODB.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
+            h, a = ROUT.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
             aux.update(a)
         return (constrain_batch(h), key), aux
 
@@ -222,20 +222,20 @@ def make_cache(cfg: ModelConfig, batch: int, ctx: int, specs: bool = False) -> P
 
 
 def _mod_prefill_group(gp, h, positions, cache, cfg):
-    logits = R.router_logits(gp["router"], h)
-    k = cfg.mod.capacity(h.shape[1])
-    idx, gate_logits, topk_mask = R.mod_select(logits, k, cfg.mod)
-    gate = R.apply_gate(gate_logits, cfg.mod)
-    h_sub = jnp.take_along_axis(h, idx[..., None], axis=1)
-    pos_sub = MODB._gather_positions(positions, idx)
-    delta, cache, inner = BLK.block_prefill(
-        gp["block"], h_sub, pos_sub, cache, cfg, delta_only=True
-    )
-    upd = (gate[..., None] * delta.astype(jnp.float32)).astype(h.dtype)
-    h = h.at[jnp.arange(h.shape[0])[:, None], idx].add(upd)
-    aux = dict(inner)
-    aux["mod/router_bce"] = R.router_aux_loss(logits, topk_mask)
-    return h, cache, aux, (logits, topk_mask)
+    decision = ROUT.decide_tokens(gp, h, cfg)
+    filled = {}
+
+    def delta_fn(h_sub, pos_sub):
+        delta, c, inner = BLK.block_prefill(
+            gp["block"], h_sub, pos_sub, cache, cfg, delta_only=True
+        )
+        filled["cache"] = c
+        return delta, inner
+
+    h, aux = ROUT.execute_routed(decision, h, delta_fn, cfg, positions)
+    aux = dict(aux)
+    aux["mod/router_bce"] = R.router_aux_loss(decision.logits, decision.mask)
+    return h, filled["cache"], aux, (decision.logits, decision.mask)
 
 
 def prefill(
@@ -284,19 +284,14 @@ def prefill(
 
 def _mod_decode_group(gp, h, positions, cache, cfg):
     """Batch-capacity MoD decode: top ceil(ratio*B) sequences route through."""
-    idx, gate, routed = MODB.decode_route_select(gp, h, cfg)
-    h_sub = jnp.take(h, idx, axis=0)
-    pos_sub = (
-        jnp.take(positions, idx, axis=1) if positions.ndim == 3 else jnp.take(positions, idx, axis=0)
-    )
-    cache_sub = jax.tree.map(lambda c: jnp.take(c, idx, axis=0), cache)
-    delta, cache_sub, _ = BLK.block_decode(
-        gp["block"], h_sub, pos_sub, cache_sub, cfg, delta_only=True
-    )
-    upd = (gate[:, None, None] * delta.astype(jnp.float32)).astype(h.dtype)
-    h = h.at[idx].add(upd)
-    cache = jax.tree.map(lambda c, cs: c.at[idx].set(cs), cache, cache_sub)
-    return h, cache, {"mod/decode_routed_frac": jnp.mean(routed.astype(jnp.float32))}
+
+    def block_fn(h_sub, pos_sub, cache_sub, decision):
+        delta, c, _ = BLK.block_decode(
+            gp["block"], h_sub, pos_sub, cache_sub, cfg, delta_only=True
+        )
+        return delta, c, {}
+
+    return ROUT.route_decode(gp, h, cache, block_fn, cfg, positions)
 
 
 def decode_step(

@@ -1,10 +1,13 @@
 """Serving: prefill + batched decode with MoD batch-capacity routing.
 
 ``make_serve_step`` returns the jit-able one-token step used by the decode
-dry-run cells and the sampling example. MoD blocks decide causally (via the
-trained predictor or the router sigmoid) and only the top ``ratio*B``
-scoring sequences run the block — static shapes, real FLOP savings
-(DESIGN.md §3, decode-time batched routing).
+dry-run cells and the sampling example. Every family's decode step routes
+through the engine in ``core/routing.py``: its ``batch_capacity`` strategy
+decides causally (via the trained predictor or the router sigmoid) and only
+the top ``ratio*B`` scoring sequences run the block — static shapes, real
+FLOP savings (DESIGN.md §Routing engine). The dispatch backend is
+``cfg.mod.backend`` ("xla" | "pallas"); use
+:func:`repro.config.with_mod_backend` to switch a config for serving.
 """
 from __future__ import annotations
 

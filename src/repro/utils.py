@@ -9,6 +9,21 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def mesh_scope(mesh):
+    """Ambient-mesh context across jax versions: ``jax.set_mesh`` where
+    available, else the legacy ``with mesh:`` global-mesh context."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
+def cost_analysis_dict(compiled) -> Dict[str, Any]:
+    """compiled.cost_analysis() across jax versions (old jax returns a
+    one-element list of dicts, new jax the dict itself)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def key_iter(seed_or_key) -> Iterator[jax.Array]:
     """Infinite iterator of fresh PRNG keys."""
     key = jax.random.PRNGKey(seed_or_key) if isinstance(seed_or_key, int) else seed_or_key

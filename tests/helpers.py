@@ -9,6 +9,18 @@ import jax.numpy as jnp
 from repro.config import AttentionConfig, MoDConfig, ModelConfig
 
 
+def abstract_mesh_compat(shape, axes):
+    """AbstractMesh across jax versions (axis_types only where supported)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        from jax.sharding import AxisType
+
+        return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    except ImportError:  # old signature: tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def tiny_cfg(**kw) -> ModelConfig:
     base = dict(
         name="t",

@@ -1,10 +1,29 @@
 """Data substrate: determinism, sharding, packing properties."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+import pytest
 
 from repro.data.packing import pack_documents
 from repro.data.synthetic import SyntheticLM
+
+try:  # property-based when hypothesis is installed; fixed cases otherwise
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    def _packing_cases(fn):
+        return settings(max_examples=20, deadline=None)(
+            given(
+                docs=st.lists(st.integers(1, 40), min_size=1, max_size=8),
+                seq_len=st.integers(4, 32),
+            )(fn)
+        )
+
+except ModuleNotFoundError:
+
+    def _packing_cases(fn):
+        return pytest.mark.parametrize(
+            "docs,seq_len",
+            [([3], 4), ([1, 40, 7, 2], 16), ([8] * 8, 32), ([5, 9], 31)],
+        )(fn)
 
 
 def test_synthetic_determinism():
@@ -37,11 +56,7 @@ def test_structure_is_learnable_signal():
     assert 0.4 < hits < 0.65
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    docs=st.lists(st.integers(1, 40), min_size=1, max_size=8),
-    seq_len=st.integers(4, 32),
-)
+@_packing_cases
 def test_packing_preserves_all_tokens(docs, seq_len):
     rng = np.random.default_rng(0)
     doc_arrays = [rng.integers(1, 100, size=n) for n in docs]

@@ -1,29 +1,43 @@
 """MoD routing invariants — the paper's core mechanism (unit + property)."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.config import MoDConfig
 from repro.core import mod_block as MODB
 from repro.core import router as R
+from repro.core import routing as ROUT
 from tests.helpers import tiny_cfg
 
 MOD = MoDConfig(enabled=True, capacity_ratio=0.25, round_to=1)
 
+try:  # property-based when hypothesis is installed; fixed cases otherwise
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
 
-@settings(max_examples=25, deadline=None)
-@given(
-    b=st.integers(1, 4),
-    s=st.integers(2, 48),
-    frac=st.floats(0.05, 1.0),
-    seed=st.integers(0, 2**31 - 1),
-)
+    def _select_cases(fn):
+        return settings(max_examples=25, deadline=None)(
+            given(
+                b=st.integers(1, 4),
+                s=st.integers(2, 48),
+                frac=st.floats(0.05, 1.0),
+                seed=st.integers(0, 2**31 - 1),
+            )(fn)
+        )
+
+except ModuleNotFoundError:
+
+    def _select_cases(fn):
+        return pytest.mark.parametrize(
+            "b,s,frac,seed",
+            [(1, 2, 0.5, 0), (4, 48, 0.05, 1), (2, 17, 1.0, 2), (3, 31, 0.8, 3)],
+        )(fn)
+
+
+@_select_cases
 def test_mod_select_invariants(b, s, frac, seed):
     k = max(1, min(s, int(round(frac * s))))
     logits = jax.random.normal(jax.random.PRNGKey(seed), (b, s))
@@ -54,7 +68,10 @@ def test_unrouted_tokens_pass_through_unchanged():
     def delta_fn(xs, ps):
         return jnp.ones_like(xs), {}
 
-    out, aux = MODB.apply_mod(params, x, pos, delta_fn, cfg)
+    out, aux = ROUT.apply_mod(params, x, pos, delta_fn, cfg)
+    # the deprecated mod_block shim must stay equivalent to the engine
+    out_shim, _ = MODB.apply_mod(params, x, pos, delta_fn, cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_shim))
     logits = R.router_logits(params["router"], x)
     k = cfg.mod.capacity(S)
     idx, gate, mask = R.mod_select(logits, k, cfg.mod)
@@ -75,7 +92,7 @@ def test_router_gradient_flows_through_gate():
     params = {"router": R.init_router(key, cfg)}
 
     def loss(p):
-        out, _ = MODB.apply_mod(p, x, pos, lambda xs, ps: (jnp.tanh(xs), {}), cfg)
+        out, _ = ROUT.apply_mod(p, x, pos, lambda xs, ps: (jnp.tanh(xs), {}), cfg)
         return jnp.sum(out**2)
 
     g = jax.grad(loss)(params)

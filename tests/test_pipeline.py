@@ -23,14 +23,17 @@ SCRIPT = textwrap.dedent(
     import json
     import jax, jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType
 
     from repro.distributed.pipeline import pipeline_forward
     from repro.optim.compression import compressed_psum, init_error_feedback
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+    try:
+        from jax.sharding import AxisType
+        mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+    except ImportError:
+        mesh = jax.make_mesh((4,), ("pod",))
     out = {}
 
     # --- pipeline: 4 stages of y = x @ W_i + b_i, compare vs sequential ----

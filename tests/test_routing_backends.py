@@ -1,0 +1,149 @@
+"""Backend equivalence for the routed-execution engine (core/routing.py).
+
+The pallas kernels (interpret mode on CPU) must match the xla backend and
+the kernels/ref.py oracles bit-for-bit on gather and gated scatter-add, and
+the full `execute_routed` forward + grad must agree across backends, over
+capacity ratios {0.125, 0.5, 1.0} and dtypes {f32, bf16}.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.config import MoDConfig, with_mod_backend
+from repro.core import router as R
+from repro.core import routing as ROUT
+from repro.kernels import ref as KREF
+from repro.kernels.routing import gather_rows, scatter_add_rows
+from tests.helpers import tiny_cfg
+
+RATIOS = [0.125, 0.5, 1.0]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _routing_case(ratio, dtype, b=2, s=32, d=24, seed=0):
+    k = max(1, int(round(ratio * s)))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (b, s, d)).astype(dtype)
+    logits = jax.random.normal(ks[1], (b, s))
+    _, idx = jax.lax.top_k(logits, k)
+    idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+    delta = jax.random.normal(ks[2], (b, k, d)).astype(dtype)
+    gate = jax.random.normal(ks[3], (b, k))
+    return x, idx, delta, gate
+
+
+@pytest.mark.parametrize("ratio", RATIOS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_gather_bit_for_bit(ratio, dtype):
+    x, idx, _, _ = _routing_case(ratio, dtype)
+    pallas = gather_rows(x, idx, interpret=True)
+    xla = jnp.take_along_axis(x, idx[..., None], axis=1)
+    ref = KREF.gather_rows_ref(x, idx)
+    assert pallas.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(pallas), np.asarray(xla))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(xla))
+
+
+@pytest.mark.parametrize("ratio", RATIOS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_gated_scatter_add_bit_for_bit(ratio, dtype):
+    x, idx, delta, gate = _routing_case(ratio, dtype)
+    pallas = scatter_add_rows(x, idx, delta, gate, interpret=True)
+    upd = (gate[..., None] * delta.astype(jnp.float32)).astype(x.dtype)
+    xla = x.at[jnp.arange(x.shape[0])[:, None], idx].add(upd)
+    ref = KREF.scatter_add_rows_ref(x, idx, delta, gate)
+    assert pallas.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(pallas), np.asarray(xla))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(xla))
+    # unrouted rows pass through untouched
+    mask = np.zeros(x.shape[:2], bool)
+    np.put_along_axis(mask, np.asarray(idx), True, axis=1)
+    np.testing.assert_array_equal(np.asarray(pallas)[~mask], np.asarray(x)[~mask])
+
+
+def _mod_cfg(ratio, dtype):
+    return tiny_cfg(
+        dtype="float32" if dtype == jnp.float32 else "bfloat16",
+        mod=MoDConfig(enabled=True, capacity_ratio=ratio, every=2, round_to=1),
+    )
+
+
+@pytest.mark.parametrize("ratio", RATIOS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_execute_routed_forward_matches(ratio, dtype):
+    cfg = _mod_cfg(ratio, dtype)
+    B, S, D = 2, 32, cfg.d_model
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(ks[0], (B, S, D)).astype(dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    params = {"router": R.init_router(ks[1], cfg)}
+    w = jax.random.normal(ks[2], (D, D)).astype(dtype) * 0.1
+
+    def delta_fn(xs, ps):
+        return jnp.tanh(xs @ w), {}
+
+    outs = {}
+    for backend in ("xla", "pallas"):
+        bcfg = with_mod_backend(cfg, backend)
+        decision = ROUT.decide_tokens(params, x, bcfg)
+        outs[backend], _ = ROUT.execute_routed(decision, x, delta_fn, bcfg, pos)
+    np.testing.assert_array_equal(np.asarray(outs["xla"]), np.asarray(outs["pallas"]))
+
+
+@pytest.mark.parametrize("ratio", RATIOS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_execute_routed_grad_matches(ratio, dtype):
+    cfg = _mod_cfg(ratio, dtype)
+    B, S, D = 2, 32, cfg.d_model
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    x = jax.random.normal(ks[0], (B, S, D)).astype(dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    params = {"router": R.init_router(ks[1], cfg)}
+    w = jax.random.normal(ks[2], (D, D)).astype(dtype) * 0.1
+
+    def loss(params, x, w, bcfg):
+        def delta_fn(xs, ps):
+            return jnp.tanh(xs @ w), {}
+
+        out, _ = ROUT.apply_mod(params, x, pos, delta_fn, bcfg)
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    grads = {}
+    for backend in ("xla", "pallas"):
+        bcfg = with_mod_backend(cfg, backend)
+        grads[backend] = jax.grad(loss, argnums=(0, 1, 2))(params, x, w, bcfg)
+    gx, _ = ravel_pytree(grads["xla"])
+    gp, _ = ravel_pytree(grads["pallas"])
+    # grads route through a custom VJP on the pallas side: numerically equal
+    # up to cotangent-accumulation rounding in the activation dtype. bf16's
+    # bound is calibrated against the spread between two pure-autodiff
+    # formulations (take_along_axis vs one-hot einsum) on the same case —
+    # the backend pair must not be noisier than that baseline.
+    if dtype == jnp.float32:
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gp), rtol=2e-5, atol=2e-6)
+    else:
+        np.testing.assert_allclose(
+            np.asarray(gx, np.float32), np.asarray(gp, np.float32), rtol=0.25, atol=0.05
+        )
+
+
+@pytest.mark.parametrize("sampling", ["predictor", "aux_loss"])
+def test_decide_batch_matches_legacy_contract(sampling):
+    """batch_capacity decisions: static shapes, causal scores, sorted idx."""
+    cfg = tiny_cfg(
+        mod=MoDConfig(enabled=True, capacity_ratio=0.25, round_to=1, sampling=sampling)
+    )
+    B = 8
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (B, 1, cfg.d_model))
+    params = {"router": R.init_router(key, cfg), "predictor": R.init_predictor(key, cfg)}
+    d = ROUT.decide_batch(params, x, cfg)
+    kb = max(1, int(round(cfg.mod.capacity_ratio * B)))
+    assert d.strategy == "batch_capacity"
+    assert d.idx.shape == (kb,)
+    assert int(d.mask.sum()) == kb
+    assert (np.diff(np.asarray(d.idx)) > 0).all() if kb > 1 else True

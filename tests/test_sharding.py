@@ -13,17 +13,14 @@ from repro.distributed.sharding import (
     param_shardings,
 )
 from repro.launch.mesh import make_mesh
+from tests.helpers import abstract_mesh_compat
 
 
 def abstract_mesh(data=1, model=1, pod=1):
     # AbstractMesh: rule/pspec tests need mesh *shapes*, not devices
-    from jax.sharding import AbstractMesh, AxisType
-
     if pod > 1:
-        return AbstractMesh((pod, data, model), ("pod", "data", "model"),
-                            axis_types=(AxisType.Auto,) * 3)
-    return AbstractMesh((data, model), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+        return abstract_mesh_compat((pod, data, model), ("pod", "data", "model"))
+    return abstract_mesh_compat((data, model), ("data", "model"))
 
 
 def small_mesh(fsdp=False):
