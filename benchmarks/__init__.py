@@ -1,1 +1,6 @@
-"""Benchmarks - one per paper table/figure + the roofline harness."""
+"""Benchmarks — one per paper table/figure + the roofline/serving harnesses.
+
+README.md §"Reproducing the paper's figures" maps each module to its paper
+claim; ``PYTHONPATH=src python -m benchmarks.run --quick`` runs the CSV
+suite, ``python -m benchmarks.serving --smoke`` the serving sweep.
+"""

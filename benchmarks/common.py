@@ -3,7 +3,11 @@
 All figures compare *relative* behaviour (MoD vs vanilla vs controls) on
 identical synthetic data — the paper's methodology at reduced scale. The
 synthetic stream (Zipf + deterministic successor overlay) has genuinely
-easy and hard tokens, so routing has signal to learn.
+easy and hard tokens, so routing has signal to learn. Not a figure itself:
+``tiny_config``/``train_bench``/``flops_per_token_fwd`` back every section
+of the suite (README §Reproducing the paper's figures maps them).
+
+  PYTHONPATH=src python -m benchmarks.run --quick   # run the whole suite
 """
 from __future__ import annotations
 

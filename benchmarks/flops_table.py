@@ -5,6 +5,8 @@ block at 50% capacity spends 25% of the vanilla QK^T FLOPs ((T/2)^2 vs
 T^2) and 50% of the projection/MLP FLOPs — and prints the forward-pass
 FLOP fraction for the paper's configuration grid (capacity x frequency),
 including the 12.5%-every-other-block optimum (~"upwards of 50%" savings).
+
+  PYTHONPATH=src python -m benchmarks.run --only flops_table
 """
 from __future__ import annotations
 

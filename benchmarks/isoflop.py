@@ -8,6 +8,8 @@ Reproduces the paper's qualitative claims:
       is strictly better — the "down and to the right" isoFLOP shift;
   (3) stochastic (Gaussian) routing is drastically worse — learned routing
       is what matters (paper Fig. 3, control).
+
+  PYTHONPATH=src python -m benchmarks.run --quick --only isoflop
 """
 from __future__ import annotations
 

@@ -4,6 +4,8 @@ Three models at matched size/data: token-choice MoE baseline, staged MoDE
 (MoD routing around blocks whose MLP is the MoE), and integrated MoDE
 (no-op experts inside the MoE router). Paper: MoDE variants improve on the
 MoE baseline per FLOP; integrated beats naive capacity reduction.
+
+  PYTHONPATH=src python -m benchmarks.run --quick --only mode
 """
 from __future__ import annotations
 

@@ -10,9 +10,15 @@ benchmarks/roofline.py) and log hypothesis/before/after/verdict into
 results/perf_log.json, which EXPERIMENTS.md §Perf renders.
 
 Cells (chosen per the assignment):
-  A. granite-8b x decode_32k   — most collective-bound cell
+  A. granite-8b x decode_32k   — most collective-bound cell (includes the
+     MoD-vs-dense decode reproduction check, paper §Results)
   B. olmoe-1b-7b x prefill_32k — worst roofline fraction (EP dispatch)
   C. granite-8b x train_4k     — most representative of the paper's technique
+     (Fig. 3/4 forward-FLOP saving, visible in the compiled roofline)
+  D. MoD dispatch microbench   — xla vs pallas routed-dispatch backends
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations [--cell D] \
+      [--out results/perf_log.json]
 """
 import argparse
 import dataclasses

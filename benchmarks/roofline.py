@@ -34,7 +34,10 @@ Methodology notes (all three sourced from the compiled module):
    an upper bound column.
 5. Numbers are per-device (post-SPMD module). MODEL_FLOPS = 6ND (train) or
    2ND (inference), N = active params; the ratio MODEL_FLOPS/HLO_FLOPs
-   flags remat/redundancy waste (and shows MoD's saving: HLO < 6ND).
+   flags remat/redundancy waste (and shows MoD's saving: HLO < 6ND —
+   the compiled form of the paper's Fig. 3/4 FLOP reduction).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--arch granite-8b]
 """
 import argparse
 import dataclasses

@@ -10,6 +10,8 @@ Checks the paper's two observations:
 Also measures the routed-dispatch cost of the two `core/routing.py`
 backends ("xla" vs "pallas" fused gather/scatter) so the kernel's benefit
 is a number in the log, not an assertion.
+
+  PYTHONPATH=src python -m benchmarks.run --quick --only routing
 """
 from __future__ import annotations
 

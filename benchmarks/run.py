@@ -31,6 +31,9 @@ def main() -> None:
         "isoflop": lambda: __import__("benchmarks.isoflop", fromlist=["main"]).main(),
         "routing": lambda: __import__("benchmarks.routing_analysis", fromlist=["main"]).main(),
         "sampling": lambda: __import__("benchmarks.sampling", fromlist=["main"]).main(),
+        "serving": lambda: __import__("benchmarks.serving", fromlist=["main"]).main(
+            smoke=args.quick
+        ),
         "mode": lambda: __import__("benchmarks.mode", fromlist=["main"]).main(),
     }
     chosen = args.only.split(",") if args.only else list(sections)

@@ -10,7 +10,10 @@ features), then score held-out sequences two ways:
       predictor picks, batch-capacity form).
 Paper claims: minimal degradation (a)->(b), predictor accuracy >=97%
 early in training; MoD decode steps faster than an equal-size vanilla
-model (fewer FLOPs per step).
+model (fewer FLOPs per step). The serving-side version of the speed claim
+(continuous batching, offered-load sweep) lives in benchmarks/serving.py.
+
+  PYTHONPATH=src python -m benchmarks.run --quick --only sampling
 """
 from __future__ import annotations
 

@@ -2,9 +2,16 @@
 
 Shows the public API end to end: config -> init -> jitted train step ->
 MoD routing telemetry -> autoregressive sampling with *causal* routing.
+Exercises the paper's core mechanics at toy scale: 12.5%-capacity routed
+blocks every other layer (§3.1 optimum), the aux-loss router centering
+sigmoid(r) on 0.5 (Fig. 5), the co-trained causal predictor (§3.5), and
+sampling through the serving engine's batch-capacity routing (Fig. 6).
 
   PYTHONPATH=src python examples/quickstart.py
+  QUICKSTART_STEPS=10 PYTHONPATH=src python examples/quickstart.py  # CI smoke
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -35,7 +42,7 @@ cfg = ModelConfig(
                   gate="sigmoid", sampling="predictor"),
 )
 
-STEPS = 60
+STEPS = int(os.environ.get("QUICKSTART_STEPS", "60"))
 tcfg = TrainConfig(global_batch=8, seq_len=128,
                    optim=OptimConfig(lr=1e-3, warmup_steps=10, total_steps=STEPS))
 

@@ -1,5 +1,8 @@
 """End-to-end training driver example: a ~100M-parameter MoD LM with
-checkpoint/restart, driven through the production launcher.
+checkpoint/restart, driven through the production launcher. The config is
+the paper's smallest isoFLOP setting (12.5% capacity, every other block,
+co-trained predictor — §3.1/Fig. 3); at full scale its loss curve is the
+MoD side of the isoFLOP comparison in benchmarks/isoflop.py.
 
 Full-size invocation (a few hundred steps of the paper-style 110M model —
 hours on this CPU container, minutes on a v5e slice):

@@ -1,0 +1,44 @@
+"""Docs CI: every relative markdown link in the top-level docs must resolve.
+
+Scans README.md / DESIGN.md / ROADMAP.md / PAPER.md for ``[text](target)``
+links, strips anchors, and fails if a non-URL target doesn't exist on disk
+(relative to the file containing the link). Keeps the README's architecture
+map and benchmark table honest as files move between PRs.
+
+  python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOCS = ("README.md", "DESIGN.md", "ROADMAP.md", "PAPER.md")
+LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    bad = []
+    for doc in DOCS:
+        path = root / doc
+        if not path.exists():
+            bad.append(f"{doc}: missing")
+            continue
+        for target in LINK.findall(path.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:  # pure in-page anchor
+                continue
+            if not (path.parent / rel).exists():
+                bad.append(f"{doc}: broken link -> {target}")
+    for b in bad:
+        print(f"[check_docs] {b}", file=sys.stderr)
+    if not bad:
+        print(f"[check_docs] {len(DOCS)} docs ok")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

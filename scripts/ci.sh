@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 CI: full test suite (includes the routing-backend equivalence
-# tests) on CPU. Pallas kernels run in interpret mode here; TPU runs use
-# the same entry point without JAX_PLATFORMS.
+# tests) on CPU, plus a docs step — markdown link check and the quickstart
+# example as an executable smoke test. Pallas kernels run in interpret
+# mode here; TPU runs use the same entry point without JAX_PLATFORMS.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,3 +11,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
 python -m pytest -x -q tests/test_routing_backends.py
+
+# docs: README/DESIGN relative links must resolve; quickstart must run
+python scripts/check_docs.py
+QUICKSTART_STEPS=10 python examples/quickstart.py

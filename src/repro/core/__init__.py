@@ -14,8 +14,10 @@ from repro.core.routing import (  # noqa: F401
     apply_mod,
     decide_batch,
     decide_tokens,
+    decode_aux,
     execute_routed,
     route_decode,
     routing_aux,
 )
-from repro.core.mod_block import decode_route_select  # noqa: F401
+# repro.core.mod_block is a deprecated back-compat shim over this engine;
+# import it explicitly if you need the historical entry points.

@@ -15,7 +15,7 @@ factors into three pieces:
    - ``token_topk`` (train / prefill): per-sequence expert-choice top-k over
      the time axis (paper §3.2); ``idx`` is (B, k).
    - ``batch_capacity`` (decode): the causal score (trained predictor or
-     router sigmoid) ranks *sequences*, and the top ``ceil(ratio·B)`` run
+     router sigmoid) ranks *sequences*, and the top ``round(ratio·B)`` run
      the block this step; ``idx`` is (kb,). Shapes stay static, so the FLOP
      saving is realizable in batched serving (DESIGN.md §Routing engine).
 
@@ -69,6 +69,10 @@ class RouteDecision(NamedTuple):
               aux-loss target), (B,) bool for batch_capacity.
     logits:   full router logits (B, S) f32 when the decision came from the
               learned router on the full tensor (token_topk); None otherwise.
+    scores:   (B,) f32 causal ranking scores (predictor or router sigmoid
+              logits) for batch_capacity decisions; None for token_topk.
+              Surfaced through ``decode_aux`` so the serving scheduler can
+              co-rank slots with the router (DESIGN.md §Serving engine).
     """
 
     strategy: str
@@ -76,6 +80,7 @@ class RouteDecision(NamedTuple):
     gate: jax.Array
     mask: jax.Array
     logits: Optional[jax.Array] = None
+    scores: Optional[jax.Array] = None
 
 
 # ---------------------------------------------------------------------------
@@ -97,10 +102,18 @@ def decide_tokens(
     return RouteDecision("token_topk", idx, gate, topk_mask, logits)
 
 
+def batch_capacity_k(cfg: ModelConfig, batch: int) -> int:
+    """kb of the batch_capacity strategy: rows routed per decode step,
+    ``max(1, round(ratio·B))``. The single source of truth — the serving
+    scheduler budgets admissions against this same number."""
+    return max(1, int(round(cfg.mod.capacity_ratio * batch)))
+
+
 def decide_batch(
     params: Params,
     x: jax.Array,  # (B, 1, D) — one decode token per sequence
     cfg: ModelConfig,
+    active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
 ) -> RouteDecision:
     """Decode strategy: batch-capacity routing.
 
@@ -108,21 +121,29 @@ def decide_batch(
     (``sampling="predictor"``) or the router's own sigmoid
     (``sampling="aux_loss"`` — r_i is itself causal; only training-time
     *selection* was non-causal). To keep shapes static and realize FLOP
-    savings in batched serving, the top ``ceil(ratio·B)`` scoring sequences
-    in the batch go through the block this step.
+    savings in batched serving, the top ``kb = round(ratio·B)`` scoring
+    sequences in the batch go through the block this step.
+
+    ``active`` marks which batch rows hold live sequences (the serving
+    engine decodes a fixed-shape batch whose free slots carry padding);
+    inactive rows are pushed below every active row in the ranking so
+    padding can never steal routed capacity from a real sequence. Shapes —
+    and therefore the compiled step — are unchanged; kb stays
+    ``round(ratio·B)``.
     """
     B = x.shape[0]
-    kb = max(1, int(round(cfg.mod.capacity_ratio * B)))
+    kb = batch_capacity_k(cfg, B)
     if cfg.mod.sampling == "predictor" and "predictor" in params:
         scores = R.predictor_logits(params["predictor"], x)[:, 0]  # (B,)
     else:
         scores = R.router_logits(params["router"], x)[:, 0]
-    _, idx = jax.lax.top_k(scores, kb)
+    ranking = scores if active is None else jnp.where(active, scores, -jnp.inf)
+    _, idx = jax.lax.top_k(ranking, kb)
     idx = jnp.sort(idx).astype(jnp.int32)
     gate_logits = R.router_logits(params["router"], x)[:, 0]  # causal gate
     gate = R.apply_gate(jnp.take(gate_logits, idx), cfg.mod)
     routed = jnp.zeros((B,), bool).at[idx].set(True)
-    return RouteDecision("batch_capacity", idx, gate, routed)
+    return RouteDecision("batch_capacity", idx, gate, routed, scores=scores)
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +247,20 @@ def routing_aux(
 
 
 def decode_aux(decision: RouteDecision) -> Aux:
-    return {"mod/decode_routed_frac": jnp.mean(decision.mask.astype(jnp.float32))}
+    """Per-step decode telemetry.
+
+    Scalars stay scalar; the per-sequence entries keep a trailing (B,) axis
+    that the family decode steps preserve (they mean aux only over the
+    layer-group axis) so the serving scheduler can co-rank live slots with
+    the ``batch_capacity`` router.
+    """
+    aux: Aux = {
+        "mod/decode_routed_frac": jnp.mean(decision.mask.astype(jnp.float32)),
+        "mod/decode_routed": decision.mask.astype(jnp.float32),  # (B,)
+    }
+    if decision.scores is not None:
+        aux["mod/decode_scores"] = decision.scores.astype(jnp.float32)  # (B,)
+    return aux
 
 
 # ---------------------------------------------------------------------------
@@ -264,6 +298,7 @@ def route_decode(
     block_fn: DecodeBlockFn,
     cfg: ModelConfig,
     positions: Optional[jax.Array] = None,
+    active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
 ) -> Tuple[jax.Array, Params, Aux]:
     """Decode-time routed block: batch-capacity decision + routed execution.
 
@@ -271,8 +306,10 @@ def route_decode(
     (kb, 1, D) sub-batch, scatters both the gated delta and the updated
     caches back. ``block_fn`` receives the decision so call sites can gather
     any extra per-sequence state (e.g. encdec cross-KV) themselves.
+    ``active`` (from the serving engine) demotes padding slots in the
+    batch-capacity ranking — see :func:`decide_batch`.
     """
-    decision = decide_batch(params, x, cfg)
+    decision = decide_batch(params, x, cfg, active)
     caches_sub = gather_batch(decision, caches)
     new_sub: Dict[str, Params] = {}
 

@@ -1,18 +1,21 @@
-"""Batched serving driver: prefill + MoD batch-capacity decode.
+"""Serving driver: continuous-batching MoD decode over a request stream.
 
-Loads a checkpoint if given (otherwise random init), prefills a batch of
-prompts, decodes N tokens with causal predictor routing, and reports
-decode throughput. The decode step is the exact function the
-``decode_*`` dry-run cells lower at 512 chips.
+Loads a checkpoint if given (otherwise random init), then drives the
+continuous-batching engine (``repro.serve``, DESIGN.md §Serving engine):
+requests are submitted on an arrival schedule, admitted into a fixed
+``(B, ctx)`` decode batch as slots free up, prefilled (batched for dense
+families, stepped for SSM/hybrid/enc-dec), and decoded until EOS or their
+token budget. Reports decode throughput, per-request latency percentiles,
+MoD routed fraction, and the pool's KV footprint. The decode step is the
+exact function the ``decode_*`` dry-run cells lower at 512 chips.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mod-paper-60m \
-      --smoke --batch 8 --prompt-len 32 --gen 32
+      --smoke --batch 8 --prompt-len 32 --gen 32 --requests 16
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +25,7 @@ from repro.checkpoint import CheckpointManager
 from repro.config import get_config, smoke_config
 from repro.data.synthetic import SyntheticLM
 from repro.models import api
-from repro.train.serve import make_serve_step
+from repro.serve import Request, ServingEngine
 
 
 def main() -> None:
@@ -30,9 +33,14 @@ def main() -> None:
     ap.add_argument("--arch", default="mod-paper-60m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8, help="decode-batch slots")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32, help="tokens per request")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (default: 2x batch)")
+    ap.add_argument("--arrival-every", type=int, default=0,
+                    help="submit one request every N engine steps (0 = all upfront)")
+    ap.add_argument("--policy", default="mod_aware", choices=["fcfs", "mod_aware"])
     ap.add_argument("--dtype", default="float32")
     args = ap.parse_args()
 
@@ -49,44 +57,41 @@ def main() -> None:
             params = jax.tree.map(jnp.asarray, state["params"])
             print(f"[serve] loaded checkpoint step {step}")
 
+    n_requests = args.requests or 2 * args.batch
     data = SyntheticLM(cfg.vocab, args.prompt_len, seed=7)
-    prompts = jnp.asarray(data.batch(0, args.batch)["tokens"])[:, : args.prompt_len]
+    prompts = np.asarray(data.batch(0, n_requests)["tokens"])[:, : args.prompt_len]
 
     ctx = args.prompt_len + args.gen
-    B = args.batch
-    caches = api.make_caches(cfg, B, ctx)
-    step = jax.jit(make_serve_step(cfg))
+    engine = ServingEngine(
+        params, cfg, batch_size=args.batch, ctx=ctx, policy=args.policy
+    )
 
-    # prefill by stepping (uniform across families)
-    t0 = time.time()
-    tok = prompts[:, :1]
-    for t in range(args.prompt_len):
-        logits, caches, _ = step(params, caches, prompts[:, t : t + 1], jnp.full((B,), t, jnp.int32))
-    jax.block_until_ready(logits)
-    prefill_s = time.time() - t0
+    outputs = engine.run_stream(
+        [Request(tokens=prompts[i], max_new_tokens=args.gen) for i in range(n_requests)],
+        args.arrival_every,
+    )
 
-    out = [prompts]
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    t0 = time.time()
-    routed_fracs = []
-    for i in range(args.gen):
-        out.append(tok)
-        logits, caches, aux = step(params, caches, tok, jnp.full((B,), args.prompt_len + i, jnp.int32))
-        if "mod/decode_routed_frac" in aux:
-            routed_fracs.append(float(aux["mod/decode_routed_frac"]))
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(logits)
-    decode_s = time.time() - t0
-
-    seqs = jnp.concatenate(out, axis=1)
-    print(f"[serve] arch={cfg.name} B={B} prompt={args.prompt_len} gen={args.gen}")
-    print(f"[serve] prefill {args.prompt_len / prefill_s:.1f} tok/s/seq, "
-          f"decode {args.gen / decode_s:.1f} steps/s "
-          f"({B * args.gen / decode_s:.1f} tok/s aggregate)")
-    if routed_fracs:
-        print(f"[serve] MoD decode routed fraction: {np.mean(routed_fracs):.3f} "
-              f"(capacity_ratio={cfg.mod.capacity_ratio})")
-    print(f"[serve] sample continuation: {np.asarray(seqs[0, -10:]).tolist()}")
+    s = engine.stats()
+    lat = np.asarray([o.residency_steps for o in outputs], np.float64)
+    wait = np.asarray([o.queue_steps for o in outputs], np.float64)
+    kv = engine.pool.cache_bytes()
+    print(f"[serve] arch={cfg.name} slots={args.batch} ctx={ctx} "
+          f"requests={len(outputs)} policy={args.policy}")
+    print(f"[serve] {s['steps']:.0f} engine steps in {s['wall_s']:.2f}s: "
+          f"{s['tokens_per_s']:.1f} tok/s aggregate, "
+          f"mean occupancy {s['mean_occupancy']:.2f}/{args.batch}")
+    print(f"[serve] latency (steps): p50={np.percentile(lat, 50):.0f} "
+          f"p95={np.percentile(lat, 95):.0f}; queue wait mean={wait.mean():.1f}")
+    if np.isfinite(s["mean_routed_frac"]):
+        scores = np.asarray([o.mean_score for o in outputs])
+        print(f"[serve] MoD decode routed fraction: {s['mean_routed_frac']:.3f} "
+              f"(capacity_ratio={cfg.mod.capacity_ratio}); "
+              f"per-request router score mean={np.nanmean(scores):.3f} "
+              f"spread={np.nanstd(scores):.3f}; "
+              f"KV pool {kv['total']/2**20:.1f} MiB "
+              f"(mod/full cache ratio {kv['mod_vs_full_ratio']:.2f})")
+    first = min(outputs, key=lambda o: o.uid)
+    print(f"[serve] sample continuation: {first.tokens[-10:].tolist()}")
 
 
 if __name__ == "__main__":

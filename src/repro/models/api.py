@@ -112,16 +112,28 @@ def make_caches(cfg: ModelConfig, batch: int, ctx: int, specs: bool = False) -> 
 
 
 def model_decode(
-    params: Params, caches: Params, cfg: ModelConfig, token: jax.Array, pos: jax.Array
+    params: Params,
+    caches: Params,
+    cfg: ModelConfig,
+    token: jax.Array,
+    pos: jax.Array,
+    active: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Params, Aux]:
+    """One decode step for any family.
+
+    ``active`` is an optional (B,) bool mask of live batch rows; the serving
+    engine passes it so MoD ``batch_capacity`` routing never spends routed
+    slots on padding rows (see ``repro.serve``). When None (single-shot
+    generation, dry-runs) all rows rank equally, as before.
+    """
     if cfg.family in ("dense", "moe", "vlm"):
-        return T.decode_step(params, caches, cfg, token, pos)
+        return T.decode_step(params, caches, cfg, token, pos, active)
     if cfg.family == "ssm":
-        return SL.decode_step(params, caches, cfg, token, pos)
+        return SL.decode_step(params, caches, cfg, token, pos, active)
     if cfg.family == "hybrid":
-        return SL.decode_step_hybrid(params, caches, cfg, token, pos)
+        return SL.decode_step_hybrid(params, caches, cfg, token, pos, active)
     if cfg.family == "encdec":
-        return ED.decode_step(params, caches, cfg, token, pos)
+        return ED.decode_step(params, caches, cfg, token, pos, active)
     raise ValueError(cfg.family)
 
 

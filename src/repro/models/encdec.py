@@ -234,6 +234,7 @@ def decode_step(
     cfg: ModelConfig,
     token: jax.Array,  # (B,1)
     pos: jax.Array,  # (B,)
+    active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
 ) -> Tuple[jax.Array, Params, Aux]:
     x = constrain_batch(embed(params["embed"], token))
     positions = pos[:, None]
@@ -241,6 +242,7 @@ def decode_step(
     def body(h, xs):
         gp, gc = xs
         new_c = {}
+        aux: Aux = {}
         d, sc = _dec_block_decode(gp["full"], h, positions, gc["full"]["self"], gc["full"]["cross"], cfg)
         h = d
         new_c["full"] = {"self": sc, "cross": gc["full"]["cross"]}
@@ -256,11 +258,16 @@ def decode_step(
                 )
                 return d, sc, {}
 
-            h, new_self, _ = ROUT.route_decode(mp, h, mc["self"], block_fn, cfg, positions)
+            h, new_self, a = ROUT.route_decode(
+                mp, h, mc["self"], block_fn, cfg, positions, active
+            )
             new_c["mod"] = {"self": new_self, "cross": mc["cross"]}
-        return constrain_batch(h), new_c
+            aux.update(a)
+        return constrain_batch(h), (new_c, aux)
 
-    x, new_groups = scan_or_loop(body, x, (params["groups"], caches["groups"]), unroll=cfg.unroll_layers)
+    x, (new_groups, aux_stack) = scan_or_loop(body, x, (params["groups"], caches["groups"]), unroll=cfg.unroll_layers)
+    # mean over the layer-group axis only (per-sequence telemetry keeps (B,))
+    aux = jax.tree.map(lambda a: jnp.mean(a, axis=0), aux_stack)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params["embed"], x)[:, 0]
-    return logits, {"groups": new_groups}, {}
+    return logits, {"groups": new_groups}, aux

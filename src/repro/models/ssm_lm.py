@@ -163,6 +163,7 @@ def decode_step(
     cfg: ModelConfig,
     token: jax.Array,  # (B,1)
     pos: jax.Array,  # (B,)
+    active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
 ) -> Tuple[jax.Array, Params, Aux]:
     x = constrain_batch(embed(params["embed"], token))
 
@@ -183,12 +184,15 @@ def decode_step(
                 d, c = ssm_decode_delta(gp["mod"]["block"], h_sub, c_sub)
                 return d, c, {}
 
-            h, new_c["mod"], a = ROUT.route_decode(gp["mod"], h, gc["mod"], block_fn, cfg)
+            h, new_c["mod"], a = ROUT.route_decode(
+                gp["mod"], h, gc["mod"], block_fn, cfg, active=active
+            )
             aux.update(a)
         return constrain_batch(h), (new_c, aux)
 
     x, (new_caches, aux_stack) = scan_or_loop(body, x, (params["groups"], caches["groups"]), unroll=cfg.unroll_layers)
-    aux = jax.tree.map(jnp.mean, aux_stack)
+    # mean over the layer-group axis only (per-sequence telemetry keeps (B,))
+    aux = jax.tree.map(lambda a: jnp.mean(a, axis=0), aux_stack)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params["embed"], x)[:, 0]
     return logits, {"groups": new_caches}, aux
@@ -322,6 +326,7 @@ def decode_step_hybrid(
     cfg: ModelConfig,
     token: jax.Array,
     pos: jax.Array,
+    active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
 ) -> Tuple[jax.Array, Params, Aux]:
     x = embed(params["embed"], token)
     positions = pos[:, None]
@@ -333,6 +338,7 @@ def decode_step_hybrid(
     def inner_body(h, xs):
         gp, gc = xs
         new_c = {}
+        aux: Aux = {}
         d, c = ssm_decode_delta(gp["full"], h, gc["full"])
         h = h + d
         new_c["full"] = c
@@ -341,18 +347,23 @@ def decode_step_hybrid(
                 d, c = ssm_decode_delta(gp["mod"]["block"], h_sub, c_sub)
                 return d, c, {}
 
-            h, new_c["mod"], _ = ROUT.route_decode(gp["mod"], h, gc["mod"], block_fn, cfg)
-        return h, new_c
+            h, new_c["mod"], a = ROUT.route_decode(
+                gp["mod"], h, gc["mod"], block_fn, cfg, active=active
+            )
+            aux.update(a)
+        return h, (new_c, aux)
 
     def outer_body(h, xs):
         seg_params, seg_caches, attn_cache = xs
         h, attn_cache, _ = BLK.block_decode(params["shared_attn"], h, positions, attn_cache, cfg)
-        h, new_seg = scan_or_loop(inner_body, h, (seg_params, seg_caches), unroll=cfg.unroll_layers)
-        return constrain_batch(h), (new_seg, attn_cache)
+        h, (new_seg, aux) = scan_or_loop(inner_body, h, (seg_params, seg_caches), unroll=cfg.unroll_layers)
+        # mean over the within-segment pair axis only
+        return constrain_batch(h), (new_seg, attn_cache, jax.tree.map(lambda a: jnp.mean(a, axis=0), aux))
 
-    x, (new_groups, new_attn) = jax.lax.scan(
+    x, (new_groups, new_attn, aux_stack) = jax.lax.scan(
         outer_body, x, (params["groups"], caches["groups"], caches["attn"])
     )
+    aux = jax.tree.map(lambda a: jnp.mean(a, axis=0), aux_stack)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params["embed"], x)[:, 0]
-    return logits, {"attn": new_attn, "groups": new_groups}, {}
+    return logits, {"attn": new_attn, "groups": new_groups}, aux

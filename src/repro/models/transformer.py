@@ -282,8 +282,8 @@ def prefill(
 # ---------------------------------------------------------------------------
 
 
-def _mod_decode_group(gp, h, positions, cache, cfg):
-    """Batch-capacity MoD decode: top ceil(ratio*B) sequences route through."""
+def _mod_decode_group(gp, h, positions, cache, cfg, active=None):
+    """Batch-capacity MoD decode: top round(ratio*B) sequences route through."""
 
     def block_fn(h_sub, pos_sub, cache_sub, decision):
         delta, c, _ = BLK.block_decode(
@@ -291,7 +291,7 @@ def _mod_decode_group(gp, h, positions, cache, cfg):
         )
         return delta, c, {}
 
-    return ROUT.route_decode(gp, h, cache, block_fn, cfg, positions)
+    return ROUT.route_decode(gp, h, cache, block_fn, cfg, positions, active)
 
 
 def decode_step(
@@ -300,6 +300,7 @@ def decode_step(
     cfg: ModelConfig,
     token: jax.Array,  # (B, 1) int32
     pos: jax.Array,  # (B,) int32 — current absolute position
+    active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
 ) -> Tuple[jax.Array, Params, Aux]:
     """One autoregressive step. Returns (logits (B,V), caches, aux)."""
     x = constrain_batch(embed(params["embed"], token))  # (B,1,D)
@@ -316,14 +317,16 @@ def decode_step(
             h, c, _ = BLK.block_decode(gp["full"], h, positions, gc["full"], cfg)
             new_c["full"] = c
         if "mod" in gp:
-            h, c, a = _mod_decode_group(gp["mod"], h, positions, gc["mod"], cfg)
+            h, c, a = _mod_decode_group(gp["mod"], h, positions, gc["mod"], cfg, active)
             new_c["mod"] = c
             aux.update(a)
         return constrain_batch(h), (new_c, aux)
 
     x, (new_caches, aux_stack) = scan_or_loop(body, x, (params["groups"], caches["groups"]), unroll=cfg.unroll_layers)
     out_caches: Params = {"groups": new_caches}
-    aux = jax.tree.map(jnp.mean, aux_stack)
+    # mean only over the layer-group axis: scalar telemetry stays scalar,
+    # per-sequence entries (decode scores / routed masks) keep their (B,)
+    aux = jax.tree.map(lambda a: jnp.mean(a, axis=0), aux_stack)
     if "tail" in params:
         x, c, _ = BLK.block_decode(params["tail"], x, positions, caches["tail"], cfg)
         out_caches["tail"] = c

@@ -1,0 +1,22 @@
+"""Continuous-batching MoD serving engine.
+
+Public surface:
+
+- :class:`~repro.serve.engine.ServingEngine` — fixed-shape (B, ctx)
+  continuous-batching decode with MoD-aware admission.
+- :class:`~repro.serve.request.Request` / ``RequestOutput`` — job in / out.
+- :class:`~repro.serve.scheduler.Scheduler` — slot admission policies.
+- :class:`~repro.serve.cache.CachePool` — pooled, capacity-sized KV cache.
+
+See DESIGN.md §Serving engine for the architecture.
+"""
+from repro.serve.cache import CachePool  # noqa: F401
+from repro.serve.engine import ServingEngine, routed_capacity  # noqa: F401
+from repro.serve.request import (  # noqa: F401
+    FINISH_EOS,
+    FINISH_LENGTH,
+    Request,
+    RequestOutput,
+    pad_outputs,
+)
+from repro.serve.scheduler import Scheduler, Slot  # noqa: F401

@@ -1,0 +1,454 @@
+"""Continuous-batching serving engine over the MoD routing engine.
+
+The engine drives a single jitted decode step of fixed shape ``(B, 1)``
+against one pooled ``(B, ctx)`` cache (:class:`repro.serve.cache.CachePool`)
+and keeps that batch full by admitting queued requests into slots as other
+requests terminate — the scheduler/slot machinery lives in
+:mod:`repro.serve.scheduler`. Shapes never change after the first step, so
+the decode step compiles exactly once no matter how requests arrive, finish,
+or interleave (asserted in ``tests/test_serve.py``).
+
+Prefill/decode interleaving
+---------------------------
+Two admission paths, chosen per family (``prefill="auto"``):
+
+- **batched prefill** (dense / MoE): the prompt runs through the jitted
+  ``model_prefill`` once (token_topk MoD routing, capacity-sized cache
+  writes), the resulting batch-1 cache is scattered into the slot, and the
+  first new token is sampled from the prefill's last-position logits — the
+  last prompt token is *not* re-decoded.
+- **stepped ingestion** (SSM / hybrid / enc-dec / VLM): the slot feeds one
+  prompt token per engine step through the shared decode step, interleaved
+  with other slots' decode traffic. Ingesting slots compete with decoding
+  slots for the ``batch_capacity`` router's ``kb`` routed rows — which is
+  what the ``mod_aware`` scheduling policy budgets for.
+
+MoD-awareness
+-------------
+Every step the engine passes an ``active`` mask so padding rows never win
+routed capacity (see ``core/routing.decide_batch``), and reads back the
+per-sequence ``mod/decode_scores`` / ``mod/decode_routed`` telemetry that
+``decode_aux`` surfaces — per-request routed fractions land in
+:class:`repro.serve.request.RequestOutput`, and the scheduler uses the
+router's kb as its prefill-admission budget.
+
+Sampling is host-side: greedy argmax, or per-request
+``fold_in(key, token_index)`` categorical sampling — deterministic per
+request regardless of batch composition. The (B, V) logits round-trip to
+host once per step; at smoke scale that is noise, on an accelerator you
+would fold sampling into the step.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.routing import batch_capacity_k
+from repro.models import api
+from repro.serve.cache import CachePool
+from repro.serve.request import (
+    FINISH_EOS,
+    FINISH_LENGTH,
+    Request,
+    RequestOutput,
+    pad_outputs,
+)
+from repro.serve.scheduler import FREE, GENERATE, PREFILL, Scheduler, Slot
+
+# Families whose prompts can run through model_prefill in one shot. VLM is
+# excluded: its prefill path expects pre-merged embeddings + M-RoPE position
+# ids, while stepped decode builds them internally.
+_BATCH_PREFILL_FAMILIES = ("dense", "moe")
+
+# Jitted step/prefill functions shared across engine instances with the same
+# config (ModelConfig is frozen/hashable), so tearing an engine down and
+# building another — per sweep point in benchmarks/serving.py, per call in
+# greedy_generate — reuses compiled executables instead of re-tracing.
+_JIT_CACHE: Dict[Any, Callable] = {}
+
+
+def _cached_jit(kind: str, key: Any, make: Callable[[], Callable]) -> Callable:
+    fn = _JIT_CACHE.get((kind, key))
+    if fn is None:
+        fn = _JIT_CACHE[(kind, key)] = jax.jit(make())
+    return fn
+
+
+def routed_capacity(cfg: ModelConfig, batch_size: int) -> Optional[int]:
+    """kb of the batch_capacity router (core/routing.batch_capacity_k);
+    None when MoD is off."""
+    if not cfg.mod.enabled:
+        return None
+    return batch_capacity_k(cfg, batch_size)
+
+
+class ServingEngine:
+    """Continuous-batching decode over a fixed (batch_size, ctx) pool."""
+
+    def __init__(
+        self,
+        params: Any,
+        cfg: ModelConfig,
+        batch_size: int,
+        ctx: int,
+        policy: str = "mod_aware",
+        prefill: str = "auto",  # "auto" | "batch" | "step"
+    ):
+        if prefill not in ("auto", "batch", "step"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        self.params = params
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.ctx = ctx
+        self.pool = CachePool(cfg, batch_size, ctx)
+        self.scheduler = Scheduler(
+            batch_size, policy, routed_capacity(cfg, batch_size)
+        )
+        self.slots = [Slot(i) for i in range(batch_size)]
+        self.finished: List[RequestOutput] = []
+        self.step_count = 0
+        self.generated_tokens = 0
+        self._routed_frac_sum = 0.0
+        self._routed_frac_steps = 0
+        self._occupancy_sum = 0
+        self._uid = 0
+        self._used_uids: set = set()
+        self._wall_s = 0.0
+
+        self._batch_prefill = (
+            prefill == "batch"
+            or (prefill == "auto" and cfg.family in _BATCH_PREFILL_FAMILIES)
+        )
+        if self._batch_prefill and cfg.family not in _BATCH_PREFILL_FAMILIES:
+            raise ValueError(f"family {cfg.family!r} has no batched prefill")
+
+        # The one decode step every slot shares; jax caches one executable
+        # per shape, and shapes are fixed, so this compiles exactly once
+        # (and is shared by every engine with the same config).
+        self._step_fn = _cached_jit(
+            "step", cfg,
+            lambda: lambda p, c, t, pos, act: api.model_decode(p, c, cfg, t, pos, act),
+        )
+        # Batch-1 prefill; retraced per distinct prompt length only.
+        self._prefill_fn = _cached_jit(
+            "prefill", (cfg, ctx),
+            lambda: lambda p, toks: api.model_prefill(p, cfg, {"tokens": toks}, ctx),
+        )
+        if cfg.family == "encdec":
+            from repro.models import encdec as ED
+
+            self._cross_fn = _cached_jit(
+                "cross", (cfg, ctx),
+                lambda: lambda p, c, e: ED.prefill_cross(p, c, e, cfg),
+            )
+        self._step_signatures0 = self._step_signatures()
+
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its uid. Tokens stream/complete via
+        :meth:`step` / :meth:`run`."""
+        if req.total_len > self.ctx:
+            raise ValueError(
+                f"request needs {req.total_len} positions but engine ctx is {self.ctx}"
+            )
+        if req.uid is None:
+            req.uid = self._uid
+        elif req.uid in self._used_uids:
+            raise ValueError(f"request uid {req.uid} already submitted")
+        self._used_uids.add(req.uid)
+        self._uid = max(self._uid, req.uid) + 1
+        req._submitted_step = self.step_count  # type: ignore[attr-defined]
+        self.scheduler.submit(req)
+        return req.uid
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+
+    def _admit(self) -> None:
+        plans = self.scheduler.plan_admissions(
+            self.slots, stepped_prefill=not self._batch_prefill
+        )
+        for slot, req in plans:
+            self.pool.reset(slot.idx)
+            slot.req = req
+            slot.generated = []
+            slot.admitted_step = self.step_count
+            slot.first_token_step = -1
+            slot.routed_sum, slot.routed_steps = 0.0, 0
+            slot.score, slot.score_sum = float("nan"), 0.0
+            if self.cfg.family == "encdec" and req.enc_emb is not None:
+                sub = self._cross_fn(
+                    self.params, self.pool._template, jnp.asarray(req.enc_emb)[None]
+                )
+                self.pool.write_slot(slot.idx, sub)
+            if self._batch_prefill:
+                logits, sub = self._prefill_fn(
+                    self.params, jnp.asarray(req.tokens)[None]
+                )
+                self.pool.write_slot(slot.idx, sub)
+                slot.pos = req.prompt_len
+                slot.prompt_idx = req.prompt_len
+                # first new token comes from the prefill's last-position
+                # logits — no re-decode of the last prompt token
+                tok = self._sample(req, np.asarray(logits[0, -1]), 0)
+                self._push_token(slot, tok)
+                if slot.req is not None:  # not finished at admission
+                    slot.state = GENERATE
+                    slot.next_token = tok
+            else:
+                slot.state = PREFILL
+                slot.pos = 0
+                slot.prompt_idx = 0
+                slot.next_token = int(req.tokens[0])
+
+    # ------------------------------------------------------------------
+    # Sampling / termination
+    # ------------------------------------------------------------------
+
+    def _sample(self, req: Request, logits_row: np.ndarray, token_index: int) -> int:
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        key = req.key if req.key is not None else jax.random.PRNGKey(req.uid)
+        key = jax.random.fold_in(key, token_index)
+        return int(
+            jax.random.categorical(key, jnp.asarray(logits_row) / req.temperature)
+        )
+
+    def _push_token(self, slot: Slot, tok: int) -> None:
+        """Record a sampled token; finish + free the slot if terminal."""
+        req = slot.req
+        slot.generated.append(tok)
+        self.generated_tokens += 1
+        if slot.first_token_step < 0:
+            slot.first_token_step = self.step_count
+        if req.stream is not None:
+            req.stream(req.uid, tok)
+        if tok == req.eos_id:
+            self._finish(slot, FINISH_EOS)
+        elif len(slot.generated) >= req.max_new_tokens:
+            self._finish(slot, FINISH_LENGTH)
+
+    def _finish(self, slot: Slot, reason: str) -> None:
+        req = slot.req
+        self.finished.append(
+            RequestOutput(
+                uid=req.uid,
+                prompt=np.asarray(req.tokens),
+                tokens=np.asarray(slot.generated, np.int32),
+                finish_reason=reason,
+                submitted_step=getattr(req, "_submitted_step", 0),
+                admitted_step=slot.admitted_step,
+                first_token_step=slot.first_token_step,
+                finished_step=self.step_count,
+                routed_frac=(
+                    slot.routed_sum / slot.routed_steps
+                    if slot.routed_steps
+                    else float("nan")
+                ),
+                mean_score=(
+                    slot.score_sum / slot.routed_steps
+                    if slot.routed_steps
+                    else float("nan")
+                ),
+            )
+        )
+        slot.req = None
+        slot.state = FREE
+        slot.generated = []
+
+    # ------------------------------------------------------------------
+    # Stepping
+    # ------------------------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.scheduler.queue) or any(s.active for s in self.slots)
+
+    def step(self) -> List[RequestOutput]:
+        """Admit + one decode step + per-slot host update.
+
+        Returns the requests that finished during this call.
+        """
+        done_before = len(self.finished)
+        t0 = time.time()
+        self._admit()
+        active_slots = [s for s in self.slots if s.active]
+        if not active_slots:
+            self.step_count += 1
+            self._wall_s += time.time() - t0
+            return self.finished[done_before:]
+
+        B = self.batch_size
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        for s in active_slots:
+            tokens[s.idx, 0] = s.next_token
+            pos[s.idx] = s.pos
+            active[s.idx] = True
+
+        logits, self.pool.caches, aux = self._step_fn(
+            self.params, self.pool.caches, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(active),
+        )
+        logits_np = np.asarray(logits)
+
+        routed = aux.get("mod/decode_routed")
+        scores = aux.get("mod/decode_scores")
+        routed_np = None if routed is None else np.asarray(routed)
+        scores_np = None if scores is None else np.asarray(scores)
+        if "mod/decode_routed_frac" in aux:
+            self._routed_frac_sum += float(aux["mod/decode_routed_frac"])
+            self._routed_frac_steps += 1
+        self._occupancy_sum += len(active_slots)
+
+        for s in active_slots:
+            if routed_np is not None:
+                s.routed_sum += float(routed_np[s.idx])
+                s.routed_steps += 1
+            if scores_np is not None:
+                s.score = float(scores_np[s.idx])
+                s.score_sum += s.score
+            s.pos += 1
+            if s.state == PREFILL:
+                s.prompt_idx += 1
+                if s.prompt_idx < s.req.prompt_len:
+                    s.next_token = int(s.req.tokens[s.prompt_idx])
+                else:
+                    # fed the last prompt token this step: its logits give
+                    # the first generated token
+                    tok = self._sample(s.req, logits_np[s.idx], 0)
+                    self._push_token(s, tok)
+                    if s.req is not None:
+                        s.state = GENERATE
+                        s.next_token = tok
+            else:
+                tok = self._sample(s.req, logits_np[s.idx], len(s.generated))
+                self._push_token(s, tok)
+                if s.req is not None:
+                    s.next_token = tok
+
+        self.step_count += 1
+        self._wall_s += time.time() - t0
+        self.scheduler.check_invariants(self.slots, len(self.finished))
+        return self.finished[done_before:]
+
+    def run(self, max_steps: Optional[int] = None) -> List[RequestOutput]:
+        """Step until queue and slots drain; returns all finished outputs."""
+        budget = max_steps if max_steps is not None else self._step_budget()
+        while self.has_work:
+            if budget <= 0:
+                raise RuntimeError("serving engine exceeded its step budget")
+            self.step()
+            budget -= 1
+        return self.finished
+
+    def run_stream(
+        self, requests: List[Request], arrival_every: int
+    ) -> List[RequestOutput]:
+        """Offered-load helper: submit one request every ``arrival_every``
+        engine steps (<= 0 submits everything upfront) and run to drain.
+        The one arrival-schedule implementation shared by ``launch/serve.py``
+        and ``benchmarks/serving.py``, so their latency numbers agree."""
+        if arrival_every <= 0:
+            for r in requests:
+                self.submit(r)
+            return self.run()
+        budget = 4 * (sum(r.total_len for r in requests) + self.batch_size) + 64
+        outputs: List[RequestOutput] = []
+        submitted = 0
+        while submitted < len(requests) or self.has_work:
+            if budget <= 0:
+                raise RuntimeError("serving engine exceeded its step budget")
+            if submitted < len(requests) and self.step_count % arrival_every == 0:
+                self.submit(requests[submitted])
+                submitted += 1
+            outputs.extend(self.step())
+            budget -= 1
+        return outputs
+
+    def _step_budget(self) -> int:
+        pending = list(self.scheduler.queue) + [
+            s.req for s in self.slots if s.req is not None
+        ]
+        per_req = sum(r.total_len for r in pending)
+        return 4 * (per_req + self.batch_size) + 64
+
+    # ------------------------------------------------------------------
+    # Convenience + telemetry
+    # ------------------------------------------------------------------
+
+    def generate(
+        self,
+        prompts: jax.Array,  # (N, S0)
+        n_tokens: int,
+        temperature: float = 0.0,
+        rng: Optional[jax.Array] = None,
+        eos_id: Optional[int] = None,
+    ) -> jax.Array:
+        """Batch-generate: submit N requests, run to completion, return the
+        (N, S0 + n_tokens) sequences (uid order; early-EOS rows padded)."""
+        prompts = np.asarray(prompts)
+        n, s0 = prompts.shape
+        uids = []
+        for i in range(n):
+            key = None if rng is None else jax.random.fold_in(rng, i)
+            uids.append(
+                self.submit(
+                    Request(
+                        tokens=prompts[i],
+                        max_new_tokens=n_tokens,
+                        temperature=temperature,
+                        key=key,
+                        eos_id=eos_id,
+                    )
+                )
+            )
+        outs = [o for o in self.run() if o.uid in set(uids)]
+        return jnp.asarray(pad_outputs(outs, s0 + n_tokens))
+
+    def _step_signatures(self) -> Optional[int]:
+        try:
+            return self._step_fn._cache_size()
+        except AttributeError:
+            return None
+
+    @property
+    def decode_compilations(self) -> Optional[int]:
+        """Decode-step signatures traced since this engine was built —
+        at most 1 (static shapes; 0 when another engine with the same
+        config and batch size already compiled it). None if jax doesn't
+        expose cache sizes."""
+        now = self._step_signatures()
+        if now is None or self._step_signatures0 is None:
+            return None
+        return now - self._step_signatures0
+
+    def stats(self) -> Dict[str, Any]:
+        steps = max(1, self.step_count)
+        return {
+            "steps": float(self.step_count),
+            "generated_tokens": float(self.generated_tokens),
+            "finished_requests": float(len(self.finished)),
+            "wall_s": self._wall_s,
+            "tokens_per_s": self.generated_tokens / self._wall_s if self._wall_s else 0.0,
+            "mean_occupancy": self._occupancy_sum / steps,
+            "mean_routed_frac": (
+                self._routed_frac_sum / self._routed_frac_steps
+                if self._routed_frac_steps
+                else float("nan")
+            ),
+            "kv_cache_bytes": self.pool.cache_bytes()["total"],
+            # latest per-slot batch_capacity scores (NaN = free / MoD off):
+            # what the router is currently ranking live slots by
+            "slot_scores": [s.score for s in self.slots],
+        }

@@ -1,0 +1,109 @@
+"""Request/response types for the continuous-batching serving engine.
+
+A :class:`Request` is one generation job: a prompt, a token budget, and
+termination/sampling settings. The engine assigns it a slot in the fixed
+``(B, ctx)`` decode batch, streams tokens as they are sampled, and returns
+a :class:`RequestOutput` with the generated tokens plus scheduling/latency
+telemetry (admission wait, time-to-first-token, steps resident).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+# Why a request finished.
+FINISH_EOS = "eos"  # sampled the request's eos_id
+FINISH_LENGTH = "length"  # hit max_new_tokens
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation job submitted to the engine.
+
+    tokens:         prompt token ids, shape (S0,), S0 >= 1.
+    max_new_tokens: decode budget (the eos token, if sampled, counts).
+    eos_id:         stop when this token is sampled (None = run to budget).
+    temperature:    0 = greedy argmax; > 0 = categorical sampling.
+    key:            PRNGKey for sampled decoding. Each emitted token uses
+                    ``fold_in(key, token_index)``, so sampling is
+                    deterministic per request regardless of how the
+                    scheduler interleaves it with other traffic.
+    enc_emb:        encoder-decoder only — precomputed encoder frame
+                    embeddings (S_enc, D) for this request's cross-KV.
+    stream:         optional per-token callback ``(uid, token_id)`` invoked
+                    as each token is sampled.
+    """
+
+    tokens: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    key: Optional[jax.Array] = None
+    enc_emb: Optional[np.ndarray] = None
+    stream: Optional[Callable[[int, int], None]] = None
+    uid: Optional[int] = None  # assigned by the engine at submit()
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size < 1:
+            raise ValueError("prompt must have at least one token")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.size)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """Completed request: generated tokens + scheduling telemetry.
+
+    Step indices count engine steps (one jitted decode step each), so
+    ``finished_step - admitted_step`` is the request's residency and
+    ``admitted_step - submitted_step`` its queue wait.
+    """
+
+    uid: int
+    prompt: np.ndarray
+    tokens: np.ndarray  # generated tokens (includes eos if sampled)
+    finish_reason: str  # FINISH_EOS | FINISH_LENGTH
+    submitted_step: int
+    admitted_step: int
+    first_token_step: int
+    finished_step: int
+    routed_frac: float  # mean MoD routed fraction over this request's steps
+                        # (NaN for MoD-less models)
+    mean_score: float = float("nan")  # mean MoD predictor/router score over
+                                      # the request's steps (the causal
+                                      # signal batch_capacity ranks by)
+
+    @property
+    def full_sequence(self) -> np.ndarray:
+        return np.concatenate([self.prompt, self.tokens])
+
+    @property
+    def queue_steps(self) -> int:
+        return self.admitted_step - self.submitted_step
+
+    @property
+    def residency_steps(self) -> int:
+        return self.finished_step - self.admitted_step
+
+
+def pad_outputs(outputs: List[RequestOutput], total_len: int, pad_id: int = 0) -> np.ndarray:
+    """Stack full sequences (prompt + generated) into a (N, total_len) array,
+    right-padding early-terminated rows with ``pad_id`` (uid order)."""
+    outputs = sorted(outputs, key=lambda o: o.uid)
+    out = np.full((len(outputs), total_len), pad_id, np.int32)
+    for i, o in enumerate(outputs):
+        seq = o.full_sequence[:total_len]
+        out[i, : seq.size] = seq
+    return out

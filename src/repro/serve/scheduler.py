@@ -1,0 +1,121 @@
+"""Slot scheduler for the continuous-batching engine.
+
+The engine owns a fixed array of ``B`` slots (one per decode-batch row).
+The scheduler decides which queued requests enter which free slots at the
+start of each engine step (admission) — eviction is implicit: a slot frees
+the step its request terminates (EOS / token budget).
+
+Policies
+--------
+- ``"fcfs"``: admit the longest-waiting requests into every free slot.
+- ``"mod_aware"`` (default): FCFS order, but admission is co-ranked with
+  the MoD ``batch_capacity`` router instead of fighting it. Each decode
+  step routes exactly ``kb = round(ratio * B)`` batch rows through every
+  routed block, and a slot that is still ingesting its prompt (stepped
+  prefill) competes for those kb routed rows on every one of its prompt's
+  steps. Admitting an unbounded wave of prompt-ingesting slots would let
+  prefill traffic crowd decode traffic out of the routed capacity, which
+  is exactly the batching-pathology Elbayad et al. (2020) observed for
+  adaptive-compute serving. The policy therefore caps *concurrently
+  prefilling* slots at ``kb``: prompts drain through the routed budget at
+  the rate the router can absorb them while already-decoding slots keep
+  their share. Batched-prefill admissions (dense families prefill off the
+  decode path) don't consume decode-step capacity and are never capped.
+
+The scheduler is pure bookkeeping — no jax. Slot state lives here so the
+engine's invariants ("every request is in exactly one of queue / slot /
+finished", "slot count is constant") are checkable in one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.request import Request
+
+FREE = "free"
+PREFILL = "prefill"  # slot is ingesting prompt tokens through the decode step
+GENERATE = "generate"  # slot is sampling new tokens
+
+
+@dataclasses.dataclass
+class Slot:
+    """Per-row bookkeeping for one decode-batch slot."""
+
+    idx: int
+    state: str = FREE
+    req: Optional[Request] = None
+    pos: int = 0  # next absolute position to decode at
+    prompt_idx: int = 0  # next prompt token to feed (stepped prefill)
+    next_token: int = 0  # token to feed at the next engine step
+    generated: List[int] = dataclasses.field(default_factory=list)
+    admitted_step: int = 0
+    first_token_step: int = -1
+    routed_sum: float = 0.0  # accumulated per-step routed indicator
+    routed_steps: int = 0
+    score: float = float("nan")  # latest MoD predictor/router score
+    score_sum: float = 0.0  # accumulated scores (for the request's mean)
+
+    @property
+    def active(self) -> bool:
+        return self.state in (PREFILL, GENERATE)
+
+
+class Scheduler:
+    """Admission queue + policy over a fixed slot array."""
+
+    def __init__(self, n_slots: int, policy: str = "mod_aware",
+                 routed_capacity: Optional[int] = None):
+        if policy not in ("fcfs", "mod_aware"):
+            raise ValueError(f"unknown scheduling policy {policy!r}")
+        self.policy = policy
+        self.n_slots = n_slots
+        # kb of the batch_capacity router; None (MoD off) disables the cap
+        self.routed_capacity = routed_capacity
+        self.queue: Deque[Request] = deque()
+        self.submitted = 0
+        self.admitted = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        self.submitted += 1
+
+    def plan_admissions(
+        self, slots: List[Slot], stepped_prefill: bool
+    ) -> List[Tuple[Slot, Request]]:
+        """Pick (slot, request) pairs to admit this step.
+
+        ``stepped_prefill`` tells the policy whether admitted prompts will
+        be ingested through the shared decode step (and therefore compete
+        for MoD routed capacity) or prefilled off-path in one shot.
+        """
+        free = [s for s in slots if s.state == FREE]
+        plans: List[Tuple[Slot, Request]] = []
+        if self.policy == "mod_aware" and stepped_prefill and self.routed_capacity:
+            budget = self.routed_capacity - sum(1 for s in slots if s.state == PREFILL)
+        else:
+            budget = len(free)
+        for slot in free:
+            if not self.queue or budget <= 0:
+                break
+            plans.append((slot, self.queue.popleft()))
+            budget -= 1
+        self.admitted += len(plans)
+        return plans
+
+    def check_invariants(self, slots: List[Slot], finished: int) -> None:
+        """Every submitted request is in exactly one place; no slot leaks."""
+        occupied = sum(1 for s in slots if s.active)
+        assert len(slots) == self.n_slots, (len(slots), self.n_slots)
+        assert self.admitted == occupied + finished, (
+            self.admitted, occupied, finished)
+        assert self.submitted == len(self.queue) + self.admitted, (
+            self.submitted, len(self.queue), self.admitted)
+        for s in slots:
+            if s.state == FREE:
+                assert s.req is None, f"free slot {s.idx} still holds a request"
+            else:
+                assert s.req is not None, f"active slot {s.idx} has no request"

@@ -1,26 +1,39 @@
-"""Serving: prefill + batched decode with MoD batch-capacity routing.
+"""Serving entry points: the jit-able decode step + batch generation.
 
-``make_serve_step`` returns the jit-able one-token step used by the decode
-dry-run cells and the sampling example. Every family's decode step routes
-through the engine in ``core/routing.py``: its ``batch_capacity`` strategy
-decides causally (via the trained predictor or the router sigmoid) and only
-the top ``ratio*B`` scoring sequences run the block — static shapes, real
-FLOP savings (DESIGN.md §Routing engine). The dispatch backend is
+``make_serve_step`` returns the one-token step used by the decode dry-run
+cells and the sampling example. Every family's decode step routes through
+the engine in ``core/routing.py``: its ``batch_capacity`` strategy decides
+causally (via the trained predictor or the router sigmoid) and only the top
+``ratio*B`` scoring sequences run the block — static shapes, real FLOP
+savings (DESIGN.md §Routing engine). The dispatch backend is
 ``cfg.mod.backend`` ("xla" | "pallas"); use
 :func:`repro.config.with_mod_backend` to switch a config for serving.
+
+``greedy_generate`` is a thin single-batch client of the continuous-
+batching engine (``repro.serve``, DESIGN.md §Serving engine): it admits the
+whole prompt batch at once and runs the engine to completion. That gives it
+the engine's properties for free — one jitted decode step hoisted across
+the whole generation (SSM/hybrid/enc-dec prompts are ingested through the
+same compiled step instead of re-running an un-jitted ``model_decode`` per
+prompt token), and dense-family prompts prefill in one shot with the first
+new token sampled from the prefill's last-position logits (the last prompt
+token is not decoded twice).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import api
+from repro.serve.engine import ServingEngine
 
 
 def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One-token decode step, ``(params, caches, token, pos) -> (logits,
+    caches, aux)`` — the function the ``decode_*`` dry-run cells lower."""
+
     def serve_step(params, caches, token, pos):
         logits, caches, aux = api.model_decode(params, caches, cfg, token, pos)
         return logits, caches, aux
@@ -37,35 +50,14 @@ def greedy_generate(
     temperature: float = 0.0,
     rng: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Autoregressive generation (prefill + decode loop)."""
-    B, S0 = prompt.shape
-    ctx = ctx or (S0 + n_tokens)
-    if cfg.family in ("dense", "moe", "vlm"):
-        _, caches = api.model_prefill(params, cfg, {"tokens": prompt}, ctx)
-        last = prompt[:, -1:]
-        pos0 = S0 - 1
-        # prefill wrote all S0 tokens; re-decode the last token's logits
-    else:
-        # SSM/hybrid/encdec: build cache by stepping through the prompt
-        caches = api.make_caches(cfg, B, ctx)
-        for t in range(S0 - 1):
-            _, caches, _ = api.model_decode(
-                params, caches, cfg, prompt[:, t : t + 1], jnp.full((B,), t, jnp.int32)
-            )
-        last = prompt[:, -1:]
-        pos0 = S0 - 1
+    """Autoregressive generation: returns (B, S0 + n_tokens) token ids.
 
-    step = jax.jit(make_serve_step(cfg))
-    out = [prompt]
-    tok = last
-    key = rng if rng is not None else jax.random.PRNGKey(0)
-    for i in range(n_tokens):
-        pos = jnp.full((B,), pos0 + i, jnp.int32)
-        logits, caches, _ = step(params, caches, tok, pos)
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    Single-batch client of :class:`repro.serve.engine.ServingEngine`: all B
+    prompts are admitted together into a B-slot engine and run to their full
+    token budget. With ``temperature > 0``, each row samples with
+    ``fold_in(rng, row_index)`` folded per emitted token, so a row's sample
+    path is independent of the others.
+    """
+    B, S0 = prompt.shape
+    engine = ServingEngine(params, cfg, batch_size=B, ctx=ctx or (S0 + n_tokens))
+    return engine.generate(prompt, n_tokens, temperature=temperature, rng=rng)
