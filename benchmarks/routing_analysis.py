@@ -7,14 +7,19 @@ Checks the paper's two observations:
   - routing decisions are token-dependent (some tokens engage many blocks,
     others none — we report the across-token variance of blocks-engaged).
 
-Also measures the routed-dispatch cost of the two `core/routing.py`
-backends ("xla" vs "pallas" fused gather/scatter) so the kernel's benefit
-is a number in the log, not an assertion.
+Also measures the routed-dispatch cost of the three `core/routing.py`
+backends ("xla" | "pallas" | "pallas_fused") so the kernels' benefit is a
+number in the log, not an assertion: per-backend wall-clock of the
+dispatch round trip / the full routed block, plus the analytic HBM
+round-trip accounting (standalone dispatch passes over the (B, S, D)
+residual stream) that `scripts/check_perf.py` gates on.
 
   PYTHONPATH=src python -m benchmarks.run --quick --only routing
+  PYTHONPATH=src python -m benchmarks.routing_analysis --backend pallas_fused
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, List
 
@@ -25,6 +30,18 @@ import numpy as np
 from benchmarks.common import tiny_config, train_bench
 from repro.config import with_mod_backend
 from repro.core import routing as ROUT
+
+DISPATCH_BACKENDS = ("xla", "pallas", "pallas_fused")
+
+# Analytic dispatch-attributable HBM traffic, in traversals ("round trips")
+# of the full (B, S, D) residual stream per routed block (DESIGN.md
+# §Backend selection). xla/pallas both run two standalone dispatch passes:
+# the gather reads the stream once; the scatter reads it and writes it.
+# pallas_fused runs zero standalone passes — the gather rides the
+# routed-attention kernel's input read and only the routed-MLP epilogue's
+# combined read+write pass remains dispatch-attributable.
+DISPATCH_ROUND_TRIPS = {"xla": 3, "pallas": 3, "pallas_fused": 1}
+STANDALONE_DISPATCH_CELLS = {"xla": 2, "pallas": 2, "pallas_fused": 0}
 
 
 def run(steps: int = 150, backend: str = "xla") -> Dict[str, float]:
@@ -79,18 +96,35 @@ def dispatch_bench(
     ratio: float = 0.125,
     iters: int = 20,
     dtype=jnp.float32,
+    block_iters: int = 5,
 ) -> Dict[str, float]:
-    """Wall-clock of one gather + gated scatter-add round trip per backend.
+    """Dispatch cost of the three routed-execution backends.
 
-    Measures the dispatch/combine halves of `execute_routed` in isolation
-    (identity block) so the xla-vs-pallas comparison is not washed out by
-    block FLOPs. Note: on this CPU container the pallas kernels run in
-    interpret mode — the number that matters for the roofline is the TPU
-    one; this still catches regressions and orders of magnitude.
+    Two measurements plus one analytic accounting per backend:
+
+    - ``dispatch_{xla,pallas}_us`` — wall-clock of one standalone gather +
+      gated scatter-add round trip (identity block), the cells these two
+      backends pay around every routed block. ``pallas_fused`` has no
+      standalone dispatch to time — that's the point — so it has no cell
+      here.
+    - ``block_{backend}_us`` — wall-clock of one full routed transformer
+      block through ``execute_routed`` (decision held fixed), the
+      apples-to-apples end-to-end comparison that includes the fused path.
+    - ``round_trips_{backend}`` / ``standalone_cells_{backend}`` — the
+      analytic (B, S, D)-stream HBM accounting (DISPATCH_ROUND_TRIPS):
+      structural, deterministic, gated by scripts/check_perf.py.
+
+    Note: on this CPU container the pallas kernels run in interpret mode —
+    the numbers that matter for the roofline are the TPU ones; this still
+    catches regressions and orders of magnitude.
     """
+    from repro.core import router as R
+    from repro.models import blocks as BLK
+    from repro.config import AttentionConfig, MoDConfig, ModelConfig
+
     k = max(1, int(round(ratio * S)))
     key = jax.random.PRNGKey(0)
-    ks = jax.random.split(key, 3)
+    ks = jax.random.split(key, 4)
     x = jax.random.normal(ks[0], (B, S, D)).astype(dtype)
     logits = jax.random.normal(ks[1], (B, S))
     _, idx = jax.lax.top_k(logits, k)
@@ -104,30 +138,75 @@ def dispatch_bench(
 
         return jax.jit(f)
 
-    out: Dict[str, float] = {}
-    for backend in ("xla", "pallas"):
-        f = round_trip(backend)
+    def timed(f, x, n):
         jax.block_until_ready(f(x))  # compile
         t0 = time.perf_counter()
-        for _ in range(iters):
+        for _ in range(n):
             y = f(x)
         jax.block_until_ready(y)
-        out[f"dispatch_{backend}_us"] = 1e6 * (time.perf_counter() - t0) / iters
+        return 1e6 * (time.perf_counter() - t0) / n
+
+    out: Dict[str, float] = {}
+    for backend in ("xla", "pallas"):
+        out[f"dispatch_{backend}_us"] = timed(round_trip(backend), x, iters)
+
+    # end-to-end routed block (same decision for every backend)
+    cfg = ModelConfig(
+        name="dispatch-bench", d_model=D, d_ff=2 * D, max_seq_len=S,
+        dtype="float32" if dtype == jnp.float32 else "bfloat16",
+        attn=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=D // 4),
+        mod=MoDConfig(enabled=True, capacity_ratio=ratio, round_to=1),
+    )
+    params = {"block": BLK.init_block(ks[3], cfg), "router": R.init_router(ks[3], cfg)}
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    decision = ROUT.decide_tokens(params, x, cfg)
+
+    def routed_block(backend):
+        bcfg = with_mod_backend(cfg, backend)
+
+        def f(x):
+            def delta_fn(xs, ps):
+                return BLK.block_delta(params["block"], xs, ps, bcfg)
+
+            fused_fn = None
+            if BLK.fused_dispatch_supported(bcfg):
+                def fused_fn(xf, d, pf):
+                    return BLK.block_delta_fused(params["block"], xf, pf, d, bcfg)
+
+            out, _ = ROUT.execute_routed(decision, x, delta_fn, bcfg, pos, fused_fn)
+            return out
+
+        return jax.jit(f)
+
+    for backend in DISPATCH_BACKENDS:
+        out[f"block_{backend}_us"] = timed(routed_block(backend), x, block_iters)
+        out[f"round_trips_{backend}"] = float(DISPATCH_ROUND_TRIPS[backend])
+        out[f"standalone_cells_{backend}"] = float(STANDALONE_DISPATCH_CELLS[backend])
     out["dispatch_shape"] = float(B * S * D)
     return out
 
 
-def main() -> List[str]:
-    m = run()
+def main(backend: str = "xla") -> List[str]:
+    m = run(backend=backend)
     d = dispatch_bench()
-    return [
+    lines = [
         f"routing/frac_sigmoid_above_half,{m['frac_sigmoid_above_half']:.4f},target~{m['capacity_ratio']}",
         f"routing/blocks_engaged_mean,{m['blocks_engaged_mean']:.3f},of {m['n_routed_blocks']}",
         f"routing/blocks_engaged_std,{m['blocks_engaged_std']:.3f},token-dependence",
         f"routing/dispatch_xla_us,{d['dispatch_xla_us']:.1f},gather+scatter round trip",
         f"routing/dispatch_pallas_us,{d['dispatch_pallas_us']:.1f},interpret-mode on CPU",
     ]
+    for b in DISPATCH_BACKENDS:
+        lines.append(
+            f"routing/block_{b}_us,{d[f'block_{b}_us']:.1f},"
+            f"routed block e2e; {int(d[f'round_trips_{b}'])} stream round trips"
+        )
+    return lines
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="xla", choices=list(DISPATCH_BACKENDS),
+                    help="routed-dispatch backend for the trained-model analysis")
+    args = ap.parse_args()
+    print("\n".join(main(backend=args.backend)))

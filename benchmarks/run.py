@@ -4,19 +4,72 @@ Prints ``name,value,derived`` CSV lines. The heavyweight roofline analysis
 (512-device compiles) lives in ``benchmarks/roofline.py`` and is invoked
 separately; ``--quick`` trims training steps for CI-speed runs.
 
+``--snapshot BENCH_<pr>.json`` records the perf trajectory: after the
+sections run, the ``D:mod-dispatch`` cells are (re)measured into
+``results/perf_log.json`` and the D + S:serving cells are copied into the
+named snapshot file, which gets committed and gated by
+``scripts/check_perf.py`` in CI (tolerance comparison against the previous
+``BENCH_*.json`` plus the structural fused-dispatch claims).
+
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only isoflop,...]
+  PYTHONPATH=src python -m benchmarks.run --quick --only serving \
+      --snapshot BENCH_3.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+SNAPSHOT_CELLS = ("D:mod-dispatch", "S:serving")
+
+
+def refresh_dispatch_cells(out: str) -> None:
+    """(Re)measure the D:mod-dispatch cells into the perf log."""
+    from benchmarks.perf_iterations import EXPERIMENTS, measure_dispatch
+
+    log = []
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                log = [e for e in json.load(f)
+                       if not str(e.get("cell", "")).startswith("D:mod-dispatch")]
+        except (json.JSONDecodeError, OSError):
+            log = []
+    for cell, name, hypothesis, kw in EXPERIMENTS:
+        if not cell.startswith("D:mod-dispatch"):
+            continue
+        res = measure_dispatch(kw["dispatch_backend"])
+        log.append({"cell": cell, "name": name, "hypothesis": hypothesis, **res})
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(log, f, indent=1)
+
+
+def write_snapshot(snapshot: str, perf_log: str) -> None:
+    with open(perf_log) as f:
+        log = json.load(f)
+    cells = [e for e in log
+             if any(str(e.get("cell", "")).startswith(c) for c in SNAPSHOT_CELLS)]
+    with open(snapshot, "w") as f:
+        json.dump({
+            "source": perf_log,
+            "command": "PYTHONPATH=src python -m benchmarks.run --quick "
+                       f"--only serving --snapshot {os.path.basename(snapshot)}",
+            "cells": cells,
+        }, f, indent=1)
+    print(f"_meta/snapshot,{len(cells)},{snapshot}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer steps (smoke)")
     ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--snapshot", default=None, metavar="BENCH_<pr>.json",
+                    help="snapshot D:mod-dispatch + S:serving perf cells")
+    ap.add_argument("--perf-log", default="results/perf_log.json")
     args = ap.parse_args()
 
     if args.quick:
@@ -32,7 +85,7 @@ def main() -> None:
         "routing": lambda: __import__("benchmarks.routing_analysis", fromlist=["main"]).main(),
         "sampling": lambda: __import__("benchmarks.sampling", fromlist=["main"]).main(),
         "serving": lambda: __import__("benchmarks.serving", fromlist=["main"]).main(
-            smoke=args.quick
+            smoke=args.quick, out=args.perf_log
         ),
         "mode": lambda: __import__("benchmarks.mode", fromlist=["main"]).main(),
     }
@@ -50,6 +103,9 @@ def main() -> None:
             ok = False
             print(f"_error/{name},{type(e).__name__},{str(e)[:120]}")
         sys.stdout.flush()
+    if args.snapshot:
+        refresh_dispatch_cells(args.perf_log)
+        write_snapshot(args.snapshot, args.perf_log)
     if not ok:
         sys.exit(1)
 

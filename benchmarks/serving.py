@@ -32,6 +32,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import tiny_config
+from repro.config import with_mod_backend
 from repro.models import api
 from repro.serve import Request, ServingEngine
 from repro.train.serve import greedy_generate
@@ -107,11 +108,11 @@ def check_token_identity(cfg, params, slots, prompt_len, gen, requests) -> None:
             assert np.array_equal(outs[i].full_sequence, one[0]), f"churn mismatch req {i}"
 
 
-def run(smoke: bool = False) -> List[Dict]:
+def run(smoke: bool = False, backend: str = "xla") -> List[Dict]:
     p = dict(SMOKE if smoke else FULL)
     arrivals = p.pop("arrivals")
     models = {
-        "mod": tiny_config(mod=True),
+        "mod": with_mod_backend(tiny_config(mod=True), backend),
         "dense": tiny_config(mod=False),  # equal-size baseline
     }
     rows: List[Dict] = []
@@ -121,7 +122,8 @@ def run(smoke: bool = False) -> List[Dict]:
         warmup(cfg, params, p["slots"], p["prompt_len"], p["gen"])
         for arrival in arrivals:
             m = serve_sweep(cfg, params, arrival_every=arrival, **p)
-            rows.append({"model": name, "arrival_every": arrival, **p, **m})
+            rows.append({"model": name, "backend": backend, "arrival_every": arrival,
+                         **p, **m})
     return rows
 
 
@@ -140,6 +142,7 @@ def log_perf(rows: List[Dict], out: str) -> None:
         log.append({
             "cell": "S:serving",
             "name": f"{r['model']}-{load}",
+            "backend": r.get("backend", "xla"),
             "hypothesis": "MoD decode steps faster than the equal-size dense "
                           "model under continuous batching (paper Fig. 6); "
                           "routed fraction tracks round(ratio*B)/B.",
@@ -155,8 +158,10 @@ def log_perf(rows: List[Dict], out: str) -> None:
         json.dump(log, f, indent=1)
 
 
-def main(smoke: bool = False, out: str = "results/perf_log.json") -> List[str]:
-    rows = run(smoke=smoke)
+def main(
+    smoke: bool = False, out: str = "results/perf_log.json", backend: str = "xla"
+) -> List[str]:
+    rows = run(smoke=smoke, backend=backend)
     log_perf(rows, out)
     lines = []
     for r in rows:
@@ -185,5 +190,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="results/perf_log.json")
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "pallas_fused"],
+                    help="MoD dispatch backend for the mod model's sweeps")
     a = ap.parse_args()
-    print("\n".join(main(smoke=a.smoke, out=a.out)))
+    print("\n".join(main(smoke=a.smoke, out=a.out, backend=a.backend)))

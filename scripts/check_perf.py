@@ -1,0 +1,181 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over committed BENCH_<pr>.json snapshots.
+
+``benchmarks/run.py --snapshot BENCH_<pr>.json`` records the
+``D:mod-dispatch`` and ``S:serving`` cells of ``results/perf_log.json``
+into a committed snapshot; this script is the CI gate over them:
+
+1. **Structure** — the current snapshot must carry all three
+   ``D:mod-dispatch`` backends (xla | pallas | pallas_fused) and at least
+   one ``S:serving`` cell.
+2. **Fused-dispatch claim** (deterministic, the acceptance criterion of
+   the pallas_fused backend) — ``pallas_fused`` must report strictly fewer
+   HBM round trips of the (B, S, D) residual stream than both other
+   backends, and zero standalone gather/scatter cells.
+3. **Tolerance vs the previous snapshot** — wall-clock cells
+   (``dispatch_us``/``block_us``, serving ``tokens_per_s`` /
+   ``latency_p95_steps``) may not regress beyond ``--tolerance``
+   (default 0.5: CPU wall-clocks are noisy; the structural counts are the
+   hard gate). First snapshot -> comparison is skipped.
+
+  python scripts/check_perf.py                 # discover BENCH_*.json
+  python scripts/check_perf.py --tolerance 0.3
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+DISPATCH_CELL = "D:mod-dispatch"
+SERVING_CELL = "S:serving"
+BACKENDS = ("xla", "pallas", "pallas_fused")
+
+# metric -> direction ("min": larger is a regression; "max": smaller is)
+WALL_CLOCK_METRICS = {
+    "dispatch_us": "min",
+    "block_us": "min",
+    "tokens_per_s": "max",
+    "latency_p95_steps": "min",
+}
+
+
+def discover_snapshots(root: str) -> List[Tuple[int, str]]:
+    out = []
+    for path in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(path))
+        if m:
+            out.append((int(m.group(1)), path))
+    return sorted(out)
+
+
+def load_cells(path: str) -> List[Dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return data["cells"] if isinstance(data, dict) else data
+
+
+def cell_index(cells: List[Dict]) -> Dict[Tuple[str, str], Dict]:
+    return {(str(e.get("cell", "")), str(e.get("name", ""))): e for e in cells}
+
+
+def check_structure(cells: List[Dict]) -> List[str]:
+    errors = []
+    idx = cell_index(cells)
+    for b in BACKENDS:
+        if (DISPATCH_CELL, b) not in idx:
+            errors.append(f"missing {DISPATCH_CELL} cell for backend {b!r}")
+    if not any(c == SERVING_CELL for c, _ in idx):
+        errors.append(f"no {SERVING_CELL} cells in snapshot")
+    return errors
+
+
+def check_fused_claim(cells: List[Dict]) -> List[str]:
+    """The dispatch-fusion acceptance criterion, gated structurally."""
+    errors = []
+    idx = cell_index(cells)
+    trips = {}
+    for b in BACKENDS:
+        e = idx.get((DISPATCH_CELL, b), {})
+        if "hbm_round_trips" not in e:
+            errors.append(f"{DISPATCH_CELL}/{b}: no hbm_round_trips recorded")
+            continue
+        trips[b] = float(e["hbm_round_trips"])
+    if "pallas_fused" in trips:
+        others = [trips[b] for b in ("xla", "pallas") if b in trips]
+        if not others or not all(trips["pallas_fused"] < t for t in others):
+            errors.append(
+                f"pallas_fused round trips ({trips.get('pallas_fused')}) not "
+                f"strictly below xla/pallas ({others})"
+            )
+        cells_count = idx[(DISPATCH_CELL, "pallas_fused")].get(
+            "standalone_dispatch_cells"
+        )
+        if cells_count != 0:
+            errors.append(
+                f"pallas_fused reports {cells_count} standalone dispatch "
+                "cells (want 0: gather/scatter must ride the compute kernels)"
+            )
+    return errors
+
+
+def check_regression(
+    cur: List[Dict], prev: List[Dict], tolerance: float
+) -> Tuple[List[str], List[str]]:
+    errors, report = [], []
+    prev_idx = cell_index(prev)
+    for e in cur:
+        key = (str(e.get("cell", "")), str(e.get("name", "")))
+        base = prev_idx.get(key)
+        if base is None:
+            continue
+        for metric, direction in WALL_CLOCK_METRICS.items():
+            if metric not in e or metric not in base:
+                continue
+            now, then = float(e[metric]), float(base[metric])
+            if then <= 0:
+                continue
+            ratio = now / then
+            bad = ratio > 1 + tolerance if direction == "min" else ratio < 1 - tolerance
+            report.append(
+                f"{'FAIL' if bad else ' ok '} {key[0]}/{key[1]} {metric}: "
+                f"{then:.2f} -> {now:.2f} ({ratio:.2f}x)"
+            )
+            if bad:
+                errors.append(report[-1].strip())
+    return errors, report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=None, help="snapshot to validate "
+                    "(default: highest-numbered BENCH_*.json)")
+    ap.add_argument("--previous", default=None, help="baseline snapshot "
+                    "(default: second-highest BENCH_*.json)")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed fractional wall-clock regression")
+    ap.add_argument("--root", default=os.path.join(os.path.dirname(__file__), ".."))
+    args = ap.parse_args()
+
+    root = os.path.abspath(args.root)
+    snaps = discover_snapshots(root)
+    current: Optional[str] = args.current or (snaps[-1][1] if snaps else None)
+    previous: Optional[str] = args.previous or (
+        snaps[-2][1] if len(snaps) > 1 else None
+    )
+    if current is None:
+        print("[check_perf] FAIL: no BENCH_*.json snapshot found "
+              "(run: python -m benchmarks.run --quick --only serving "
+              "--snapshot BENCH_<pr>.json)")
+        return 1
+
+    cells = load_cells(current)
+    errors = check_structure(cells) + check_fused_claim(cells)
+    print(f"[check_perf] current: {os.path.basename(current)} ({len(cells)} cells)")
+
+    if previous is not None:
+        reg_errors, report = check_regression(
+            cells, load_cells(previous), args.tolerance
+        )
+        print(f"[check_perf] baseline: {os.path.basename(previous)} "
+              f"(tolerance {args.tolerance:.0%})")
+        for line in report:
+            print(f"[check_perf]   {line}")
+        errors += reg_errors
+    else:
+        print("[check_perf] no previous snapshot — regression comparison skipped")
+
+    for err in errors:
+        print(f"[check_perf] FAIL: {err}")
+    if not errors:
+        print("[check_perf] OK: structure + fused-dispatch claim"
+              + ("" if previous is None else " + tolerance gate"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 CI: full test suite (includes the routing-backend equivalence
-# tests) on CPU, plus a docs step — markdown link check and the quickstart
-# example as an executable smoke test. Pallas kernels run in interpret
-# mode here; TPU runs use the same entry point without JAX_PLATFORMS.
+# tests) on CPU, plus the perf-regression gate over the committed
+# BENCH_*.json snapshots and a docs step — markdown link check and the
+# quickstart example as an executable smoke test. Pallas kernels (incl.
+# the pallas_fused routed-attention/-MLP kernels) run in interpret mode
+# here; TPU runs use the same entry point without JAX_PLATFORMS.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,6 +13,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
 python -m pytest -x -q tests/test_routing_backends.py
+# fused-dispatch kernels again in isolation (interpret=True on CPU)
+python -m pytest -x -q tests/test_routing_backends.py -k "fused"
+
+# perf: committed BENCH_*.json snapshots must keep the fused-dispatch
+# round-trip claim and stay within tolerance of the previous snapshot
+python scripts/check_perf.py
 
 # docs: README/DESIGN relative links must resolve; quickstart must run
 python scripts/check_docs.py

@@ -41,8 +41,16 @@ class MoDConfig:
     # "learned" | "stochastic" (Gaussian control from the paper's Fig. 3)
     router_type: str = "learned"
     # Dispatch backend for the routed-execution engine (core/routing.py):
-    # "xla" (take_along_axis / at[].add) | "pallas" (fused gather +
-    # gated scatter-add kernels, kernels/routing.py).
+    # "xla" (take_along_axis / at[].add) | "pallas" (standalone fused
+    # gather + gated scatter-add kernels, kernels/routing.py) |
+    # "pallas_fused" (no dispatch passes: gather rides the routed-attention
+    # kernel prologue, gated combine rides the routed-MLP kernel epilogue —
+    # kernels/flash_attention.py + kernels/swiglu.py; non-fusable sites
+    # fall back to the pallas kernels). All three are bit-for-bit equal
+    # while the xla block's attention takes the dense path (capacity^2 <=
+    # models.attention._DENSE_LIMIT, i.e. routed capacity <= 2048 — which
+    # MoD's ratio*S keeps small by construction); above that the xla path
+    # switches to online softmax and agreement is allclose, not bitwise.
     backend: str = "xla"
 
     def capacity(self, seq_len: int) -> int:
@@ -327,7 +335,8 @@ def _ensure_configs_imported() -> None:
 
 
 def with_mod_backend(cfg: ModelConfig, backend: str) -> ModelConfig:
-    """Same model, different routed-dispatch backend ("xla" | "pallas")."""
+    """Same model, different routed-dispatch backend
+    ("xla" | "pallas" | "pallas_fused")."""
     return dataclasses.replace(cfg, mod=dataclasses.replace(cfg.mod, backend=backend))
 
 

@@ -19,5 +19,3 @@ from repro.core.routing import (  # noqa: F401
     route_decode,
     routing_aux,
 )
-# repro.core.mod_block is a deprecated back-compat shim over this engine;
-# import it explicitly if you need the historical entry points.

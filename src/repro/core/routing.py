@@ -19,14 +19,22 @@ factors into three pieces:
      the block this step; ``idx`` is (kb,). Shapes stay static, so the FLOP
      saving is realizable in batched serving (DESIGN.md §Routing engine).
 
-2. :func:`execute_routed` — gather the routed rows, run the block's residual
-   ``block_delta_fn`` on the capacity-sized sub-tensor, and gated
-   scatter-add the result back, via a pluggable backend
+2. :func:`execute_routed` — run the block's residual on the routed rows and
+   gated scatter-add the result back (Eq. 1), via a pluggable backend
    (``MoDConfig.backend``):
 
-   - ``"xla"``: take_along_axis / at[].add — the reference path.
-   - ``"pallas"``: fused row-gather + gated scatter-add kernels
-     (kernels/routing.py) — one VMEM pass, MXU one-hot matmuls.
+   - ``"xla"``: gather (take_along_axis) -> block -> combine (at[].add) —
+     the reference path.
+   - ``"pallas"``: same three passes, but gather/combine are fused one-hot
+     matmul kernels (kernels/routing.py) — one VMEM pass each.
+   - ``"pallas_fused"``: no dispatch passes at all. The block supplies a
+     ``fused_block_fn`` and the dispatch rides *inside* its compute
+     kernels: the gather is the routed-attention kernel's prologue and the
+     gated scatter-add is the routed-MLP kernel's epilogue
+     (kernels/flash_attention.py / kernels/swiglu.py), so the
+     capacity-sized sub-tensor never round-trips through HBM. Blocks that
+     cannot fuse (SSM/enc-dec deltas, generic delta_fns, prefill cache
+     writes) fall back to the ``pallas`` kernels under the same config.
 
    ``batch_capacity`` moves (kb, 1, D) rows — far below kernel-worthy size —
    so it always uses XLA ops regardless of backend.
@@ -55,6 +63,14 @@ Aux = Dict[str, jax.Array]
 # update on the gathered sub-tensor plus any auxiliary outputs (e.g. MoE
 # balance losses when composing MoDE).
 BlockDeltaFn = Callable[[jax.Array, Optional[jax.Array]], Tuple[jax.Array, Aux]]
+
+# fused_block_fn(x_full, decision, positions_full) -> (x_new_full, aux) —
+# the fused-dispatch execution mode ("pallas_fused"): the block receives the
+# FULL residual stream plus the RouteDecision and returns the FULL updated
+# stream; gather and gated combine happen inside its compute kernels.
+FusedBlockFn = Callable[
+    [jax.Array, "RouteDecision", Optional[jax.Array]], Tuple[jax.Array, Aux]
+]
 
 
 class RouteDecision(NamedTuple):
@@ -151,25 +167,30 @@ def decide_batch(
 # ---------------------------------------------------------------------------
 
 
+BACKENDS = ("xla", "pallas", "pallas_fused")
+
+
 def _gather_tokens(x: jax.Array, idx: jax.Array, backend: str) -> jax.Array:
-    if backend == "pallas":
+    # pallas_fused lands here only on its fallback path (no fused_block_fn):
+    # the standalone pallas kernels are then the best available dispatch
+    if backend in ("pallas", "pallas_fused"):
         from repro.kernels.ops import gather_rows_op
 
         return gather_rows_op(x, idx)
     if backend != "xla":
-        raise ValueError(f"unknown MoD backend {backend!r} (want 'xla'|'pallas')")
+        raise ValueError(f"unknown MoD backend {backend!r} (want one of {BACKENDS})")
     return jnp.take_along_axis(x, idx[..., None], axis=1)
 
 
 def _scatter_add_tokens(
     x: jax.Array, idx: jax.Array, delta: jax.Array, gate: jax.Array, backend: str
 ) -> jax.Array:
-    if backend == "pallas":
+    if backend in ("pallas", "pallas_fused"):
         from repro.kernels.ops import scatter_add_rows_op
 
         return scatter_add_rows_op(x, idx, delta, gate)
     if backend != "xla":
-        raise ValueError(f"unknown MoD backend {backend!r} (want 'xla'|'pallas')")
+        raise ValueError(f"unknown MoD backend {backend!r} (want one of {BACKENDS})")
     update = (gate[..., None] * delta.astype(jnp.float32)).astype(x.dtype)
     B = x.shape[0]
     return x.at[jnp.arange(B)[:, None], idx].add(update)
@@ -205,9 +226,18 @@ def execute_routed(
     block_delta_fn: BlockDeltaFn,
     cfg: ModelConfig,
     positions: Optional[jax.Array] = None,
+    fused_block_fn: Optional[FusedBlockFn] = None,
 ) -> Tuple[jax.Array, Aux]:
-    """Gather routed rows -> block residual -> gated scatter-add (Eq. 1)."""
+    """Gather routed rows -> block residual -> gated scatter-add (Eq. 1).
+
+    Under ``backend="pallas_fused"`` with a ``fused_block_fn``, the three
+    passes collapse into the block's own kernels: the fn gets the full
+    stream + decision and returns the full updated stream (gather in the
+    attention prologue, gated combine in the MLP epilogue). Without a
+    ``fused_block_fn`` the pallas dispatch kernels are used instead."""
     if decision.strategy == "token_topk":
+        if cfg.mod.backend == "pallas_fused" and fused_block_fn is not None:
+            return fused_block_fn(x, decision, positions)
         x_sub = _gather_tokens(x, decision.idx, cfg.mod.backend)
         pos_sub = None if positions is None else gather_positions(positions, decision.idx)
         delta, aux = block_delta_fn(x_sub, pos_sub)
@@ -275,10 +305,13 @@ def apply_mod(
     block_delta_fn: BlockDeltaFn,
     cfg: ModelConfig,
     rng: Optional[jax.Array] = None,
+    fused_block_fn: Optional[FusedBlockFn] = None,
 ) -> Tuple[jax.Array, Aux]:
     """Train-time routed block: token top-k decision + routed execution."""
     decision = decide_tokens(params, x, cfg, rng)
-    out, inner_aux = execute_routed(decision, x, block_delta_fn, cfg, positions)
+    out, inner_aux = execute_routed(
+        decision, x, block_delta_fn, cfg, positions, fused_block_fn
+    )
     aux: Aux = dict(inner_aux)
     aux.update(routing_aux(decision, params, x, cfg))
     return out, aux

@@ -1,11 +1,16 @@
 """Pallas TPU kernels for the compute hot-spots.
 
 - flash_attention: causal GQA flash attention with explicit position masks
-  (serves both vanilla blocks and MoD's gathered sub-sequences)
+  (serves both vanilla blocks and MoD's gathered sub-sequences), plus
+  routed_attention — the attention half of the "pallas_fused" backend,
+  with the MoD gather folded into the kernel prologue
 - ssd: Mamba2 SSD intra-chunk kernel (the quadratic hot loop)
-- swiglu: fused SwiGLU MLP (gate/up matmuls + silu + down, one VMEM pass)
-- routing: fused MoD row-gather + gated scatter-add (the "pallas" backend
-  of the routed-execution engine in core/routing.py)
+- swiglu: fused SwiGLU MLP (gate/up matmuls + silu + down, one VMEM pass),
+  plus routed_mlp_scatter — the MLP half of the "pallas_fused" backend,
+  with paper Eq. 1's gated scatter-add as the kernel epilogue
+- routing: standalone fused MoD row-gather + gated scatter-add (the
+  "pallas" backend of the routed-execution engine in core/routing.py, and
+  the fallback for non-fusable "pallas_fused" sites)
 
 Each kernel has a pure-jnp oracle in ref.py and a jit'd dispatching wrapper
 in ops.py. On this CPU container kernels execute via ``interpret=True``;

@@ -55,3 +55,50 @@ def scatter_add_rows_op(x, idx, delta, gate, *, interpret=None):
     """Fused MoD gated scatter-add (core/routing.py "pallas" backend combine)."""
     interp = on_cpu() if interpret is None else interpret
     return _rt.scatter_add_rows(x, idx, delta, gate, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _routed_attention_jit(x, idx, pos_sub, params, spec):
+    return _fa.routed_attention(x, idx, pos_sub, params, spec)
+
+
+def routed_attention_op(
+    x, idx, pos_sub, params, *,
+    n_heads, n_kv_heads, head_dim, scale, causal=True, window=0,
+    rope_theta=10000.0, pos_emb="rope", eps=1e-5, block_k=None, interpret=None,
+):
+    """Fused-dispatch routed attention (the attention half of the
+    "pallas_fused" backend): gather rides the kernel prologue, so the
+    routed sub-tensor is never materialized in HBM. Returns (a_sub, h_sub).
+
+    Jitted even standalone: transcendentals (the RoPE ``theta**exponents``)
+    round differently eager-vs-compiled, and the bit-for-bit contract with
+    the xla backend holds between *compiled* programs. Defaults (on_cpu,
+    ROUTED_BLOCK_K) resolve *before* the jit boundary so the resolved spec
+    is the cache key — a mutated module default can't hit a stale trace."""
+    interp = on_cpu() if interpret is None else interpret
+    spec = _fa.RoutedAttnSpec(
+        n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=head_dim,
+        scale=scale, causal=causal, window=window, rope_theta=rope_theta,
+        pos_emb=pos_emb, eps=eps,
+        block_k=block_k or _fa.ROUTED_BLOCK_K, interpret=interp,
+    )
+    return _routed_attention_jit(x, idx, pos_sub, params, spec)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _routed_mlp_scatter_jit(x, h_sub, a_sub, idx, gate, params, spec):
+    return _sw.routed_mlp_scatter(x, h_sub, a_sub, idx, gate, params, spec)
+
+
+def routed_mlp_scatter_op(
+    x, h_sub, a_sub, idx, gate, params, *,
+    act="silu", eps=1e-5, block_s=256, interpret=None,
+):
+    """Fused-dispatch routed MLP (the MLP half of the "pallas_fused"
+    backend): the gated Eq. 1 scatter-add runs in the kernel epilogue.
+    Jitted with the fully-resolved spec as the cache key (see
+    routed_attention_op)."""
+    interp = on_cpu() if interpret is None else interpret
+    spec = _sw.RoutedMlpSpec(act=act, eps=eps, block_s=block_s, interpret=interp)
+    return _routed_mlp_scatter_jit(x, h_sub, a_sub, idx, gate, params, spec)

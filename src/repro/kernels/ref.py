@@ -95,3 +95,91 @@ def scatter_add_rows_ref(
     gated = gate[..., None].astype(jnp.float32) * delta.astype(jnp.float32)
     upd = jnp.einsum("bks,bkd->bsd", onehot, gated)
     return x + upd.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused routed-block oracles (the "pallas_fused" backend, paper Eq. 1 with
+# the dispatch folded into the compute): direct one-pass formulations built
+# on the one-hot gather/scatter above.
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm_ref(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rope_ref(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = pos[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1).astype(x.dtype)
+
+
+def routed_attention_ref(
+    x: jax.Array,  # (B, S, D) full residual stream
+    idx: jax.Array,  # (B, k)
+    pos_sub: jax.Array,  # (B, k) original positions of routed rows
+    params,  # ln, wq, wk, wv, wo (+ bq, bk, bv)
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    rope_theta: float = 10000.0,
+    pos_emb: str = "rope",
+    eps: float = 1e-5,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the fused routed-attention kernel: gather (one-hot) ->
+    RMSNorm -> QKV -> RoPE -> masked softmax attention -> out-proj.
+    Returns (a_sub, x_sub + a_sub)."""
+    B = x.shape[0]
+    k = idx.shape[1]
+    x_sub = gather_rows_ref(x, idx)
+    hn = _rmsnorm_ref(params["ln"], x_sub, eps)
+    q, kk, vv = hn @ params["wq"], hn @ params["wk"], hn @ params["wv"]
+    if "bq" in params:
+        q, kk, vv = q + params["bq"], kk + params["bk"], vv + params["bv"]
+    q = q.reshape(B, k, n_heads, head_dim)
+    kk = kk.reshape(B, k, n_kv_heads, head_dim)
+    vv = vv.reshape(B, k, n_kv_heads, head_dim)
+    if pos_emb == "rope":
+        q = _rope_ref(q, pos_sub, rope_theta)
+        kk = _rope_ref(kk, jnp.maximum(pos_sub, 0), rope_theta)
+    valid = pos_sub[:, None, :] >= 0
+    if causal:
+        valid = valid & (pos_sub[:, None, :] <= pos_sub[:, :, None])
+    if window > 0:
+        valid = valid & (pos_sub[:, :, None] - pos_sub[:, None, :] < window)
+    g = n_heads // n_kv_heads
+    qg = q.reshape(B, k, n_kv_heads, g, head_dim)
+    s = jnp.einsum("bsngh,btnh->bngst", qg, kk).astype(jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+    o = jnp.einsum("bngst,btnh->bsngh", p, vv).reshape(B, k, n_heads * head_dim)
+    a = o @ params["wo"]
+    return a, x_sub + a
+
+
+def routed_mlp_scatter_ref(
+    x: jax.Array,  # (B, S, D)
+    h_sub: jax.Array,  # (B, k, D)
+    a_sub: jax.Array,  # (B, k, D)
+    idx: jax.Array,  # (B, k)
+    gate: jax.Array,  # (B, k) f32
+    params,  # ln, w_up, w_down (+ w_gate)
+    act: str = "silu",
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Oracle for the fused routed-MLP kernel: (Swi/Ge)GLU on routed rows,
+    then the gated one-hot scatter-add epilogue (Eq. 1 combine)."""
+    hn = _rmsnorm_ref(params["ln"], h_sub, eps)
+    act_fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    up = hn @ params["w_up"]
+    up = act_fn(hn @ params["w_gate"]) * up if "w_gate" in params else act_fn(up)
+    m = up @ params["w_down"]
+    return scatter_add_rows_ref(x, idx, a_sub + m, gate)

@@ -42,12 +42,19 @@ def main() -> None:
                     help="submit one request every N engine steps (0 = all upfront)")
     ap.add_argument("--policy", default="mod_aware", choices=["fcfs", "mod_aware"])
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--backend", default=None,
+                    choices=["xla", "pallas", "pallas_fused"],
+                    help="MoD dispatch backend (default: the arch's own)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
     cfg = dataclasses.replace(cfg, dtype=args.dtype)
+    if args.backend:
+        from repro.config import with_mod_backend
+
+        cfg = with_mod_backend(cfg, args.backend)
 
     params = api.init_model(jax.random.PRNGKey(0), cfg)
     if args.ckpt_dir:

@@ -354,6 +354,41 @@ def self_attention(
     return attend_auto(q, k, v, tp, tp, cfg) @ params["wo"]
 
 
+def routed_self_attention(
+    params: Params,
+    ln1: Params,  # the block's pre-attention RMSNorm params
+    x: jax.Array,  # (B, S, D) FULL residual stream (not a gathered sub-tensor)
+    idx: jax.Array,  # (B, k) routed rows, sorted unique
+    pos_sub: jax.Array,  # (B, k) original positions of routed rows
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused-dispatch routed attention ("pallas_fused" backend).
+
+    The MoD gather rides the kernel prologue: routed rows are one-hot
+    selected out of the full residual stream inside the kernel, then
+    normed, projected, rotated and attended (KV = the same routed
+    capacity-sized set, position-masked) — bit-for-bit equal to
+    ``self_attention(params, rmsnorm(ln1, x_sub), pos_sub, cfg)`` on the
+    gathered sub-tensor, which never exists in HBM here. Returns
+    ``(a_sub, h_sub = x_sub + a_sub)``, both (B, k, D).
+    """
+    from repro.kernels.ops import routed_attention_op
+
+    p = {"ln": ln1["scale"], "wq": params["wq"], "wk": params["wk"],
+         "wv": params["wv"], "wo": params["wo"]}
+    if "bq" in params:
+        p.update(bq=params["bq"], bk=params["bk"], bv=params["bv"])
+    scale = cfg.attn.softmax_scale or 1.0 / (cfg.head_dim**0.5)
+    return routed_attention_op(
+        x, idx, pos_sub, p,
+        n_heads=cfg.attn.n_heads, n_kv_heads=cfg.attn.n_kv_heads,
+        head_dim=cfg.head_dim, scale=float(scale),
+        causal=bool(cfg.attn.causal), window=int(cfg.attn.window),
+        rope_theta=float(cfg.attn.rope_theta), pos_emb=cfg.attn.pos_emb,
+        eps=float(cfg.norm_eps),
+    )
+
+
 def cross_attention(
     params: Params,
     x: jax.Array,

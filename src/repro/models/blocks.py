@@ -1,8 +1,11 @@
-"""Standard pre-norm transformer block (dense or MoE MLP), in three forms:
+"""Standard pre-norm transformer block (dense or MoE MLP), in four forms:
 
-- ``block_apply``   : full residual block on a (sub)sequence
-- ``block_delta``   : the block's residual *contribution* (for MoD Eq. 1)
-- ``block_decode``  : one-token step against a KV cache
+- ``block_apply``       : full residual block on a (sub)sequence
+- ``block_delta``       : the block's residual *contribution* (MoD Eq. 1)
+- ``block_delta_fused`` : Eq. 1 end to end with fused dispatch — gather in
+  the attention kernel prologue, gated combine in the MLP kernel epilogue
+  (the ``pallas_fused`` backend; the gathered sub-tensor never hits HBM)
+- ``block_decode``      : one-token step against a KV cache
 """
 from __future__ import annotations
 
@@ -59,6 +62,50 @@ def block_delta(
     h = x + a
     m, aux = _ffn(p, h, cfg)
     return a + m, aux
+
+
+def fused_dispatch_supported(cfg: ModelConfig) -> bool:
+    """Whether this config's routed blocks can run the fused-dispatch mode.
+
+    M-RoPE (VLM) positions are three-streamed and stay on the pallas
+    fallback; everything else about the standard transformer block fuses.
+    """
+    return cfg.mod.backend == "pallas_fused" and cfg.attn.pos_emb in ("rope", "none")
+
+
+def block_delta_fused(
+    p: Params,
+    x: jax.Array,  # (B, S, D) FULL residual stream
+    positions: jax.Array,  # (B, S)
+    decision,  # core.routing.RouteDecision (token_topk)
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Aux]:
+    """Paper Eq. 1 with fused dispatch: returns the full updated stream.
+
+    Two kernels, no standalone dispatch passes: the routed-attention kernel
+    gathers + norms + attends the routed rows straight out of ``x`` and the
+    routed-MLP kernel's epilogue performs ``x + P @ (gate·(a + m))``. MoE
+    blocks fuse the attention half and fall back to the pallas scatter for
+    the expert combine. Bit-for-bit equal to the xla/pallas backends
+    (tests/test_routing_backends.py).
+    """
+    from repro.core.routing import gather_positions
+
+    idx, gate = decision.idx, decision.gate
+    pos_sub = gather_positions(positions, idx)
+    a_sub, h_sub = A.routed_self_attention(p["attn"], p["ln1"], x, idx, pos_sub, cfg)
+    if "moe" in p:
+        from repro.kernels.ops import scatter_add_rows_op
+
+        m, aux = MOE.moe_mlp(p["moe"], rmsnorm(p["ln2"], h_sub, cfg.norm_eps), cfg)
+        return scatter_add_rows_op(x, idx, a_sub + m, gate), aux
+    from repro.kernels.ops import routed_mlp_scatter_op
+
+    mp = {"ln": p["ln2"]["scale"], **p["mlp"]}
+    out = routed_mlp_scatter_op(
+        x, h_sub, a_sub, idx, gate, mp, act=cfg.act, eps=float(cfg.norm_eps)
+    )
+    return out, {}
 
 
 def block_prefill(

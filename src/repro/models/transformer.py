@@ -129,7 +129,14 @@ def forward(
             def delta_fn(xs, ps):
                 return BLK.block_delta(gp["mod"]["block"], xs, ps, cfg)
 
-            h, a = ROUT.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
+            fused_fn = None
+            if BLK.fused_dispatch_supported(cfg):
+                def fused_fn(xf, decision, pf):
+                    return BLK.block_delta_fused(gp["mod"]["block"], xf, pf, decision, cfg)
+
+            h, a = ROUT.apply_mod(
+                gp["mod"], h, positions, delta_fn, cfg, sub, fused_block_fn=fused_fn
+            )
             aux.update(a)
         return (constrain_batch(h), key), aux
 

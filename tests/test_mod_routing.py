@@ -7,9 +7,9 @@ import numpy as np
 import pytest
 
 from repro.config import MoDConfig
-from repro.core import mod_block as MODB
 from repro.core import router as R
 from repro.core import routing as ROUT
+from repro.kernels import ref as KREF
 from tests.helpers import tiny_cfg
 
 MOD = MoDConfig(enabled=True, capacity_ratio=0.25, round_to=1)
@@ -69,12 +69,16 @@ def test_unrouted_tokens_pass_through_unchanged():
         return jnp.ones_like(xs), {}
 
     out, aux = ROUT.apply_mod(params, x, pos, delta_fn, cfg)
-    # the deprecated mod_block shim must stay equivalent to the engine
-    out_shim, _ = MODB.apply_mod(params, x, pos, delta_fn, cfg)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_shim))
     logits = R.router_logits(params["router"], x)
     k = cfg.mod.capacity(S)
     idx, gate, mask = R.mod_select(logits, k, cfg.mod)
+    # the engine must equal the kernels/ref.py oracle composition:
+    # one-hot gather -> delta -> gated one-hot scatter-add
+    delta_ref, _ = delta_fn(KREF.gather_rows_ref(x, idx), None)
+    out_ref = KREF.scatter_add_rows_ref(
+        x, idx, delta_ref, R.apply_gate(gate, cfg.mod)
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))
     mask_np = np.asarray(mask)
     # unrouted rows identical; routed rows shifted by gate * 1
     np.testing.assert_allclose(np.asarray(out)[~mask_np], np.asarray(x)[~mask_np])
@@ -146,7 +150,7 @@ def test_decode_route_select_causal_and_static():
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (B, 1, cfg.d_model))
     params = {"router": R.init_router(key, cfg), "predictor": R.init_predictor(key, cfg)}
-    idx, gate, routed = MODB.decode_route_select(params, x, cfg)
+    d = ROUT.decide_batch(params, x, cfg)
     kb = max(1, int(round(cfg.mod.capacity_ratio * B)))
-    assert idx.shape == (kb,)
-    assert int(routed.sum()) == kb
+    assert d.idx.shape == (kb,)
+    assert int(d.mask.sum()) == kb
