@@ -186,6 +186,82 @@ def dispatch_bench(
     return out
 
 
+def spmd_dispatch_bench(
+    B: int = 8,
+    S: int = 256,
+    D: int = 256,
+    ratio: float = 0.125,
+    block_iters: int = 5,
+    dtype=jnp.float32,
+) -> Dict[str, float]:
+    """Sharded-dispatch cell: the routed transformer block executed through
+    the SPMD routing path (decision + gather/gated-scatter per data shard
+    inside shard_map — DESIGN.md §SPMD routed execution) on a ("data",
+    "model"=1) mesh over every available device, vs the plain single-device
+    path on identical arrays.
+
+    On the default CI runtime this measures the shard_map machinery at
+    data_shards=1 (the overhead floor); under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` it measures the
+    real per-shard dispatch. ``data_shards`` is recorded so snapshots from
+    the two lanes aren't naively compared.
+    """
+    import time as _time
+
+    from repro.config import AttentionConfig, MoDConfig, ModelConfig
+    from repro.core import router as R
+    from repro.distributed.sharding import shard_ctx
+    from repro.launch.mesh import auto_mesh
+    from repro.models import blocks as BLK
+
+    mesh = auto_mesh(model_axis=1)
+    sctx = shard_ctx(mesh)
+    cfg = ModelConfig(
+        name="spmd-dispatch-bench", d_model=D, d_ff=2 * D, max_seq_len=S,
+        dtype="float32" if dtype == jnp.float32 else "bfloat16",
+        attn=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=D // 4),
+        mod=MoDConfig(enabled=True, capacity_ratio=ratio, round_to=1),
+    )
+    key = jax.random.PRNGKey(0)
+    params = {"block": BLK.init_block(key, cfg), "router": R.init_router(key, cfg)}
+    x = jax.random.normal(key, (B, S, D)).astype(dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def routed_block(spmd):
+        def f(x):
+            decision = ROUT.decide_tokens(params, x, cfg, spmd=spmd)
+
+            def delta_fn(xs, ps):
+                return BLK.block_delta(params["block"], xs, ps, cfg)
+
+            out, _ = ROUT.execute_routed(decision, x, delta_fn, cfg, pos, spmd=spmd)
+            return out
+
+        return jax.jit(f)
+
+    def timed(f, n):
+        jax.block_until_ready(f(x))  # compile
+        t0 = _time.perf_counter()
+        for _ in range(n):
+            y = f(x)
+        jax.block_until_ready(y)
+        return 1e6 * (_time.perf_counter() - t0) / n
+
+    f_plain, f_spmd = routed_block(None), routed_block(sctx)
+    out = {
+        "block_plain_us": timed(f_plain, block_iters),
+        "block_spmd_us": timed(f_spmd, block_iters),
+        "data_shards": float(sctx.data_shards),
+        "dispatch_shape": float(B * S * D),
+    }
+    # equivalence rides along with the measurement (reusing the compiled
+    # executables): the SPMD path must produce the plain path's numbers —
+    # token_topk is per-row, so per-shard execution is exact up to
+    # reduction order
+    out["max_abs_err_vs_plain"] = float(jnp.max(jnp.abs(f_plain(x) - f_spmd(x))))
+    return out
+
+
 def main(backend: str = "xla") -> List[str]:
     m = run(backend=backend)
     d = dispatch_bench()
@@ -201,6 +277,13 @@ def main(backend: str = "xla") -> List[str]:
             f"routing/block_{b}_us,{d[f'block_{b}_us']:.1f},"
             f"routed block e2e; {int(d[f'round_trips_{b}'])} stream round trips"
         )
+    s = spmd_dispatch_bench()
+    lines.append(
+        f"routing/block_spmd_us,{s['block_spmd_us']:.1f},"
+        f"shard-local dispatch over data_shards={int(s['data_shards'])} "
+        f"(plain={s['block_plain_us']:.1f}us, "
+        f"err={s['max_abs_err_vs_plain']:.1e})"
+    )
     return lines
 
 

@@ -1,25 +1,74 @@
 #!/usr/bin/env bash
-# Tier-1 CI: full test suite (includes the routing-backend equivalence
-# tests) on CPU, plus the perf-regression gate over the committed
-# BENCH_*.json snapshots and a docs step — markdown link check and the
-# quickstart example as an executable smoke test. Pallas kernels (incl.
-# the pallas_fused routed-attention/-MLP kernels) run in interpret mode
-# here; TPU runs use the same entry point without JAX_PLATFORMS.
+# Tier-1 CI, in named timed stages shared by local runs and the GitHub
+# workflow lanes (.github/workflows/ci.yml):
+#
+#   unit      full pytest suite on one CPU device (pallas in interpret mode)
+#   backends  routing-backend equivalence tests (incl. fused kernels) in
+#             isolation
+#   spmd      SPMD routed execution on a real 8-device CPU mesh
+#             (XLA_FLAGS=--xla_force_host_platform_device_count=8 in a
+#             fresh process: test_routing_spmd + test_sharding +
+#             test_pipeline)
+#   perf      scripts/check_perf.py gate over committed BENCH_*.json
+#   docs      markdown link check + quickstart as an executable smoke test
+#
+#   scripts/ci.sh            # all stages
+#   scripts/ci.sh --fast     # unit+backends+spmd only (no perf/docs);
+#                            # needs no network and no BENCH snapshots
+#
+# Extra args after the flags are passed to the unit-stage pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS=cpu
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+FAST=0
+if [[ "${1:-}" == "--fast" ]]; then
+  FAST=1
+  shift
+fi
+
+STAGE_T0=0
+stage() {
+  STAGE_T0=$SECONDS
+  echo "=== [ci:$1] ==="
+}
+stage_done() {
+  echo "=== [ci:$1] ok (${2}s) ==="
+}
+
+stage unit
 python -m pytest -x -q "$@"
+stage_done unit $((SECONDS - STAGE_T0))
+
+stage backends
 python -m pytest -x -q tests/test_routing_backends.py
 # fused-dispatch kernels again in isolation (interpret=True on CPU)
 python -m pytest -x -q tests/test_routing_backends.py -k "fused"
+stage_done backends $((SECONDS - STAGE_T0))
 
-# perf: committed BENCH_*.json snapshots must keep the fused-dispatch
-# round-trip claim and stay within tolerance of the previous snapshot
+stage spmd
+# a real 8-device CPU mesh needs the flag set before jax initializes, so
+# this stage always runs in a fresh interpreter
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  python -m pytest -x -q tests/test_routing_spmd.py tests/test_sharding.py \
+  tests/test_pipeline.py
+stage_done spmd $((SECONDS - STAGE_T0))
+
+if [[ "$FAST" == "1" ]]; then
+  echo "=== [ci] --fast: skipping perf+docs stages ==="
+  exit 0
+fi
+
+stage perf
+# committed BENCH_*.json snapshots must keep the fused-dispatch round-trip
+# claim and stay within tolerance of the previous snapshot
 python scripts/check_perf.py
+stage_done perf $((SECONDS - STAGE_T0))
 
-# docs: README/DESIGN relative links must resolve; quickstart must run
+stage docs
+# README/DESIGN relative links must resolve; quickstart must run
 python scripts/check_docs.py
 QUICKSTART_STEPS=10 python examples/quickstart.py
+stage_done docs $((SECONDS - STAGE_T0))

@@ -83,6 +83,34 @@ def mod_select(
     return idx, gate, topk_mask
 
 
+def batch_select(
+    scores: jax.Array,  # (B,) f32 ranking scores (higher = routed first)
+    kb_local: int,
+    data_shards: int = 1,
+) -> jax.Array:
+    """Partitioned batch-capacity selection: top-``kb_local`` *within each of
+    ``data_shards`` contiguous batch groups*.
+
+    With ``data_shards == 1`` this is the plain global top-k. With more, each
+    group selects independently — exactly what each data shard computes
+    locally under SPMD decode (no cross-shard communication, and the cache
+    rows a routed sequence needs stay on its own shard), while the global
+    budget stays ``data_shards · kb_local``. Returns global indices, sorted
+    ascending (group blocks are contiguous, so per-group sorts concatenate
+    into a globally sorted vector).
+    """
+    B = scores.shape[0]
+    if data_shards <= 1:
+        _, idx = jax.lax.top_k(scores, kb_local)
+        return jnp.sort(idx).astype(jnp.int32)
+    assert B % data_shards == 0, (B, data_shards)
+    bl = B // data_shards
+    _, local = jax.lax.top_k(scores.reshape(data_shards, bl), kb_local)  # (d, kb)
+    local = jnp.sort(local, axis=-1)
+    offsets = (jnp.arange(data_shards, dtype=jnp.int32) * bl)[:, None]
+    return (local.astype(jnp.int32) + offsets).reshape(-1)
+
+
 def apply_gate(gate_logits: jax.Array, mod_cfg: MoDConfig) -> jax.Array:
     """Gate value that multiplies the block output.
 

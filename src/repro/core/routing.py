@@ -45,6 +45,14 @@ factors into three pieces:
 New block types plug in as a single ``block_delta_fn`` (plus, for decode, a
 ``block_fn`` that threads caches) instead of re-implementing the
 gather/scatter wiring per family.
+
+SPMD: every entry point takes an optional
+:class:`repro.distributed.sharding.ShardCtx`. With one, the routing
+decision and the dispatch run *per data shard* inside ``shard_map`` (the
+(B, S, D) stream is never resharded; ``batch_capacity`` switches to
+partitioned per-shard selection preserving the global budget) while the
+block's tensor-parallel layouts stay under GSPMD — DESIGN.md §SPMD routed
+execution, equivalence pinned in tests/test_routing_spmd.py.
 """
 from __future__ import annotations
 
@@ -52,9 +60,12 @@ from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.core import router as R
+from repro.distributed.sharding import ShardCtx
 
 Params = Dict[str, jax.Array]
 Aux = Dict[str, jax.Array]
@@ -109,19 +120,62 @@ def decide_tokens(
     x: jax.Array,  # (B, S, D)
     cfg: ModelConfig,
     rng: Optional[jax.Array] = None,
+    spmd: Optional[ShardCtx] = None,
 ) -> RouteDecision:
-    """Train/prefill strategy: expert-choice top-k over the sequence axis."""
+    """Train/prefill strategy: expert-choice top-k over the sequence axis.
+
+    ``token_topk`` selection is per-sequence (top-k over the *time* axis),
+    so its semantics never depend on how the batch is sharded. Under an
+    SPMD :class:`~repro.distributed.sharding.ShardCtx` the router logits +
+    top-k run per-shard inside ``shard_map`` over the data axes — bitwise
+    identical to the single-device decision, with no cross-device movement
+    of the (B, S, D) stream. The stochastic-router control samples one
+    (B, S) Gaussian and stays on the plain path (per-shard RNG streams
+    would change the control's selections).
+    """
     k = cfg.mod.capacity(x.shape[1])
+    if (
+        spmd is not None
+        and spmd.spmd
+        and cfg.mod.router_type != "stochastic"
+        and x.shape[0] % spmd.data_shards == 0
+    ):
+        def _local(rp, xl):
+            logits_l = R.router_logits(rp, xl)
+            idx_l, gate_logits_l, mask_l = R.mod_select(logits_l, k, cfg.mod, None)
+            return idx_l, R.apply_gate(gate_logits_l, cfg.mod), mask_l, logits_l
+
+        # fully-manual region (model axes replicated): top_k lowers to sort,
+        # which this XLA version cannot partition inside a partial-auto
+        # (manual-subgroup) region — and the decision is a per-row scalar op,
+        # so replicating it across the model axis costs nothing.
+        dspec = spmd.data_spec(2)
+        idx, gate, mask, logits = shard_map(
+            _local,
+            mesh=spmd.mesh,
+            in_specs=(jax.tree.map(lambda _: P(), params["router"]), spmd.data_spec(3)),
+            out_specs=(dspec, dspec, dspec, dspec),
+            check_rep=False,
+        )(params["router"], x)
+        return RouteDecision("token_topk", idx, gate, mask, logits)
     logits = R.router_logits(params["router"], x)  # (B, S) f32
     idx, gate_logits, topk_mask = R.mod_select(logits, k, cfg.mod, rng)
     gate = R.apply_gate(gate_logits, cfg.mod)
     return RouteDecision("token_topk", idx, gate, topk_mask, logits)
 
 
-def batch_capacity_k(cfg: ModelConfig, batch: int) -> int:
-    """kb of the batch_capacity strategy: rows routed per decode step,
-    ``max(1, round(ratio·B))``. The single source of truth — the serving
-    scheduler budgets admissions against this same number."""
+def batch_capacity_k(cfg: ModelConfig, batch: int, data_shards: int = 1) -> int:
+    """kb of the batch_capacity strategy: rows routed per decode step.
+
+    ``data_shards == 1``: ``max(1, round(ratio·B))``. With a partitioned
+    batch (SPMD decode), every shard routes
+    ``kb_local = batch_capacity_k(cfg, B // d)`` of its own rows, so the
+    *global* budget is ``d · kb_local``. The single source of truth — the
+    serving scheduler budgets admissions against this same (global) number.
+    """
+    if data_shards > 1:
+        assert batch % data_shards == 0, (batch, data_shards)
+        return data_shards * batch_capacity_k(cfg, batch // data_shards)
     return max(1, int(round(cfg.mod.capacity_ratio * batch)))
 
 
@@ -130,6 +184,7 @@ def decide_batch(
     x: jax.Array,  # (B, 1, D) — one decode token per sequence
     cfg: ModelConfig,
     active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
+    data_shards: int = 1,
 ) -> RouteDecision:
     """Decode strategy: batch-capacity routing.
 
@@ -146,16 +201,29 @@ def decide_batch(
     padding can never steal routed capacity from a real sequence. Shapes —
     and therefore the compiled step — are unchanged; kb stays
     ``round(ratio·B)``.
+
+    ``data_shards > 1`` switches to the *partitioned* selection semantics
+    of SPMD decode: the batch splits into ``data_shards`` contiguous
+    groups (one per data shard) and each group routes its own top
+    ``kb_local = round(ratio·B/d)`` rows. The global budget becomes
+    ``batch_capacity_k(cfg, B, d) = d·kb_local`` — close to, but not
+    always equal to, the unsharded ``round(ratio·B)``: per-shard rounding
+    (and the ≥1-row-per-shard floor) can land above *or* below it. What
+    partitioning buys is that selection needs no cross-group information,
+    which is what keeps a batch-sharded cache pool's gather/scatter
+    shard-local. The same value of ``data_shards``
+    must be used on every device count — it is a *semantic* parameter, not
+    an execution detail (tests/test_routing_spmd.py pins single-device vs
+    8-device equality under the same ``data_shards``).
     """
     B = x.shape[0]
-    kb = batch_capacity_k(cfg, B)
+    kb_local = batch_capacity_k(cfg, B // data_shards if data_shards > 1 else B)
     if cfg.mod.sampling == "predictor" and "predictor" in params:
         scores = R.predictor_logits(params["predictor"], x)[:, 0]  # (B,)
     else:
         scores = R.router_logits(params["router"], x)[:, 0]
     ranking = scores if active is None else jnp.where(active, scores, -jnp.inf)
-    _, idx = jax.lax.top_k(ranking, kb)
-    idx = jnp.sort(idx).astype(jnp.int32)
+    idx = R.batch_select(ranking, kb_local, data_shards)
     gate_logits = R.router_logits(params["router"], x)[:, 0]  # causal gate
     gate = R.apply_gate(jnp.take(gate_logits, idx), cfg.mod)
     routed = jnp.zeros((B,), bool).at[idx].set(True)
@@ -210,6 +278,52 @@ def _take_batch_positions(positions: jax.Array, idx: jax.Array) -> jax.Array:
     return jnp.take(positions, idx, axis=0)
 
 
+def _pos_spec(positions: Optional[jax.Array], spmd: ShardCtx) -> Optional[P]:
+    """Batch-sharded spec for (B, ...) or M-RoPE (3, B, ...) positions."""
+    if positions is None:
+        return None
+    return spmd.data_spec(positions.ndim, batch_axis=1 if positions.ndim == 3 else 0)
+
+
+def spmd_gather_tokens(
+    x: jax.Array, idx: jax.Array, spmd: ShardCtx, backend: str
+) -> jax.Array:
+    """Per-shard token gather: each data shard selects its own rows' routed
+    tokens inside ``shard_map`` — the (B, S, D) stream is never resharded.
+    The region is fully manual (dispatch touches no model-sharded operand:
+    the stream's D dim is replicated over the model axis)."""
+    return shard_map(
+        lambda xl, il: _gather_tokens(xl, il, backend),
+        mesh=spmd.mesh,
+        in_specs=(spmd.data_spec(3), spmd.data_spec(2)),
+        out_specs=spmd.data_spec(3),
+        check_rep=False,
+    )(x, idx)
+
+
+def spmd_scatter_add_tokens(
+    x: jax.Array,
+    idx: jax.Array,
+    delta: jax.Array,
+    gate: jax.Array,
+    spmd: ShardCtx,
+    backend: str,
+) -> jax.Array:
+    """Per-shard gated scatter-add (Eq. 1 combine) inside ``shard_map``."""
+    return shard_map(
+        lambda xl, il, dl, gl: _scatter_add_tokens(xl, il, dl, gl, backend),
+        mesh=spmd.mesh,
+        in_specs=(
+            spmd.data_spec(3),
+            spmd.data_spec(2),
+            spmd.data_spec(3),
+            spmd.data_spec(2),
+        ),
+        out_specs=spmd.data_spec(3),
+        check_rep=False,
+    )(x, idx, delta, gate)
+
+
 def gather_batch(decision: RouteDecision, tree):
     """Gather the routed sequences' slices of a cache pytree (decode)."""
     return jax.tree.map(lambda c: jnp.take(c, decision.idx, axis=0), tree)
@@ -227,6 +341,7 @@ def execute_routed(
     cfg: ModelConfig,
     positions: Optional[jax.Array] = None,
     fused_block_fn: Optional[FusedBlockFn] = None,
+    spmd: Optional[ShardCtx] = None,
 ) -> Tuple[jax.Array, Aux]:
     """Gather routed rows -> block residual -> gated scatter-add (Eq. 1).
 
@@ -234,10 +349,35 @@ def execute_routed(
     passes collapse into the block's own kernels: the fn gets the full
     stream + decision and returns the full updated stream (gather in the
     attention prologue, gated combine in the MLP epilogue). Without a
-    ``fused_block_fn`` the pallas dispatch kernels are used instead."""
+    ``fused_block_fn`` the pallas dispatch kernels are used instead.
+
+    With an SPMD :class:`ShardCtx`, the token_topk gather and gated
+    scatter run per-shard inside ``shard_map`` over the data axes while
+    the block delta itself stays under GSPMD — its tensor-parallel param
+    layouts (QKV on heads, MLP on ffn) keep working unchanged, with psum
+    only where the dense path already implies it. A supplied
+    ``fused_block_fn`` already passed the mesh-compat gate
+    (``models.blocks.fused_dispatch_supported``) and runs per-shard
+    fully-manual; when the mesh splits a fused dim the caller passes None
+    and this falls back to the sharded gather/scatter around the xla (or
+    pallas) block path.
+    """
+    use_spmd = spmd is not None and spmd.spmd and x.shape[0] % spmd.data_shards == 0
     if decision.strategy == "token_topk":
         if cfg.mod.backend == "pallas_fused" and fused_block_fn is not None:
-            return fused_block_fn(x, decision, positions)
+            if not use_spmd:
+                return fused_block_fn(x, decision, positions)
+            return _spmd_fused(decision, x, fused_block_fn, positions, spmd)
+        if use_spmd:
+            x_sub = spmd_gather_tokens(x, decision.idx, spmd, cfg.mod.backend)
+            pos_sub = (
+                None if positions is None else gather_positions(positions, decision.idx)
+            )
+            delta, aux = block_delta_fn(x_sub, pos_sub)
+            out = spmd_scatter_add_tokens(
+                x, decision.idx, delta, decision.gate, spmd, cfg.mod.backend
+            )
+            return out, aux
         x_sub = _gather_tokens(x, decision.idx, cfg.mod.backend)
         pos_sub = None if positions is None else gather_positions(positions, decision.idx)
         delta, aux = block_delta_fn(x_sub, pos_sub)
@@ -250,6 +390,44 @@ def execute_routed(
     delta, aux = block_delta_fn(x_sub, pos_sub)
     update = (decision.gate[:, None, None] * delta.astype(jnp.float32)).astype(x.dtype)
     return x.at[decision.idx].add(update), aux
+
+
+def _spmd_fused(
+    decision: RouteDecision,
+    x: jax.Array,
+    fused_block_fn: FusedBlockFn,
+    positions: Optional[jax.Array],
+    spmd: ShardCtx,
+) -> Tuple[jax.Array, Aux]:
+    """Run a fused-dispatch block per data shard (pure DP: every fused dim
+    is whole on every device, so the kernels execute unchanged on the
+    shard-local (B/d, S, D) stream). Aux leaves come back stacked with a
+    leading shard axis and are averaged — shards hold equal row counts, so
+    the mean-of-means equals the global mean for per-token statistics."""
+    has_logits = decision.logits is not None
+    logits = decision.logits if has_logits else decision.mask
+
+    def _local(xl, il, gl, ml, ll, posl):
+        dl = RouteDecision("token_topk", il, gl, ml, ll if has_logits else None)
+        out_l, aux_l = fused_block_fn(xl, dl, posl)
+        return out_l, jax.tree.map(lambda a: a[None], aux_l)
+
+    dspec = spmd.data_spec(2)
+    aux_struct = jax.eval_shape(lambda: fused_block_fn(x, decision, positions)[1])
+    aux_specs = jax.tree.map(lambda _: P(spmd.data_axes), aux_struct)
+    # fully manual: fused dispatch only runs under pure DP (every fused dim
+    # whole per device — models.blocks.fused_dispatch_supported), so any
+    # model axis present has size 1 and replication over it is free
+    out, aux_stack = shard_map(
+        _local,
+        mesh=spmd.mesh,
+        in_specs=(
+            spmd.data_spec(3), dspec, dspec, dspec, dspec, _pos_spec(positions, spmd),
+        ),
+        out_specs=(spmd.data_spec(3), aux_specs),
+        check_rep=False,
+    )(x, decision.idx, decision.gate, decision.mask, logits, positions)
+    return out, jax.tree.map(lambda a: jnp.mean(a, axis=0), aux_stack)
 
 
 # ---------------------------------------------------------------------------
@@ -306,11 +484,19 @@ def apply_mod(
     cfg: ModelConfig,
     rng: Optional[jax.Array] = None,
     fused_block_fn: Optional[FusedBlockFn] = None,
+    spmd: Optional[ShardCtx] = None,
 ) -> Tuple[jax.Array, Aux]:
-    """Train-time routed block: token top-k decision + routed execution."""
-    decision = decide_tokens(params, x, cfg, rng)
+    """Train-time routed block: token top-k decision + routed execution.
+
+    ``spmd`` (a :class:`ShardCtx`) shards the decision + dispatch per data
+    shard; the aux losses (``routing_aux``) are computed on the global
+    decision outside the shard_map regions, so their values — and therefore
+    the training loss and its gradients — match the single-device path up
+    to the usual cross-device reduction-order tolerance.
+    """
+    decision = decide_tokens(params, x, cfg, rng, spmd)
     out, inner_aux = execute_routed(
-        decision, x, block_delta_fn, cfg, positions, fused_block_fn
+        decision, x, block_delta_fn, cfg, positions, fused_block_fn, spmd
     )
     aux: Aux = dict(inner_aux)
     aux.update(routing_aux(decision, params, x, cfg))
@@ -324,6 +510,31 @@ DecodeBlockFn = Callable[
 ]
 
 
+def _exec_batch_capacity(
+    decision: RouteDecision,
+    x: jax.Array,  # (B, 1, D) — global, or one shard's local slice
+    caches: Params,
+    block_fn: DecodeBlockFn,
+    positions: Optional[jax.Array],
+) -> Tuple[jax.Array, Params, Aux]:
+    """The one copy of batch_capacity execution: row gather -> block ->
+    Eq. 1 gated combine + cache gather/scatter. Both the plain
+    :func:`route_decode` tail and the per-shard region of
+    :func:`_route_decode_spmd` run THIS — which is what makes the
+    mesh-vs-reference token-stream identity a structural property rather
+    than two implementations happening to agree."""
+    caches_sub = gather_batch(decision, caches)
+    delta, new_caches_sub, inner = block_fn(
+        jnp.take(x, decision.idx, axis=0),
+        None if positions is None else _take_batch_positions(positions, decision.idx),
+        caches_sub,
+        decision,
+    )
+    update = (decision.gate[:, None, None] * delta.astype(jnp.float32)).astype(x.dtype)
+    out = x.at[decision.idx].add(update)
+    return out, scatter_batch(decision, caches, new_caches_sub), inner
+
+
 def route_decode(
     params: Params,
     x: jax.Array,  # (B, 1, D)
@@ -332,6 +543,7 @@ def route_decode(
     cfg: ModelConfig,
     positions: Optional[jax.Array] = None,
     active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
+    spmd: Optional[ShardCtx] = None,
 ) -> Tuple[jax.Array, Params, Aux]:
     """Decode-time routed block: batch-capacity decision + routed execution.
 
@@ -341,18 +553,128 @@ def route_decode(
     any extra per-sequence state (e.g. encdec cross-KV) themselves.
     ``active`` (from the serving engine) demotes padding slots in the
     batch-capacity ranking — see :func:`decide_batch`.
+
+    With an SPMD :class:`ShardCtx` the *entire* routed step — causal
+    scoring, partitioned top-``kb_local`` selection, cache-slice gather,
+    ``block_fn``, and both scatters — runs per data shard inside
+    ``shard_map``: a routed sequence's cache rows live on its own shard,
+    so a batch-sharded cache pool is never gathered across devices. Model
+    (tensor-parallel) axes stay under GSPMD inside the region. Without a
+    mesh but with ``spmd.data_shards > 1``, the same partitioned
+    *semantics* run on one device — the SPMD reference.
     """
-    decision = decide_batch(params, x, cfg, active)
-    caches_sub = gather_batch(decision, caches)
-    new_sub: Dict[str, Params] = {}
-
-    def delta_fn(x_sub, pos_sub):
-        delta, new_caches_sub, inner = block_fn(x_sub, pos_sub, caches_sub, decision)
-        new_sub["caches"] = new_caches_sub
-        return delta, inner
-
-    out, inner_aux = execute_routed(decision, x, delta_fn, cfg, positions)
-    new_caches = scatter_batch(decision, caches, new_sub["caches"])
+    if spmd is not None:
+        # partitioned batch_capacity semantics require equal shard groups —
+        # fail with the clear ValueError, not batch_select's bare assert
+        spmd.check_batch(x.shape[0])
+    if spmd is not None and spmd.spmd:
+        return _route_decode_spmd(params, x, caches, block_fn, cfg, positions, active, spmd)
+    shards = spmd.data_shards if spmd is not None else 1
+    decision = decide_batch(params, x, cfg, active, data_shards=shards)
+    out, new_caches, inner_aux = _exec_batch_capacity(
+        decision, x, caches, block_fn, positions
+    )
     aux: Aux = dict(inner_aux)
     aux.update(decode_aux(decision))
+    return out, new_caches, aux
+
+
+def _route_decode_spmd(
+    params: Params,
+    x: jax.Array,  # (B, 1, D)
+    caches: Params,
+    block_fn: DecodeBlockFn,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array],
+    active: Optional[jax.Array],
+    spmd: ShardCtx,
+) -> Tuple[jax.Array, Params, Aux]:
+    """Shard-local batch-capacity decode (see :func:`route_decode`).
+
+    Two shard_map regions, split around an XLA limitation: ``top_k`` lowers
+    to a sort, which this XLA version cannot partition inside a
+    *partial*-auto (manual-subgroup) region. So the decision runs in a
+    fully-manual region (model axes replicated — it's a per-row scalar op),
+    and the cache gather + block + scatters run in a partial-auto region
+    where the model axis stays under GSPMD so the block's tensor-parallel
+    layouts keep working. Row indices crossing the region boundary are
+    *shard-local*; concatenated over shards they form the
+    ``(d · kb_local,)`` global array whose blocks each shard reads back.
+    """
+    B = x.shape[0]
+    # decide_batch(active=None) ranks raw scores; an all-True mask is the
+    # same ranking, and a concrete array keeps the shard_map specs uniform.
+    act = jnp.ones((B,), bool) if active is None else active
+    route_params = {"router": params["router"]}
+    if "predictor" in params:
+        route_params["predictor"] = params["predictor"]
+
+    def _decide_local(rp, xl, actl):
+        decision_l = decide_batch(rp, xl, cfg, actl)  # local top-kb(B/d)
+        return (
+            decision_l.idx,
+            decision_l.gate,
+            decision_l.mask,
+            decision_l.scores.astype(jnp.float32),
+        )
+
+    dspec1 = spmd.data_spec(1)
+    idx, gate, mask, scores = shard_map(
+        _decide_local,
+        mesh=spmd.mesh,
+        in_specs=(jax.tree.map(lambda _: P(), route_params), spmd.data_spec(3), dspec1),
+        out_specs=(dspec1, dspec1, dspec1, dspec1),
+        check_rep=False,
+    )(route_params, x, act)
+
+    def _exec_local(xl, il, gl, ml, sl, cl, posl):
+        decision_l = RouteDecision("batch_capacity", il, gl, ml, scores=sl)
+        out_l, new_cl, inner = _exec_batch_capacity(
+            decision_l, xl, cl, block_fn, posl
+        )
+        return out_l, new_cl, jax.tree.map(lambda a: a[None], inner)
+
+    cache_specs = jax.tree.map(lambda c: spmd.data_spec(c.ndim), caches)
+    # abstract probe: the inner-aux pytree structure (for out_specs) without
+    # running the block — a kb_local-row decision over the first rows
+    kb_local = batch_capacity_k(cfg, B // spmd.data_shards)
+    probe_idx = jnp.arange(kb_local, dtype=jnp.int32)
+    probe = RouteDecision(
+        "batch_capacity",
+        probe_idx,
+        jnp.zeros((kb_local,), jnp.float32),
+        jnp.zeros((B,), bool),
+        scores=jnp.zeros((B,), jnp.float32),
+    )
+    inner_struct = jax.eval_shape(
+        lambda: block_fn(
+            jnp.take(x, probe_idx, axis=0),
+            None if positions is None else _take_batch_positions(positions, probe_idx),
+            gather_batch(probe, caches),
+            probe,
+        )[2]
+    )
+    inner_specs = jax.tree.map(lambda _: P(spmd.data_axes), inner_struct)
+    out, new_caches, inner_stack = shard_map(
+        _exec_local,
+        mesh=spmd.mesh,
+        in_specs=(
+            spmd.data_spec(3),
+            dspec1,
+            dspec1,
+            dspec1,
+            dspec1,
+            cache_specs,
+            _pos_spec(positions, spmd),
+        ),
+        out_specs=(spmd.data_spec(3), cache_specs, inner_specs),
+        check_rep=False,
+        auto=spmd.auto_axes,
+    )(x, idx, gate, mask, scores, caches, positions)
+    aux: Aux = dict(jax.tree.map(lambda a: jnp.mean(a, axis=0), inner_stack))
+    # one decode_aux source of truth; it reads only mask/scores (idx here is
+    # the concatenation of shard-local row ids, which decode_aux ignores)
+    aux.update(
+        decode_aux(RouteDecision("batch_capacity", idx, gate, mask, scores=scores))
+    )
     return out, new_caches, aux

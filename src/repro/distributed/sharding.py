@@ -16,6 +16,7 @@ Axis semantics:
 """
 from __future__ import annotations
 
+import dataclasses
 import re
 from typing import Any, Dict, Optional, Sequence, Tuple
 
@@ -99,6 +100,107 @@ def state_shardings(state_tree: Any, mesh: Mesh, mesh_cfg: MeshConfig) -> Any:
         "opt": {"m": ps, "v": ps, "count": scalar},
         "step": scalar,
     }
+
+
+# ---------------------------------------------------------------------------
+# SPMD routed-execution context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh context for SPMD routed execution (DESIGN.md §SPMD routed
+    execution).
+
+    Separates two orthogonal things:
+
+    - **semantics** (``data_shards``): the ``batch_capacity`` decode
+      strategy partitions the batch into ``data_shards`` contiguous groups
+      and routes the top ``kb_local = round(ratio·B/d)`` sequences *within
+      each group*, preserving the global ``ratio·B`` budget without any
+      cross-group communication. ``token_topk`` is per-sequence, so its
+      semantics never depend on the partitioning.
+    - **execution** (``mesh``): when a real :class:`Mesh` is attached, the
+      routing decision and the gather/gated-scatter dispatch run per-shard
+      inside ``shard_map`` over ``data_axes`` (the ``(B, S, D)`` stream is
+      never resharded across devices), while ``model_axis`` stays under
+      GSPMD ("auto") so routed block deltas keep the existing
+      tensor-parallel layouts — psum only where the dense path already
+      implies it.
+
+    A ``ShardCtx(mesh=None, data_shards=d)`` runs the *same partitioned
+    semantics* on a single device — the reference the SPMD equivalence
+    tests compare against (``tests/test_routing_spmd.py``).
+    """
+
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ()
+    model_axis: Optional[str] = None
+    data_shards: int = 1
+    # params sharded over the data axes too (ZeRO-3): per-shard fused
+    # kernels would see weight fragments, so fused dispatch must fall back
+    fsdp: bool = False
+
+    @property
+    def spmd(self) -> bool:
+        """True when dispatch should actually run per-shard via shard_map."""
+        return self.mesh is not None and bool(self.data_axes)
+
+    @property
+    def model_shards(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def auto_axes(self) -> frozenset:
+        """Mesh axes left to GSPMD inside dispatch shard_map regions."""
+        if self.mesh is None:
+            return frozenset()
+        return frozenset(a for a in self.mesh.axis_names if a not in self.data_axes)
+
+    def data_spec(self, ndim: int, batch_axis: int = 0) -> P:
+        """PartitionSpec sharding ``batch_axis`` over the data axes."""
+        spec: list = [None] * ndim
+        if self.data_axes:
+            spec[batch_axis] = self.data_axes
+        return P(*spec)
+
+    def check_batch(self, batch: int) -> None:
+        if self.data_shards > 1 and batch % self.data_shards != 0:
+            raise ValueError(
+                f"batch {batch} not divisible by data_shards={self.data_shards}"
+            )
+
+    def semantic_only(self) -> "ShardCtx":
+        """Same partitioned routing semantics, but dispatch under GSPMD
+        instead of shard_map. Blocks whose inner compute cannot run in a
+        manual region on this XLA version (expert top-k lowers to a sort,
+        which the partitioner rejects inside a manual subgroup) downgrade
+        to this — routing decisions, budgets, and token streams are
+        unchanged; only the shard-locality guarantee of the dispatch is
+        delegated to the GSPMD partitioner."""
+        return dataclasses.replace(self, mesh=None)
+
+
+def shard_ctx(
+    mesh: Optional[Mesh], data_shards: Optional[int] = None, fsdp: bool = False
+) -> ShardCtx:
+    """Build a :class:`ShardCtx` from a mesh (or a bare shard count).
+
+    ``shard_ctx(mesh)`` — SPMD execution: batch over the present
+    ``("pod", "data")`` axes, ``"model"`` (if present) left to GSPMD.
+    ``shard_ctx(None, data_shards=d)`` — partitioned semantics only
+    (single-device reference).
+    """
+    if mesh is None:
+        return ShardCtx(data_shards=int(data_shards or 1), fsdp=fsdp)
+    bd = batch_axes(mesh)
+    d = int(np.prod([mesh.shape[a] for a in bd])) if bd else 1
+    if data_shards is not None and int(data_shards) != d:
+        raise ValueError(f"data_shards={data_shards} != mesh data degree {d}")
+    model = "model" if "model" in mesh.shape else None
+    return ShardCtx(mesh=mesh, data_axes=bd, model_axis=model, data_shards=d, fsdp=fsdp)
 
 
 # ---------------------------------------------------------------------------

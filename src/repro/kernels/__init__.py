@@ -15,4 +15,12 @@
 Each kernel has a pure-jnp oracle in ref.py and a jit'd dispatching wrapper
 in ops.py. On this CPU container kernels execute via ``interpret=True``;
 on TPU the same pallas_call lowers to Mosaic.
+
+Under SPMD routed execution (DESIGN.md §SPMD routed execution) the
+dispatch kernels run *per data shard* inside ``shard_map`` regions on the
+shard-local slice of the residual stream; the fused routed-block kernels
+additionally require every dim they fuse over (heads, ffn) to be whole on
+each device — ``models.blocks.fused_dispatch_supported(cfg, spmd)`` is the
+gate, and a mesh that splits a fused dim falls back to the standalone
+dispatch kernels around the xla block path.
 """

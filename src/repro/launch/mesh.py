@@ -38,3 +38,23 @@ def make_mesh(cfg: MeshConfig) -> Mesh:
 
 def single_device_mesh() -> Mesh:
     return jax.make_mesh((1, 1), ("data", "model"), **_axis_kw(2))
+
+
+def auto_mesh(model_axis: int = 1) -> Mesh:
+    """("data", "model") mesh over every *available* device: data absorbs
+    whatever the model axis doesn't. The shape serving/tests want on a CPU
+    host forced to N devices (``XLA_FLAGS=--xla_force_host_platform_
+    device_count=8`` -> (8//model, model)); on one device it degenerates to
+    (1, 1) and drives the identical SPMD code path.
+    """
+    n = jax.device_count()
+    if model_axis < 1 or n % model_axis != 0:
+        raise ValueError(f"model_axis {model_axis} must divide device count {n}")
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         **_axis_kw(2))
+
+
+def describe_mesh(mesh: Mesh) -> str:
+    """One-line topology summary for launcher logs."""
+    dims = " x ".join(f"{k}={v}" for k, v in mesh.shape.items())
+    return f"{dims} ({len(mesh.devices.flat)} devices, {mesh.devices.flat[0].platform})"

@@ -45,6 +45,14 @@ def main() -> None:
     ap.add_argument("--backend", default=None,
                     choices=["xla", "pallas", "pallas_fused"],
                     help="MoD dispatch backend (default: the arch's own)")
+    ap.add_argument("--spmd", action="store_true",
+                    help="serve over a ('data','model') mesh spanning every "
+                         "available device: batch-sharded cache pool + "
+                         "shard-local MoD routing (force a multi-device CPU "
+                         "host with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8)")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="tensor-parallel degree of the --spmd mesh")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -64,13 +72,20 @@ def main() -> None:
             params = jax.tree.map(jnp.asarray, state["params"])
             print(f"[serve] loaded checkpoint step {step}")
 
+    mesh = None
+    if args.spmd:
+        from repro.launch.mesh import auto_mesh, describe_mesh
+
+        mesh = auto_mesh(args.model_axis)
+        print(f"[serve] SPMD mesh: {describe_mesh(mesh)}")
+
     n_requests = args.requests or 2 * args.batch
     data = SyntheticLM(cfg.vocab, args.prompt_len, seed=7)
     prompts = np.asarray(data.batch(0, n_requests)["tokens"])[:, : args.prompt_len]
 
     ctx = args.prompt_len + args.gen
     engine = ServingEngine(
-        params, cfg, batch_size=args.batch, ctx=ctx, policy=args.policy
+        params, cfg, batch_size=args.batch, ctx=ctx, policy=args.policy, mesh=mesh
     )
 
     outputs = engine.run_stream(
@@ -84,6 +99,10 @@ def main() -> None:
     kv = engine.pool.cache_bytes()
     print(f"[serve] arch={cfg.name} slots={args.batch} ctx={ctx} "
           f"requests={len(outputs)} policy={args.policy}")
+    if engine.spmd is not None and engine.scheduler.routed_capacity is not None:
+        print(f"[serve] shard-local routing: data_shards={engine.spmd.data_shards} "
+              f"global kb={engine.scheduler.routed_capacity} "
+              f"(= d * round(ratio * B/d))")
     print(f"[serve] {s['steps']:.0f} engine steps in {s['wall_s']:.2f}s: "
           f"{s['tokens_per_s']:.1f} tok/s aggregate, "
           f"mean occupancy {s['mean_occupancy']:.2f}/{args.batch}")

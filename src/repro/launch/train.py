@@ -72,8 +72,11 @@ def main() -> None:
         batch_axes=tuple(a for a in ("pod", "data") if a in mesh.shape),
     )
 
+    from repro.distributed.sharding import shard_ctx
+
+    spmd = shard_ctx(mesh, fsdp=args.fsdp)
     with mesh_scope(mesh):
-        step_raw = make_train_step(cfg, tcfg)
+        step_raw = make_train_step(cfg, tcfg, spmd=spmd)
         # shard the state according to the rules; metrics replicated
         import jax.numpy as jnp
 

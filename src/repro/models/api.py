@@ -47,8 +47,11 @@ def init_model(key, cfg: ModelConfig) -> Params:
 
 def model_forward(
     params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], rng=None,
-    last_only: bool = False,
+    last_only: bool = False, spmd=None,
 ) -> Tuple[jax.Array, Aux]:
+    """``spmd`` (a ``distributed.sharding.ShardCtx``) makes every MoD
+    site's decision + dispatch run per data shard — see DESIGN.md §SPMD
+    routed execution. ``None`` is the plain single-device path."""
     if cfg.family in ("dense", "moe", "vlm"):
         return T.forward(
             params,
@@ -58,16 +61,22 @@ def model_forward(
             positions=batch.get("positions"),
             rng=rng,
             last_only=last_only,
+            spmd=spmd,
         )
     if cfg.family == "ssm":
-        return SL.forward(params, cfg, tokens=batch.get("tokens"), rng=rng, last_only=last_only)
+        return SL.forward(
+            params, cfg, tokens=batch.get("tokens"), rng=rng, last_only=last_only,
+            spmd=spmd,
+        )
     if cfg.family == "hybrid":
         return SL.forward_hybrid(
-            params, cfg, tokens=batch.get("tokens"), rng=rng, last_only=last_only
+            params, cfg, tokens=batch.get("tokens"), rng=rng, last_only=last_only,
+            spmd=spmd,
         )
     if cfg.family == "encdec":
         return ED.forward(
-            params, cfg, batch["tokens"], batch["enc_emb"], rng=rng, last_only=last_only
+            params, cfg, batch["tokens"], batch["enc_emb"], rng=rng,
+            last_only=last_only, spmd=spmd,
         )
     raise ValueError(cfg.family)
 
@@ -88,9 +97,10 @@ def combine_losses(ce: jax.Array, aux: Aux, cfg: ModelConfig) -> jax.Array:
 
 
 def model_loss(
-    params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], rng=None
+    params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], rng=None,
+    spmd=None,
 ) -> Tuple[jax.Array, Aux]:
-    logits, aux = model_forward(params, cfg, batch, rng)
+    logits, aux = model_forward(params, cfg, batch, rng, spmd=spmd)
     ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
     loss = combine_losses(ce, aux, cfg)
     aux = dict(aux)
@@ -118,6 +128,7 @@ def model_decode(
     token: jax.Array,
     pos: jax.Array,
     active: Optional[jax.Array] = None,
+    spmd=None,
 ) -> Tuple[jax.Array, Params, Aux]:
     """One decode step for any family.
 
@@ -125,15 +136,21 @@ def model_decode(
     engine passes it so MoD ``batch_capacity`` routing never spends routed
     slots on padding rows (see ``repro.serve``). When None (single-shot
     generation, dry-runs) all rows rank equally, as before.
+
+    ``spmd`` (``distributed.sharding.ShardCtx``) switches batch_capacity
+    routing to the partitioned per-shard semantics and — when a mesh is
+    attached — runs the routed step shard-locally so a batch-sharded cache
+    pool never moves across devices (enc-dec keeps partitioned semantics
+    but dispatches under GSPMD; see ``models/encdec.py``).
     """
     if cfg.family in ("dense", "moe", "vlm"):
-        return T.decode_step(params, caches, cfg, token, pos, active)
+        return T.decode_step(params, caches, cfg, token, pos, active, spmd)
     if cfg.family == "ssm":
-        return SL.decode_step(params, caches, cfg, token, pos, active)
+        return SL.decode_step(params, caches, cfg, token, pos, active, spmd)
     if cfg.family == "hybrid":
-        return SL.decode_step_hybrid(params, caches, cfg, token, pos, active)
+        return SL.decode_step_hybrid(params, caches, cfg, token, pos, active, spmd)
     if cfg.family == "encdec":
-        return ED.decode_step(params, caches, cfg, token, pos, active)
+        return ED.decode_step(params, caches, cfg, token, pos, active, spmd)
     raise ValueError(cfg.family)
 
 

@@ -9,6 +9,11 @@ Design notes (MoD-specific):
   blocks size them at the max context; MoD blocks size them at the block
   capacity ``C = ratio * S`` (the paper's KV-cache saving). Empty slots have
   pos = -1 and are masked out.
+- Everything here is batch-pointwise (each row attends only over its own
+  cache), which is what lets the SPMD decode path run this code unchanged
+  inside a ``shard_map`` region over the batch axes with the model axis
+  left to GSPMD (DESIGN.md §SPMD routed execution); the decode TP
+  constraint below and the ambient-mesh constraints are no-ops there.
 """
 from __future__ import annotations
 

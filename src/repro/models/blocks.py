@@ -64,13 +64,35 @@ def block_delta(
     return a + m, aux
 
 
-def fused_dispatch_supported(cfg: ModelConfig) -> bool:
+def fused_dispatch_supported(cfg: ModelConfig, spmd=None) -> bool:
     """Whether this config's routed blocks can run the fused-dispatch mode.
 
     M-RoPE (VLM) positions are three-streamed and stay on the pallas
     fallback; everything else about the standard transformer block fuses.
+
+    Under an SPMD mesh (``spmd`` a
+    :class:`~repro.distributed.sharding.ShardCtx`), the fused kernels run
+    *per data shard* — which requires every dim the kernel fuses over to be
+    whole on each device. The mesh splitting a fused dim forces the
+    explicit fallback (sharded gather/scatter around the xla/pallas block
+    path), concretely when:
+
+    - the model axis has >1 shards (QKV heads / ffn columns split across
+      devices — a per-shard kernel would need its own psum epilogues), or
+    - FSDP shards the block weights over the data axes (the per-shard
+      region would see a parameter fragment, not the weight), or
+    - the block carries MoE aux losses (their global token statistics must
+      be computed outside the per-shard region to match the single-device
+      loss).
     """
-    return cfg.mod.backend == "pallas_fused" and cfg.attn.pos_emb in ("rope", "none")
+    if not (cfg.mod.backend == "pallas_fused" and cfg.attn.pos_emb in ("rope", "none")):
+        return False
+    if spmd is not None and spmd.spmd:
+        if spmd.model_shards > 1 or getattr(spmd, "fsdp", False):
+            return False
+        if cfg.family == "moe" or cfg.moe.enabled:
+            return False
+    return True
 
 
 def block_delta_fused(

@@ -122,6 +122,7 @@ def forward(
     positions: Optional[jax.Array] = None,
     rng: Optional[jax.Array] = None,
     last_only: bool = False,
+    spmd=None,  # Optional[ShardCtx] — SPMD MoD dispatch (DESIGN.md)
 ) -> Tuple[jax.Array, Aux]:
     enc_out = encode(params, enc_emb, cfg)
     x = constrain_batch(embed(params["embed"], tokens))
@@ -140,7 +141,9 @@ def forward(
             def delta_fn(xs, ps):
                 return _dec_block(gp["mod"]["block"], xs, ps, enc_out, cfg, delta_only=True), {}
 
-            h, a = ROUT.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
+            h, a = ROUT.apply_mod(
+                gp["mod"], h, positions, delta_fn, cfg, sub, spmd=spmd
+            )
             aux.update(a)
         return (constrain_batch(h), key), aux
 
@@ -235,7 +238,15 @@ def decode_step(
     token: jax.Array,  # (B,1)
     pos: jax.Array,  # (B,)
     active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
+    spmd=None,  # ShardCtx; downgraded to partitioned semantics (see below)
 ) -> Tuple[jax.Array, Params, Aux]:
+    # The routed block_fn gathers the *global* read-only cross-KV cache via
+    # the decision's row ids; inside a shard-local region those ids are
+    # shard-relative, so enc-dec decode keeps the partitioned batch_capacity
+    # semantics (same routed sets, same budget) but executes the dispatch
+    # under GSPMD rather than shard_map.
+    if spmd is not None and spmd.spmd:
+        spmd = spmd.semantic_only()
     x = constrain_batch(embed(params["embed"], token))
     positions = pos[:, None]
 
@@ -259,7 +270,7 @@ def decode_step(
                 return d, sc, {}
 
             h, new_self, a = ROUT.route_decode(
-                mp, h, mc["self"], block_fn, cfg, positions, active
+                mp, h, mc["self"], block_fn, cfg, positions, active, spmd
             )
             new_c["mod"] = {"self": new_self, "cross": mc["cross"]}
             aux.update(a)

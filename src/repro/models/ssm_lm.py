@@ -101,6 +101,7 @@ def forward(
     positions: Optional[jax.Array] = None,
     rng: Optional[jax.Array] = None,
     last_only: bool = False,
+    spmd=None,  # Optional[ShardCtx] — SPMD MoD dispatch (DESIGN.md)
 ) -> Tuple[jax.Array, Aux]:
     x = constrain_batch(embed(params["embed"], tokens) if embeds is None else embeds)
     if positions is None:
@@ -119,7 +120,9 @@ def forward(
             def delta_fn(xs, ps):
                 return _ssm_delta(gp["mod"]["block"], xs, cfg), {}
 
-            h, a = ROUT.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
+            h, a = ROUT.apply_mod(
+                gp["mod"], h, positions, delta_fn, cfg, sub, spmd=spmd
+            )
             aux.update(a)
         return (constrain_batch(h), key), aux
 
@@ -164,6 +167,7 @@ def decode_step(
     token: jax.Array,  # (B,1)
     pos: jax.Array,  # (B,)
     active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
+    spmd=None,  # Optional[ShardCtx] — shard-local batch_capacity routing
 ) -> Tuple[jax.Array, Params, Aux]:
     x = constrain_batch(embed(params["embed"], token))
 
@@ -185,7 +189,7 @@ def decode_step(
                 return d, c, {}
 
             h, new_c["mod"], a = ROUT.route_decode(
-                gp["mod"], h, gc["mod"], block_fn, cfg, active=active
+                gp["mod"], h, gc["mod"], block_fn, cfg, active=active, spmd=spmd
             )
             aux.update(a)
         return constrain_batch(h), (new_c, aux)
@@ -256,6 +260,7 @@ def forward_hybrid(
     positions: Optional[jax.Array] = None,
     rng: Optional[jax.Array] = None,
     last_only: bool = False,
+    spmd=None,  # Optional[ShardCtx] — SPMD MoD dispatch (DESIGN.md)
 ) -> Tuple[jax.Array, Aux]:
     x = constrain_batch(embed(params["embed"], tokens) if embeds is None else embeds)
     if positions is None:
@@ -273,7 +278,9 @@ def forward_hybrid(
             def delta_fn(xs, ps):
                 return _ssm_delta(gp["mod"]["block"], xs, cfg), {}
 
-            h, a = ROUT.apply_mod(gp["mod"], h, positions, delta_fn, cfg, sub)
+            h, a = ROUT.apply_mod(
+                gp["mod"], h, positions, delta_fn, cfg, sub, spmd=spmd
+            )
             aux.update(a)
         return (constrain_batch(h), key), aux
 
@@ -327,6 +334,7 @@ def decode_step_hybrid(
     token: jax.Array,
     pos: jax.Array,
     active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
+    spmd=None,  # Optional[ShardCtx] — shard-local batch_capacity routing
 ) -> Tuple[jax.Array, Params, Aux]:
     x = embed(params["embed"], token)
     positions = pos[:, None]
@@ -348,7 +356,7 @@ def decode_step_hybrid(
                 return d, c, {}
 
             h, new_c["mod"], a = ROUT.route_decode(
-                gp["mod"], h, gc["mod"], block_fn, cfg, active=active
+                gp["mod"], h, gc["mod"], block_fn, cfg, active=active, spmd=spmd
             )
             aux.update(a)
         return h, (new_c, aux)

@@ -107,11 +107,14 @@ def forward(
     positions: Optional[jax.Array] = None,
     rng: Optional[jax.Array] = None,
     last_only: bool = False,
+    spmd=None,  # Optional[distributed.sharding.ShardCtx] — SPMD MoD dispatch
 ) -> Tuple[jax.Array, Aux]:
     """Full-sequence forward. Returns (logits (B,S,V), aux).
 
     ``last_only`` slices to the final position *before* the unembedding so
-    serving prefill never materializes (B, S, V) logits."""
+    serving prefill never materializes (B, S, V) logits. ``spmd`` routes
+    every MoD site's decision + dispatch per data shard (DESIGN.md §SPMD
+    routed execution); dense blocks and aux losses stay under GSPMD."""
     x = embed(params["embed"], tokens) if embeds is None else embeds
     x = constrain_batch(x)
     if positions is None:
@@ -130,12 +133,13 @@ def forward(
                 return BLK.block_delta(gp["mod"]["block"], xs, ps, cfg)
 
             fused_fn = None
-            if BLK.fused_dispatch_supported(cfg):
+            if BLK.fused_dispatch_supported(cfg, spmd):
                 def fused_fn(xf, decision, pf):
                     return BLK.block_delta_fused(gp["mod"]["block"], xf, pf, decision, cfg)
 
             h, a = ROUT.apply_mod(
-                gp["mod"], h, positions, delta_fn, cfg, sub, fused_block_fn=fused_fn
+                gp["mod"], h, positions, delta_fn, cfg, sub,
+                fused_block_fn=fused_fn, spmd=spmd,
             )
             aux.update(a)
         return (constrain_batch(h), key), aux
@@ -166,6 +170,7 @@ def lm_loss(
     cfg: ModelConfig,
     batch: Dict[str, jax.Array],
     rng: Optional[jax.Array] = None,
+    spmd=None,
 ) -> Tuple[jax.Array, Aux]:
     """CE + weighted MoD/MoE auxiliary losses. batch: tokens/embeds, labels,
     optional loss_mask / positions."""
@@ -176,6 +181,7 @@ def lm_loss(
         embeds=batch.get("embeds"),
         positions=batch.get("positions"),
         rng=rng,
+        spmd=spmd,
     )
     ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
     loss = ce
@@ -289,7 +295,7 @@ def prefill(
 # ---------------------------------------------------------------------------
 
 
-def _mod_decode_group(gp, h, positions, cache, cfg, active=None):
+def _mod_decode_group(gp, h, positions, cache, cfg, active=None, spmd=None):
     """Batch-capacity MoD decode: top round(ratio*B) sequences route through."""
 
     def block_fn(h_sub, pos_sub, cache_sub, decision):
@@ -298,7 +304,7 @@ def _mod_decode_group(gp, h, positions, cache, cfg, active=None):
         )
         return delta, c, {}
 
-    return ROUT.route_decode(gp, h, cache, block_fn, cfg, positions, active)
+    return ROUT.route_decode(gp, h, cache, block_fn, cfg, positions, active, spmd)
 
 
 def decode_step(
@@ -308,6 +314,7 @@ def decode_step(
     token: jax.Array,  # (B, 1) int32
     pos: jax.Array,  # (B,) int32 — current absolute position
     active: Optional[jax.Array] = None,  # (B,) bool — live serving slots
+    spmd=None,  # Optional[ShardCtx] — shard-local batch_capacity routing
 ) -> Tuple[jax.Array, Params, Aux]:
     """One autoregressive step. Returns (logits (B,V), caches, aux)."""
     x = constrain_batch(embed(params["embed"], token))  # (B,1,D)
@@ -315,6 +322,12 @@ def decode_step(
         positions = jnp.broadcast_to(pos[None, :, None], (3,) + pos.shape + (1,))
     else:
         positions = pos[:, None]
+    if spmd is not None and spmd.spmd and _use_moe(cfg):
+        # expert top-k inside the routed block can't lower in a manual
+        # region (sort-in-manual-subgroup, same XLA limitation the decision
+        # regions dodge) — keep the partitioned routing semantics, execute
+        # the dispatch under GSPMD
+        spmd = spmd.semantic_only()
 
     def body(h, xs):
         gp, gc = xs
@@ -324,7 +337,9 @@ def decode_step(
             h, c, _ = BLK.block_decode(gp["full"], h, positions, gc["full"], cfg)
             new_c["full"] = c
         if "mod" in gp:
-            h, c, a = _mod_decode_group(gp["mod"], h, positions, gc["mod"], cfg, active)
+            h, c, a = _mod_decode_group(
+                gp["mod"], h, positions, gc["mod"], cfg, active, spmd
+            )
             new_c["mod"] = c
             aux.update(a)
         return constrain_batch(h), (new_c, aux)

@@ -19,6 +19,13 @@ The batch axis of every cache leaf is discovered structurally (by diffing
 the spec shapes of a B- and a B+1-sized pool), so the pool works for all
 four model families — including leaves stacked as (n_groups, B, ...) or
 (n_seg, n_pairs, B, ...) — without per-family wiring.
+
+With a ``mesh``, the pool is *batch-sharded*: every leaf is placed with
+``distributed.sharding.cache_shardings`` (slots over the data axes, head
+dims over "model" where divisible) and the slot-lifecycle scatters keep
+that placement via explicit out-shardings. Combined with the engine's
+shard-local ``batch_capacity`` routing, a slot's cache rows live on — and
+are only ever touched by — the data shard that owns the slot.
 """
 from __future__ import annotations
 
@@ -47,14 +54,23 @@ def _batch_axes(cfg: ModelConfig, batch: int, ctx: int):
 class CachePool:
     """Fixed-shape (B, ctx) cache pool with per-slot reset/write."""
 
-    def __init__(self, cfg: ModelConfig, batch_size: int, ctx: int):
+    def __init__(self, cfg: ModelConfig, batch_size: int, ctx: int, mesh=None):
         self.cfg = cfg
         self.batch_size = batch_size
         self.ctx = ctx
+        self.mesh = mesh
         self.caches = api.make_caches(cfg, batch_size, ctx)
         self._axes = _batch_axes(cfg, batch_size, ctx)
         # batch-1 template holding every leaf's initial slot value
         self._template = api.make_caches(cfg, 1, ctx)
+
+        out_shardings = None
+        if mesh is not None:
+            from repro.distributed.sharding import cache_shardings
+
+            sh = cache_shardings(self.caches, mesh, cfg, batch_size)
+            self.caches = jax.device_put(self.caches, sh)
+            out_shardings = sh
 
         def scatter(caches, sub, slot):
             return jax.tree.map(
@@ -64,7 +80,11 @@ class CachePool:
                 self._axes,
             )
 
-        self._scatter = jax.jit(scatter)
+        self._scatter = (
+            jax.jit(scatter)
+            if out_shardings is None
+            else jax.jit(scatter, out_shardings=out_shardings)
+        )
 
     def reset(self, slot: int) -> None:
         """Return the slot's cache rows to their initial (empty) state."""

@@ -37,6 +37,18 @@ Sampling is host-side: greedy argmax, or per-request
 request regardless of batch composition. The (B, V) logits round-trip to
 host once per step; at smoke scale that is noise, on an accelerator you
 would fold sampling into the step.
+
+SPMD serving
+------------
+``ServingEngine(mesh=...)`` drives the same engine multi-device: params
+are placed per ``distributed.sharding`` rules, the ``CachePool`` is
+batch-sharded over the mesh's data axes, decode inputs are placed
+batch-sharded each step, and ``batch_capacity`` routing runs shard-locally
+with the partitioned semantics (top ``round(ratio·B/d)`` per shard group —
+DESIGN.md §SPMD routed execution). The scheduler budget becomes the global
+``d·round(ratio·B/d)``. ``ServingEngine(data_shards=d)`` without a mesh
+runs identical routing semantics on one device; the SPMD tests pin the two
+token-for-token.
 """
 from __future__ import annotations
 
@@ -79,12 +91,20 @@ def _cached_jit(kind: str, key: Any, make: Callable[[], Callable]) -> Callable:
     return fn
 
 
-def routed_capacity(cfg: ModelConfig, batch_size: int) -> Optional[int]:
-    """kb of the batch_capacity router (core/routing.batch_capacity_k);
-    None when MoD is off."""
+def routed_capacity(
+    cfg: ModelConfig, batch_size: int, data_shards: int = 1
+) -> Optional[int]:
+    """*Global* kb of the batch_capacity router
+    (core/routing.batch_capacity_k); None when MoD is off.
+
+    Under a batch-sharded pool each of the ``data_shards`` shard groups
+    routes ``round(ratio·B/d)`` of its own slots, so the global budget the
+    scheduler must count against is the sum over shards — NOT
+    ``round(ratio·B)`` (e.g. B=8, d=4, ratio=0.125 routes 4 slots per step,
+    not 1, because every shard routes at least one row)."""
     if not cfg.mod.enabled:
         return None
-    return batch_capacity_k(cfg, batch_size)
+    return batch_capacity_k(cfg, batch_size, data_shards)
 
 
 class ServingEngine:
@@ -98,16 +118,49 @@ class ServingEngine:
         ctx: int,
         policy: str = "mod_aware",
         prefill: str = "auto",  # "auto" | "batch" | "step"
+        mesh=None,  # jax.sharding.Mesh — SPMD decode over a sharded pool
+        data_shards: Optional[int] = None,  # partitioned routing semantics
     ):
+        """``mesh`` makes the engine multi-device: params are placed per the
+        sharding rules, the cache pool is batch-sharded over the mesh's data
+        axes, and the decode step routes ``batch_capacity`` shard-locally
+        (DESIGN.md §SPMD routed execution). ``data_shards`` without a mesh
+        runs the *same partitioned routing semantics* on one device — the
+        reference configuration the SPMD tests compare token streams
+        against. With both given they must agree."""
         if prefill not in ("auto", "batch", "step"):
             raise ValueError(f"unknown prefill mode {prefill!r}")
+        from repro.distributed.sharding import shard_ctx
+
+        self.mesh = mesh
+        self.spmd = (
+            shard_ctx(mesh, data_shards) if (mesh is not None or data_shards) else None
+        )
+        if self.spmd is not None:
+            self.spmd.check_batch(batch_size)
+        shards = self.spmd.data_shards if self.spmd is not None else 1
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.config import MeshConfig
+            from repro.distributed.sharding import param_shardings
+
+            mcfg = MeshConfig(
+                pod=1, data=shards, model=self.spmd.model_shards, fsdp=False
+            )
+            params = jax.device_put(params, param_shardings(params, mesh, mcfg))
+            # decode-step inputs are placed every step (tokens (B,1),
+            # pos/active (B,)) — build their shardings once, not per step
+            self._input_shardings = {
+                nd: NamedSharding(mesh, self.spmd.data_spec(nd)) for nd in (1, 2)
+            }
         self.params = params
         self.cfg = cfg
         self.batch_size = batch_size
         self.ctx = ctx
-        self.pool = CachePool(cfg, batch_size, ctx)
+        self.pool = CachePool(cfg, batch_size, ctx, mesh=mesh)
         self.scheduler = Scheduler(
-            batch_size, policy, routed_capacity(cfg, batch_size)
+            batch_size, policy, routed_capacity(cfg, batch_size, shards)
         )
         self.slots = [Slot(i) for i in range(batch_size)]
         self.finished: List[RequestOutput] = []
@@ -129,10 +182,13 @@ class ServingEngine:
 
         # The one decode step every slot shares; jax caches one executable
         # per shape, and shapes are fixed, so this compiles exactly once
-        # (and is shared by every engine with the same config).
+        # (and is shared by every engine with the same config + shard ctx).
+        spmd = self.spmd
         self._step_fn = _cached_jit(
-            "step", cfg,
-            lambda: lambda p, c, t, pos, act: api.model_decode(p, c, cfg, t, pos, act),
+            "step", (cfg, spmd),
+            lambda: lambda p, c, t, pos, act: api.model_decode(
+                p, c, cfg, t, pos, act, spmd=spmd
+            ),
         )
         # Batch-1 prefill; retraced per distinct prompt length only.
         self._prefill_fn = _cached_jit(
@@ -209,6 +265,14 @@ class ServingEngine:
                 slot.pos = 0
                 slot.prompt_idx = 0
                 slot.next_token = int(req.tokens[0])
+
+    def _place(self, host_arr) -> jax.Array:
+        """Host array -> device; batch-sharded over the mesh's data axes
+        when the engine is multi-device (leading dim = the slot dim)."""
+        arr = jnp.asarray(host_arr)
+        if self.mesh is None:
+            return arr
+        return jax.device_put(arr, self._input_shardings[arr.ndim])
 
     # ------------------------------------------------------------------
     # Sampling / termination
@@ -297,8 +361,8 @@ class ServingEngine:
             active[s.idx] = True
 
         logits, self.pool.caches, aux = self._step_fn(
-            self.params, self.pool.caches, jnp.asarray(tokens),
-            jnp.asarray(pos), jnp.asarray(active),
+            self.params, self.pool.caches, self._place(tokens),
+            self._place(pos), self._place(active),
         )
         logits_np = np.asarray(logits)
 

@@ -8,19 +8,33 @@ the step its request terminates (EOS / token budget).
 Policies
 --------
 - ``"fcfs"``: admit the longest-waiting requests into every free slot.
+  Requests submitted at the same engine step (equal arrival times) are
+  admitted in submission order — the queue is a FIFO deque, so the
+  tie-break is stable by construction (regression-tested in
+  tests/test_serve.py).
 - ``"mod_aware"`` (default): FCFS order, but admission is co-ranked with
   the MoD ``batch_capacity`` router instead of fighting it. Each decode
-  step routes exactly ``kb = round(ratio * B)`` batch rows through every
-  routed block, and a slot that is still ingesting its prompt (stepped
-  prefill) competes for those kb routed rows on every one of its prompt's
-  steps. Admitting an unbounded wave of prompt-ingesting slots would let
-  prefill traffic crowd decode traffic out of the routed capacity, which
-  is exactly the batching-pathology Elbayad et al. (2020) observed for
-  adaptive-compute serving. The policy therefore caps *concurrently
-  prefilling* slots at ``kb``: prompts drain through the routed budget at
-  the rate the router can absorb them while already-decoding slots keep
-  their share. Batched-prefill admissions (dense families prefill off the
-  decode path) don't consume decode-step capacity and are never capped.
+  step routes exactly ``kb`` batch rows through every routed block, and a
+  slot that is still ingesting its prompt (stepped prefill) competes for
+  those kb routed rows on every one of its prompt's steps. Admitting an
+  unbounded wave of prompt-ingesting slots would let prefill traffic crowd
+  decode traffic out of the routed capacity, which is exactly the
+  batching-pathology Elbayad et al. (2020) observed for adaptive-compute
+  serving. The policy therefore caps *concurrently prefilling* slots at
+  ``kb``: prompts drain through the routed budget at the rate the router
+  can absorb them while already-decoding slots keep their share.
+  Batched-prefill admissions (dense families prefill off the decode path)
+  don't consume decode-step capacity and are never capped.
+
+  ``kb`` is the *global* routed budget. On a single device that is
+  ``round(ratio·B)``; under a batch-sharded pool every data shard routes
+  ``round(ratio·B/d)`` of its own slots, so the engine passes
+  ``routed_capacity(cfg, B, data_shards) = d·round(ratio·B/d)`` — the
+  scheduler itself always counts stepped-prefill slots *globally* across
+  the whole slot array (slot bookkeeping is host-side and unsharded), it
+  just budgets them against the global capacity. Counting per-shard slots
+  against a per-shard budget would starve admission whenever the queue's
+  arrivals happened to land on one shard's slots.
 
 The scheduler is pure bookkeeping — no jax. Slot state lives here so the
 engine's invariants ("every request is in exactly one of queue / slot /

@@ -38,13 +38,17 @@ def train_state_specs(key, cfg: ModelConfig) -> State:
 
 
 def make_train_step(
-    cfg: ModelConfig, tcfg: TrainConfig
+    cfg: ModelConfig, tcfg: TrainConfig, spmd=None
 ) -> Callable[[State, Dict[str, jax.Array]], Tuple[State, Dict[str, jax.Array]]]:
+    """``spmd`` (``distributed.sharding.ShardCtx``) makes every MoD site's
+    routing decision + dispatch run per data shard inside shard_map while
+    dense blocks / aux losses stay under GSPMD — pass it when the step is
+    jitted over a real mesh (launch/train.py)."""
     ocfg = tcfg.optim
 
     def loss_fn(params, batch, step):
         rng = jax.random.fold_in(jax.random.PRNGKey(tcfg.seed), step)
-        return api.model_loss(params, cfg, batch, rng=rng)
+        return api.model_loss(params, cfg, batch, rng=rng, spmd=spmd)
 
     def _split_micro(x, n):
         # M-RoPE positions are (3, B, S): split axis 1; everything else

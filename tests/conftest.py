@@ -1,11 +1,21 @@
 import os
+import re
 
-# Tests must see exactly ONE device — the 512-device fan-out belongs only
-# to launch/dryrun.py (per the dry-run contract). Guard against pollution.
+# Tests run on CPU. Two sanctioned device layouts:
+#   - default: exactly ONE device (the 512-device fan-out belongs only to
+#     launch/dryrun.py, per the dry-run contract);
+#   - the SPMD lane: a small forced host-device count (<= 16) so
+#     tests/test_routing_spmd.py and friends exercise a real multi-device
+#     mesh (scripts/ci.sh spmd stage / the CI workflow's 8-device lane set
+#     XLA_FLAGS=--xla_force_host_platform_device_count=8).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
 
-assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
-    "tests must run without the dry-run's 512-device XLA flag"
+_m = re.search(
+    r"xla_force_host_platform_device_count=(\d+)", os.environ.get("XLA_FLAGS", "")
+)
+assert _m is None or int(_m.group(1)) <= 16, (
+    "tests must run without the dry-run's 512-device XLA flag "
+    "(small forced counts are the SPMD lane's — see tests/test_routing_spmd.py)"
 )
