@@ -16,7 +16,11 @@ cells (benchmarks/perf_iterations.py cell A) cover the compiled story.
 Also asserts the engine's correctness contract end to end: continuous-
 batching output is token-identical to ``greedy_generate`` for the same
 prompts (greedy, same seed), including under slot churn (more requests
-than slots).
+than slots), and the block-paged pool is token-identical to the contiguous
+one. The paged sweep (``--page-size``/``--prefix-cache``) runs a
+shared-prefix workload and logs page utilization, prefix-hit rate, prefill
+savings and tokens/s vs the contiguous closed-batch baseline as
+``S:serving`` cells named ``*-paged-*``.
 
   PYTHONPATH=src python -m benchmarks.serving --smoke
   PYTHONPATH=src python -m benchmarks.run --only serving
@@ -45,27 +49,40 @@ def _prompts(n: int, s0: int, vocab: int, seed: int = 7) -> np.ndarray:
     return np.random.default_rng(seed).integers(0, vocab, size=(n, s0)).astype(np.int32)
 
 
-def warmup(cfg, params, slots, prompt_len, gen) -> None:
+def _shared_prefix_prompts(n: int, s0: int, vocab: int, prefix_frac: float = 0.5,
+                           seed: int = 11) -> np.ndarray:
+    """Offered-load workload with a common system-prompt-style prefix."""
+    rng = np.random.default_rng(seed)
+    k = max(1, int(s0 * prefix_frac))
+    shared = rng.integers(0, vocab, size=(k,))
+    out = rng.integers(0, vocab, size=(n, s0))
+    out[:, :k] = shared
+    return out.astype(np.int32)
+
+
+def warmup(cfg, params, slots, prompt_len, gen, page_size: int = 0) -> None:
     """Compile the (cfg, slots, ctx) decode/prefill signatures off the clock.
 
     Jitted functions are shared across ServingEngine instances with the
-    same config (repro.serve.engine._JIT_CACHE), so one throwaway request
-    here means serve_sweep's wall-clock measures decode, not tracing."""
-    eng = ServingEngine(params, cfg, batch_size=slots, ctx=prompt_len + gen)
-    eng.submit(Request(tokens=_prompts(1, prompt_len, cfg.vocab)[0], max_new_tokens=1))
-    eng.run()
+    same config (repro.serve.engine._JIT_CACHE; pool ops likewise), so one
+    throwaway request here means the sweeps' wall-clocks measure decode,
+    not tracing. With ``page_size`` the paged decode step, chunked-prefill
+    and pool-op signatures are warmed at the sweep's exact batch size too —
+    otherwise their cold compiles would land inside the perf-gated
+    ``*-paged-*`` tokens_per_s cells."""
+    kws = [{}]
+    if page_size:
+        kws.append({"page_size": page_size, "prefill_chunk": page_size,
+                    "prefix_cache": True})
+    for kw in kws:
+        eng = ServingEngine(params, cfg, batch_size=slots, ctx=prompt_len + gen, **kw)
+        eng.submit(Request(tokens=_prompts(1, prompt_len, cfg.vocab)[0],
+                           max_new_tokens=1))
+        eng.run()
 
 
-def serve_sweep(cfg, params, slots, prompt_len, gen, requests, arrival_every) -> Dict[str, float]:
-    """One (model x offered load) point: run the request stream, measure."""
-    prompts = _prompts(requests, prompt_len, cfg.vocab)
-    engine = ServingEngine(params, cfg, batch_size=slots, ctx=prompt_len + gen)
-    # arrival_every <= 0 is a closed batch (everything offered upfront);
-    # otherwise an open stream, one request per `arrival_every` engine steps
-    outputs = engine.run_stream(
-        [Request(tokens=prompts[i], max_new_tokens=gen) for i in range(requests)],
-        arrival_every,
-    )
+def _measure(engine, outputs) -> Dict[str, float]:
+    """The metric schema every serving row shares (contiguous and paged)."""
     s = engine.stats()
     lat = np.asarray([o.residency_steps for o in outputs], np.float64)
     wait = np.asarray([o.queue_steps for o in outputs], np.float64)
@@ -81,6 +98,19 @@ def serve_sweep(cfg, params, slots, prompt_len, gen, requests, arrival_every) ->
         "kv_cache_bytes": s["kv_cache_bytes"],
         "decode_compilations": float(engine.decode_compilations or 0),
     }
+
+
+def serve_sweep(cfg, params, slots, prompt_len, gen, requests, arrival_every) -> Dict[str, float]:
+    """One (model x offered load) point: run the request stream, measure."""
+    prompts = _prompts(requests, prompt_len, cfg.vocab)
+    engine = ServingEngine(params, cfg, batch_size=slots, ctx=prompt_len + gen)
+    # arrival_every <= 0 is a closed batch (everything offered upfront);
+    # otherwise an open stream, one request per `arrival_every` engine steps
+    outputs = engine.run_stream(
+        [Request(tokens=prompts[i], max_new_tokens=gen) for i in range(requests)],
+        arrival_every,
+    )
+    return _measure(engine, outputs)
 
 
 def check_token_identity(cfg, params, slots, prompt_len, gen, requests) -> None:
@@ -108,7 +138,56 @@ def check_token_identity(cfg, params, slots, prompt_len, gen, requests) -> None:
             assert np.array_equal(outs[i].full_sequence, one[0]), f"churn mismatch req {i}"
 
 
-def run(smoke: bool = False, backend: str = "xla") -> List[Dict]:
+def check_paged_identity(cfg, params, slots, prompt_len, gen, page_size) -> None:
+    """The paged pool must be invisible: paged and contiguous engines, both
+    running the same chunked-prefill schedule (prefill_chunk = page_size),
+    produce bit-identical token streams."""
+    prompts = _prompts(min(4, slots), prompt_len, cfg.vocab)
+    reqs = lambda: [Request(tokens=prompts[i], max_new_tokens=gen)
+                    for i in range(len(prompts))]
+    streams = {}
+    for paged in (False, True):
+        kw = {"page_size": page_size} if paged else {}
+        eng = ServingEngine(params, cfg, batch_size=len(prompts),
+                            ctx=prompt_len + gen, prefill_chunk=page_size, **kw)
+        for r in reqs():
+            eng.submit(r)
+        streams[paged] = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+        assert (eng.decode_compilations or 0) <= 1, "paged decode retraced"
+    assert streams[False] == streams[True], "paged pool changed token streams"
+
+
+def paged_sweep(cfg, params, slots, prompt_len, gen, requests, page_size,
+                prefix_cache, contiguous_tokens_per_s) -> Dict[str, float]:
+    """One paged point under a shared-prefix workload: page utilization,
+    prefix-hit rate, prefill savings, and tokens/s vs the contiguous
+    baseline's closed-batch number."""
+    prompts = _shared_prefix_prompts(requests, prompt_len, cfg.vocab)
+    engine = ServingEngine(
+        params, cfg, batch_size=slots, ctx=prompt_len + gen,
+        page_size=page_size, prefill_chunk=page_size, prefix_cache=prefix_cache,
+    )
+    outputs = engine.run_stream(
+        [Request(tokens=prompts[i], max_new_tokens=gen) for i in range(requests)], 0
+    )
+    s = engine.stats()
+    total_prompt = float(requests * prompt_len)
+    return {
+        **_measure(engine, outputs),
+        "page_utilization": s["page_utilization_peak"],  # peak over the run
+        "prefix_hit_rate": s["prefix_hit_rate"],
+        "preemptions": s["preemptions"],
+        "prefill_tokens_computed": s["prefill_tokens_computed"],
+        "prefill_saved_frac": 1.0 - s["prefill_tokens_computed"] / total_prompt,
+        "paged_tokens_ratio": (
+            s["tokens_per_s"] / contiguous_tokens_per_s
+            if contiguous_tokens_per_s else 0.0
+        ),
+    }
+
+
+def run(smoke: bool = False, backend: str = "xla", page_size: int = 4,
+        prefix_cache: bool = True) -> List[Dict]:
     p = dict(SMOKE if smoke else FULL)
     arrivals = p.pop("arrivals")
     models = {
@@ -119,11 +198,23 @@ def run(smoke: bool = False, backend: str = "xla") -> List[Dict]:
     for name, cfg in models.items():
         params = api.init_model(jax.random.PRNGKey(0), cfg)
         check_token_identity(cfg, params, p["slots"], p["prompt_len"], p["gen"], p["requests"])
-        warmup(cfg, params, p["slots"], p["prompt_len"], p["gen"])
+        warmup(cfg, params, p["slots"], p["prompt_len"], p["gen"], page_size=page_size)
+        closed_tps = 0.0
         for arrival in arrivals:
             m = serve_sweep(cfg, params, arrival_every=arrival, **p)
+            if arrival == 0:
+                closed_tps = m["tokens_per_s"]
             rows.append({"model": name, "backend": backend, "arrival_every": arrival,
                          **p, **m})
+        if page_size:
+            check_paged_identity(cfg, params, p["slots"], p["prompt_len"],
+                                 p["gen"], page_size)
+            m = paged_sweep(cfg, params, page_size=page_size,
+                            prefix_cache=prefix_cache,
+                            contiguous_tokens_per_s=closed_tps, **p)
+            rows.append({"model": f"{name}-paged", "backend": backend,
+                         "arrival_every": 0, "page_size": page_size,
+                         "prefix_cache": prefix_cache, **p, **m})
     return rows
 
 
@@ -137,21 +228,32 @@ def log_perf(rows: List[Dict], out: str) -> None:
                 log = [e for e in json.load(f) if not str(e.get("cell", "")).startswith("S:serving")]
         except (json.JSONDecodeError, OSError):
             log = []
+    paged_keys = ("page_utilization", "prefix_hit_rate", "preemptions",
+                  "prefill_tokens_computed", "prefill_saved_frac",
+                  "paged_tokens_ratio", "page_size", "prefix_cache")
     for r in rows:
         load = "closed" if r["arrival_every"] <= 0 else f"every{r['arrival_every']}"
+        paged = "-paged" in str(r["model"])
         log.append({
             "cell": "S:serving",
             "name": f"{r['model']}-{load}",
             "backend": r.get("backend", "xla"),
-            "hypothesis": "MoD decode steps faster than the equal-size dense "
-                          "model under continuous batching (paper Fig. 6); "
-                          "routed fraction tracks round(ratio*B)/B.",
+            "hypothesis": (
+                "block-paged pool + prefix cache: identical tokens to the "
+                "contiguous pool, with prefill savings on shared prefixes "
+                "and memory proportional to live pages."
+                if paged else
+                "MoD decode steps faster than the equal-size dense "
+                "model under continuous batching (paper Fig. 6); "
+                "routed fraction tracks round(ratio*B)/B."
+            ),
             "status": "ok",
             **{k: (None if isinstance(r[k], float) and not np.isfinite(r[k]) else r[k])
                for k in ("tokens_per_s", "latency_p50_steps",
                          "latency_p95_steps", "queue_wait_mean_steps",
                          "mean_occupancy", "routed_frac",
                          "kv_cache_bytes", "steps", "wall_s")},
+            **{k: r[k] for k in paged_keys if k in r},
         })
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
@@ -159,9 +261,11 @@ def log_perf(rows: List[Dict], out: str) -> None:
 
 
 def main(
-    smoke: bool = False, out: str = "results/perf_log.json", backend: str = "xla"
+    smoke: bool = False, out: str = "results/perf_log.json", backend: str = "xla",
+    page_size: int = 4, prefix_cache: bool = True,
 ) -> List[str]:
-    rows = run(smoke=smoke, backend=backend)
+    rows = run(smoke=smoke, backend=backend, page_size=page_size,
+               prefix_cache=prefix_cache)
     log_perf(rows, out)
     lines = []
     for r in rows:
@@ -174,6 +278,12 @@ def main(
             lines.append(
                 f"serving/{r['model']}_{load}_routed_frac,{r['routed_frac']:.3f},"
                 f"target round(ratio*B)/B"
+            )
+        if "prefix_hit_rate" in r:
+            lines.append(
+                f"serving/{r['model']}_prefix_hit_rate,{r['prefix_hit_rate']:.3f},"
+                f"prefill_saved={r['prefill_saved_frac']:.2f} "
+                f"page_util={r['page_utilization']:.2f}"
             )
     mod = [r for r in rows if r["model"] == "mod" and r["arrival_every"] == 0]
     den = [r for r in rows if r["model"] == "dense" and r["arrival_every"] == 0]
@@ -193,5 +303,11 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "pallas_fused"],
                     help="MoD dispatch backend for the mod model's sweeps")
+    ap.add_argument("--page-size", type=int, default=4,
+                    help="KV-page size for the paged-pool sweep (0 disables)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache", action="store_true",
+                    default=True, help="prefix cache in the paged sweep (default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache", action="store_false")
     a = ap.parse_args()
-    print("\n".join(main(smoke=a.smoke, out=a.out, backend=a.backend)))
+    print("\n".join(main(smoke=a.smoke, out=a.out, backend=a.backend,
+                         page_size=a.page_size, prefix_cache=a.prefix_cache)))

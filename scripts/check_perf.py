@@ -71,6 +71,19 @@ def check_structure(cells: List[Dict]) -> List[str]:
             errors.append(f"missing {DISPATCH_CELL} cell for backend {b!r}")
     if not any(c == SERVING_CELL for c, _ in idx):
         errors.append(f"no {SERVING_CELL} cells in snapshot")
+    # paged-pool cells (PR 5+): every *-paged-* serving cell must carry the
+    # page-utilization + prefix-hit telemetry; at least one must exist.
+    # First appearance is fine for the tolerance gate (check_regression
+    # reports baseline-less cells as "new", never failed).
+    paged = [e for (c, n), e in idx.items()
+             if c == SERVING_CELL and "-paged" in n]
+    if not paged:
+        errors.append(f"no paged {SERVING_CELL} cells in snapshot "
+                      "(benchmarks/serving.py --page-size)")
+    for e in paged:
+        for k in ("page_utilization", "prefix_hit_rate", "paged_tokens_ratio"):
+            if k not in e:
+                errors.append(f"{SERVING_CELL}/{e.get('name')}: missing {k}")
     return errors
 
 

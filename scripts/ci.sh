@@ -3,8 +3,10 @@
 # workflow lanes (.github/workflows/ci.yml):
 #
 #   unit      full pytest suite on one CPU device (pallas in interpret mode)
-#   backends  routing-backend equivalence tests (incl. fused kernels) in
-#             isolation
+#             — includes tests/test_paged.py: paged-vs-contiguous token
+#             identity, prefix-cache reuse, page-exhaustion preemption
+#   backends  routing-backend equivalence tests (incl. fused kernels) and
+#             paged gather/scatter kernel oracles in isolation
 #   spmd      SPMD routed execution on a real 8-device CPU mesh
 #             (XLA_FLAGS=--xla_force_host_platform_device_count=8 in a
 #             fresh process: test_routing_spmd + test_sharding +
@@ -46,6 +48,8 @@ stage backends
 python -m pytest -x -q tests/test_routing_backends.py
 # fused-dispatch kernels again in isolation (interpret=True on CPU)
 python -m pytest -x -q tests/test_routing_backends.py -k "fused"
+# paged-pool gather/scatter kernels vs the ref.py oracles
+python -m pytest -x -q tests/test_paged.py -k "kernels"
 stage_done backends $((SECONDS - STAGE_T0))
 
 stage spmd

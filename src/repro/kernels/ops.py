@@ -12,8 +12,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged as _pg
 from repro.kernels import routing as _rt
 from repro.kernels import ssd as _ssd
 from repro.kernels import swiglu as _sw
@@ -84,6 +86,61 @@ def routed_attention_op(
         block_k=block_k or _fa.ROUTED_BLOCK_K, interpret=interp,
     )
     return _routed_attention_jit(x, idx, pos_sub, params, spec)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-pool ops (serve/cache.PagedCachePool). The pallas kernels use the
+# canonical (N, p, F) layout; these wrappers fold a cache leaf's lead dims
+# (layer-group stacks) and tail dims (heads, head_dim) into F and back.
+# ---------------------------------------------------------------------------
+
+
+def _canon_pages(pages, page_axis):
+    """lead + (N, p) + tail  ->  ((N, p, F), tail-shape-after-transpose)."""
+    nlead = page_axis
+    perm = (page_axis, page_axis + 1) + tuple(range(nlead)) + tuple(
+        range(page_axis + 2, pages.ndim)
+    )
+    t = pages.transpose(perm)
+    rest = t.shape[2:]
+    return t.reshape(t.shape[0], t.shape[1], max(1, int(np.prod(rest, dtype=int)))), rest
+
+
+def _uncanon(out, rest, page_axis, merged_axes=2):
+    """(X, Y, F) (or (X*Y, F)) back to lead + (X, Y) + tail at page_axis."""
+    nlead = page_axis
+    o = out.reshape(out.shape[:merged_axes] + tuple(rest))
+    perm = tuple(range(merged_axes, merged_axes + nlead)) + tuple(
+        range(merged_axes)
+    ) + tuple(range(merged_axes + nlead, o.ndim))
+    return o.transpose(perm)
+
+
+def paged_gather_op(
+    pages, table, *, page_axis=0, backend="xla", interpret=None
+):
+    """Materialize logical (B, ctx) views from a paged leaf + page table."""
+    if backend == "xla":
+        return _pg.paged_gather_xla(pages, table, page_axis)
+    interp = on_cpu() if interpret is None else interpret
+    canon, rest = _canon_pages(pages, page_axis)
+    out = _pg.paged_gather_pallas(canon, table, interpret=interp)  # (B, P*p, F)
+    return _uncanon(out, rest, page_axis)
+
+
+def paged_scatter_rows_op(
+    pages, table, rows, pos, *, page_axis=0, backend="xla", interpret=None
+):
+    """Scatter one decode row per slot into its tail page."""
+    if backend == "xla":
+        return _pg.paged_scatter_rows_xla(pages, table, rows, pos, page_axis)
+    interp = on_cpu() if interpret is None else interpret
+    canon, rest = _canon_pages(pages, page_axis)
+    nlead = page_axis
+    rperm = (page_axis,) + tuple(range(nlead)) + tuple(range(page_axis + 1, rows.ndim))
+    rcanon = rows.transpose(rperm).reshape(rows.shape[page_axis], -1)  # (B, F)
+    out = _pg.paged_scatter_rows_pallas(canon, table, rcanon, pos, interpret=interp)
+    return _uncanon(out, rest, page_axis)
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))

@@ -98,6 +98,44 @@ def scatter_add_rows_ref(
 
 
 # ---------------------------------------------------------------------------
+# Paged KV-pool oracles (serve/cache.PagedCachePool; canonical (N, p, F)
+# layout): literal per-slot loops, independent of both the XLA take/at-set
+# formulation and the pallas grid kernels.
+# ---------------------------------------------------------------------------
+
+
+def paged_gather_ref(pages: jax.Array, table: jax.Array) -> jax.Array:
+    """out[b, i*p + r] = pages[table[b, i], r]. pages (N,p,F), table (B,P)."""
+    import numpy as np
+
+    pages_np, table_np = np.asarray(pages), np.asarray(table)
+    _, p, F = pages_np.shape
+    B, P = table_np.shape
+    out = np.zeros((B, P * p, F), pages_np.dtype)
+    for b in range(B):
+        for i in range(P):
+            out[b, i * p : (i + 1) * p] = pages_np[table_np[b, i]]
+    return jnp.asarray(out)
+
+
+def paged_scatter_rows_ref(
+    pages: jax.Array,  # (N, p, F)
+    table: jax.Array,  # (B, P)
+    rows: jax.Array,  # (B, F)
+    pos: jax.Array,  # (B,) logical positions
+) -> jax.Array:
+    """pages[table[b, pos[b]//p], pos[b]%p] = rows[b], slot by slot."""
+    import numpy as np
+
+    pages_np = np.asarray(pages).copy()
+    table_np, rows_np, pos_np = np.asarray(table), np.asarray(rows), np.asarray(pos)
+    p = pages_np.shape[1]
+    for b in range(pos_np.shape[0]):
+        pages_np[table_np[b, pos_np[b] // p], pos_np[b] % p] = rows_np[b]
+    return jnp.asarray(pages_np)
+
+
+# ---------------------------------------------------------------------------
 # Fused routed-block oracles (the "pallas_fused" backend, paper Eq. 1 with
 # the dispatch folded into the compute): direct one-pass formulations built
 # on the one-hot gather/scatter above.

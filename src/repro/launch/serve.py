@@ -53,6 +53,18 @@ def main() -> None:
                          "device_count=8)")
     ap.add_argument("--model-axis", type=int, default=1,
                     help="tensor-parallel degree of the --spmd mesh")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="block-paged KV pool with this page size (0 = "
+                         "contiguous pool); memory scales with live pages, "
+                         "admission is page-aware, OOM preempts")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="physical page count (default: batch*ctx/page-size)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse chunk-aligned shared prompt prefixes across "
+                         "requests (requires --page-size)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked batched prefill piece size (dense/MoE; "
+                         "0 = whole prompt in one jitted call)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -85,7 +97,11 @@ def main() -> None:
 
     ctx = args.prompt_len + args.gen
     engine = ServingEngine(
-        params, cfg, batch_size=args.batch, ctx=ctx, policy=args.policy, mesh=mesh
+        params, cfg, batch_size=args.batch, ctx=ctx, policy=args.policy, mesh=mesh,
+        page_size=args.page_size or None,
+        n_pages=args.n_pages or None,
+        prefix_cache=args.prefix_cache,
+        prefill_chunk=args.prefill_chunk or None,
     )
 
     outputs = engine.run_stream(
@@ -116,6 +132,13 @@ def main() -> None:
               f"spread={np.nanstd(scores):.3f}; "
               f"KV pool {kv['total']/2**20:.1f} MiB "
               f"(mod/full cache ratio {kv['mod_vs_full_ratio']:.2f})")
+    if args.page_size:
+        print(f"[serve] paged pool: page_size={args.page_size} "
+              f"pages={s['n_pages']:.0f} "
+              f"peak_utilization={s['page_utilization_peak']:.2f} "
+              f"prefix_hit_rate={s['prefix_hit_rate']:.2f} "
+              f"preemptions={s['preemptions']:.0f} "
+              f"prefill_tokens_computed={s['prefill_tokens_computed']:.0f}")
     first = min(outputs, key=lambda o: o.uid)
     print(f"[serve] sample continuation: {first.tokens[-10:].tolist()}")
 

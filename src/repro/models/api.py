@@ -169,6 +169,27 @@ def model_prefill(
     raise NotImplementedError(f"prefill for family {cfg.family} uses forward+decode")
 
 
+def model_prefill_chunk(
+    params: Params,
+    cfg: ModelConfig,
+    caches: Params,
+    tokens: jax.Array,  # (B, C) fixed-size chunk (padded tail allowed)
+    start: jax.Array,  # scalar int32 — absolute position of tokens[:, 0]
+    n_valid: jax.Array,  # scalar int32 — real tokens in the chunk
+) -> Tuple[jax.Array, Params]:
+    """One continuation-prefill chunk against partially-filled caches.
+
+    Batched-prefill families only (dense/MoE); the serving engine's chunked
+    prefill and prefix-cache continuation both run on this. Returns the
+    chunk's last-valid-position logits + updated caches.
+    """
+    if cfg.family in ("dense", "moe"):
+        return T.prefill_chunk(params, cfg, caches, tokens, start, n_valid)
+    raise NotImplementedError(
+        f"chunked prefill for family {cfg.family}: prompts ingest via decode steps"
+    )
+
+
 # ---------------------------------------------------------------------------
 # Dry-run input specs (no allocation)
 # ---------------------------------------------------------------------------

@@ -511,6 +511,34 @@ def decode_attention(
     return out, cache
 
 
+def chunk_self_attention(
+    params: Params,
+    x: jax.Array,  # (B, C, D) one prefill chunk
+    positions: jax.Array,  # (B, C); padded tail entries are -1
+    cache: Params,
+    cfg: ModelConfig,
+    write_mask: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Params]:
+    """Continuation-prefill attention: one chunk against a partial cache.
+
+    Unlike :func:`prefill_self_attention` (which attends only within the
+    chunk), queries here attend over the *cache* — earlier chunks' KV plus
+    this chunk's own entries, written first. Position masking makes that
+    exactly causal: a query at position t sees cache entries with
+    ``0 <= kv_pos <= t`` and nothing else (empty slots are pos = -1, and
+    padded chunk tails are skipped by the write mask). This is the decode
+    step's read pattern generalized to C > 1 — the chunked-prefill building
+    block that keeps one long prompt from monopolizing an engine step.
+    """
+    q = _project_q(params, x, cfg)
+    k, v = _project_kv(params, x, cfg)
+    q, k = _rope_qk(q, k, positions, positions, cfg)
+    tp = _t_pos(positions)
+    cache = cache_write(cache, k, v, tp, write_mask)
+    out = attend_auto(q, cache["k"], cache["v"], tp, cache["pos"], cfg)
+    return out @ params["wo"], cache
+
+
 def prefill_self_attention(
     params: Params,
     x: jax.Array,

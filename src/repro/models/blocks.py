@@ -148,6 +148,26 @@ def block_prefill(
     return out, cache, aux
 
 
+def block_chunk(
+    p: Params,
+    x: jax.Array,  # (B, C, D) one prefill chunk
+    positions: jax.Array,  # (B, C); -1 = padded tail
+    cache: Params,
+    cfg: ModelConfig,
+    write_mask: Optional[jax.Array] = None,
+    delta_only: bool = False,
+) -> Tuple[jax.Array, Params, Aux]:
+    """Continuation-prefill block: attend over cache + chunk (see
+    attention.chunk_self_attention), then the block MLP."""
+    a, cache = A.chunk_self_attention(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions, cache, cfg, write_mask
+    )
+    h = x + a
+    m, aux = _ffn(p, h, cfg)
+    out = (a + m) if delta_only else (h + m)
+    return out, cache, aux
+
+
 def block_decode(
     p: Params,
     x: jax.Array,  # (B, 1, D)

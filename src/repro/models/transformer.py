@@ -291,6 +291,94 @@ def prefill(
 
 
 # ---------------------------------------------------------------------------
+# Chunked / continuation prefill
+# ---------------------------------------------------------------------------
+
+
+def _mod_chunk_group(gp, h, positions, cache, cfg):
+    """Per-chunk token_topk routing for continuation prefill.
+
+    The router selects the top ``capacity(C)`` tokens *within this chunk*
+    (masked so padded tail positions can never win a slot or contribute a
+    gated delta); routed tokens attend over the MoD ring — earlier chunks'
+    routed KV plus their own. This is the compute/quality scheduling
+    trade-off of chunked adaptive-compute serving (Elbayad et al. 2020;
+    Bapna et al. 2020): routing is chunk-local rather than whole-prompt,
+    in exchange for a fixed per-step prefill footprint.
+    """
+    k_cap = cfg.mod.capacity(h.shape[1])
+    logits = R.router_logits(gp["router"], h)
+    valid = positions >= 0
+    idx, gate_logits, mask = R.mod_select(
+        jnp.where(valid, logits, -jnp.inf), k_cap, cfg.mod, None
+    )
+    gate = R.apply_gate(gate_logits, cfg.mod)
+    gate = jnp.where(jnp.take_along_axis(valid, idx, axis=1), gate, 0.0)
+    decision = ROUT.RouteDecision("token_topk", idx, gate, mask, logits)
+    filled = {}
+
+    def delta_fn(h_sub, pos_sub):
+        delta, c, _ = BLK.block_chunk(
+            gp["block"], h_sub, pos_sub, cache, cfg, delta_only=True
+        )
+        filled["cache"] = c
+        return delta, {}
+
+    h, _ = ROUT.execute_routed(decision, h, delta_fn, cfg, positions)
+    return h, filled["cache"]
+
+
+def prefill_chunk(
+    params: Params,
+    cfg: ModelConfig,
+    caches: Params,
+    tokens: jax.Array,  # (B, C) — one fixed-size chunk (padded tail ok)
+    start: jax.Array,  # scalar int32: absolute position of tokens[:, 0]
+    n_valid: jax.Array,  # scalar int32: real tokens in this chunk (<= C)
+) -> Tuple[jax.Array, Params]:
+    """One continuation-prefill step: ingest ``tokens[:, :n_valid]`` at
+    positions ``start..start+n_valid`` against partially-filled caches.
+
+    Returns (last-valid-position logits (B, V), updated caches). ``start``
+    and ``n_valid`` are traced scalars, so one compiled signature serves
+    every chunk of every prompt length — the serving engine's retrace cache
+    cannot grow with prompt-length diversity. Bit-identical to running the
+    same chunk schedule anywhere else (the prefix cache relies on this:
+    chunk-boundary state is a pure function of the token prefix).
+    """
+    x = embed(params["embed"], tokens)
+    x = constrain_batch(x)
+    B, C = tokens.shape
+    ar = jnp.arange(C, dtype=jnp.int32)
+    positions = jnp.where(ar[None, :] < n_valid, start + ar[None, :], -1)
+    positions = jnp.broadcast_to(positions, (B, C)).astype(jnp.int32)
+
+    def body(h, xs):
+        gp, gc = xs
+        new_c = {}
+        if "full" in gp:
+            h, c, _ = BLK.block_chunk(gp["full"], h, positions, gc["full"], cfg)
+            new_c["full"] = c
+        if "mod" in gp:
+            h, c = _mod_chunk_group(gp["mod"], h, positions, gc["mod"], cfg)
+            new_c["mod"] = c
+        return constrain_batch(h), new_c
+
+    x, new_groups = scan_or_loop(
+        body, x, (params["groups"], caches["groups"]), unroll=cfg.unroll_layers
+    )
+    out_caches: Params = {"groups": new_groups}
+    if "tail" in params:
+        x, c, _ = BLK.block_chunk(params["tail"], x, positions, caches["tail"], cfg)
+        out_caches["tail"] = c
+    last = jnp.clip(n_valid - 1, 0, C - 1)
+    x = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)  # (B, 1, D)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, out_caches
+
+
+# ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------
 

@@ -7,10 +7,13 @@ Public surface:
 - :class:`~repro.serve.request.Request` / ``RequestOutput`` — job in / out.
 - :class:`~repro.serve.scheduler.Scheduler` — slot admission policies.
 - :class:`~repro.serve.cache.CachePool` — pooled, capacity-sized KV cache.
+- :class:`~repro.serve.cache.PagedCachePool` — block-paged KV pool with
+  refcounted pages, lazy growth, and a hash-chained prompt-prefix cache
+  (``ServingEngine(page_size=...)``).
 
 See DESIGN.md §Serving engine for the architecture.
 """
-from repro.serve.cache import CachePool  # noqa: F401
+from repro.serve.cache import CachePool, PagedCachePool  # noqa: F401
 from repro.serve.engine import ServingEngine, routed_capacity  # noqa: F401
 from repro.serve.request import (  # noqa: F401
     FINISH_EOS,

@@ -1,10 +1,19 @@
-"""Pooled KV-cache allocator for the serving engine.
+"""KV-cache allocators for the serving engine: contiguous and block-paged.
 
-One cache pytree of fixed shape backs the whole engine: ``B`` slots by
-``ctx`` positions, built once with :func:`repro.models.api.make_caches`.
-MoD-block caches inside it are capacity-sized (``ratio * ctx`` — the
-paper's KV-memory saving), so the pool's footprint already reflects the
-MoD serving win; :meth:`CachePool.cache_bytes` reports it.
+:class:`CachePool`: one cache pytree of fixed shape backs the whole
+engine: ``B`` slots by ``ctx`` positions, built once with
+:func:`repro.models.api.make_caches`. MoD-block caches inside it are
+capacity-sized (``ratio * ctx`` — the paper's KV-memory saving), so the
+pool's footprint already reflects the MoD serving win;
+:meth:`CachePool.cache_bytes` reports it.
+
+:class:`PagedCachePool`: the same logical pool with full-attention KV
+stored as refcounted ``(n_pages, page_size, ...)`` blocks behind per-slot
+page tables — lazy page growth, scrub-on-recycle, a hash-chained
+prompt-prefix cache with LRU eviction, and per-leaf-kind accounting (MoD
+routed rings stay capacity-sized + ring-addressed in the residual pool).
+DESIGN.md §Serving engine documents the page-table layout and the
+NULL/SCRATCH reserved-page contract.
 
 Slot lifecycle is two jitted scatter ops, both O(slot) and shape-stable:
 
@@ -29,10 +38,14 @@ are only ever touched by — the data shard that owns the slot.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+import dataclasses
+import hashlib
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import api
@@ -106,5 +119,636 @@ class CachePool:
             sizes["total"] += b
             keys = [getattr(p, "key", None) for p in path]
             sizes["mod" if "mod" in keys else "full"] += b
+        sizes["mod_vs_full_ratio"] = sizes["mod"] / sizes["full"] if sizes["full"] else 0.0
+        return sizes
+
+
+# ---------------------------------------------------------------------------
+# Block-paged pool
+# ---------------------------------------------------------------------------
+
+# Reserved physical pages. NULL backs every *unmapped* logical page of an
+# active slot: its content is the pristine template (cache positions -1, so
+# attention masks it out) and it is never written — active slots only write
+# at their own `pos`, which always lands in a mapped page. SCRATCH backs the
+# page tables of FREE slots: the shared decode step still "writes" their
+# (inactive, pos=0) rows somewhere, and scratch absorbs that garbage without
+# ever being read by a live request.
+NULL_PAGE = 0
+SCRATCH_PAGE = 1
+_RESERVED = 2
+
+
+def _paged_leaf_axes(cfg: ModelConfig, batch: int, ctx: int) -> Dict[int, int]:
+    """{flat-leaf index -> batch axis} for every *pageable* cache leaf.
+
+    Pageable = a position-addressed ring leaf ("k"/"v"/"pos" with a "cursor"
+    sibling) whose capacity is the full ``ctx`` — i.e. the full-attention KV
+    rings, where the engine's write cursor equals the absolute position.
+    MoD routed-block leaves (capacity-sized, ring-addressed by routed-step
+    count, under a "mod" key), SSM states, cursors and enc-dec cross-KV all
+    stay slot-contiguous in the residual pool.
+    """
+    specs = jax.tree_util.tree_flatten_with_path(
+        api.make_caches(cfg, batch, ctx, specs=True)
+    )[0]
+    axes = jax.tree_util.tree_leaves(_batch_axes(cfg, batch, ctx))
+    key_tuples = {
+        tuple(getattr(p, "key", None) for p in path) for path, _ in specs
+    }
+    paged: Dict[int, int] = {}
+    for i, ((path, spec), ax) in enumerate(zip(specs, axes)):
+        keys = tuple(getattr(p, "key", None) for p in path)
+        if "mod" in keys or keys[-1] not in ("k", "v", "pos"):
+            continue
+        if keys[:-1] + ("cursor",) not in key_tuples:
+            continue
+        if len(spec.shape) <= ax + 1 or spec.shape[ax + 1] != ctx:
+            continue
+        paged[i] = ax
+    return paged
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Static description of a paged pool's leaf layout.
+
+    Hashable and array-free, so the engine's jitted decode step can close
+    over it without retaining any particular pool instance's storage (the
+    shared jit cache would otherwise pin the first engine's pages alive).
+    """
+
+    paged_ids: Tuple[int, ...]
+    paged_axes: Tuple[int, ...]
+    resid_ids: Tuple[int, ...]
+    treedef: Any
+    page_size: int
+    backend: str
+
+
+def paged_materialize(
+    spec: PoolSpec, pages: List[jax.Array], resid: List[jax.Array], table: jax.Array
+) -> Any:
+    """Logical (B, ctx) cache pytree from paged + residual storage — pure,
+    called inside the engine's jitted decode step."""
+    from repro.kernels.ops import paged_gather_op
+
+    leaves: List[Any] = [None] * (len(spec.paged_ids) + len(spec.resid_ids))
+    for j, (i, ax) in enumerate(zip(spec.paged_ids, spec.paged_axes)):
+        leaves[i] = paged_gather_op(
+            pages[j], table, page_axis=ax, backend=spec.backend
+        )
+    for j, i in enumerate(spec.resid_ids):
+        leaves[i] = resid[j]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def paged_writeback(
+    spec: PoolSpec,
+    new_caches: Any,
+    pages: List[jax.Array],
+    table: jax.Array,
+    pos: jax.Array,
+) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """Split an updated logical cache back into (pages, resid) storage.
+
+    The decode step mutates each paged leaf at exactly one logical position
+    per slot — its absolute ``pos`` (full-capacity rings write at their
+    cursor, and cursor == pos for ctx-capacity leaves; asserted by the
+    paged-vs-contiguous equality tests) — so only that row is scattered
+    into the slot's tail page.
+    """
+    from repro.kernels.ops import paged_scatter_rows_op
+
+    leaves = jax.tree_util.tree_leaves(new_caches)
+    new_pages: List[jax.Array] = []
+    for j, (i, ax) in enumerate(zip(spec.paged_ids, spec.paged_axes)):
+        view = leaves[i]  # lead + (B, ctx) + tail
+        idx = pos.reshape((1,) * ax + (-1, 1) + (1,) * (view.ndim - ax - 2))
+        rows = jnp.squeeze(
+            jnp.take_along_axis(view, idx.astype(jnp.int32), axis=ax + 1), ax + 1
+        )
+        new_pages.append(
+            paged_scatter_rows_op(
+                pages[j], table, rows, pos, page_axis=ax, backend=spec.backend
+            )
+        )
+    new_resid = [leaves[i] for i in spec.resid_ids]
+    return new_pages, new_resid
+
+
+def lru_cached(cache: "OrderedDict", key: Any, make, maxsize: int):
+    """Bounded-LRU memo: the one implementation behind this module's pool-op
+    cache and serve/engine.py's jit cache. Eviction only drops the cache's
+    reference — live holders keep theirs."""
+    v = cache.get(key)
+    if v is None:
+        v = cache[key] = make()
+        while len(cache) > maxsize:
+            cache.popitem(last=False)
+    else:
+        cache.move_to_end(key)
+    return v
+
+
+# Jitted slot-lifecycle ops shared across PagedCachePool instances (the
+# benchmarks build several engines per sweep; per-instance jax.jit of bound
+# methods would re-trace and re-compile each time). Keyed by everything the
+# traces depend on; closures capture only batch-1 template arrays — never a
+# pool instance — so a cached op can't pin any pool's page storage alive.
+_POOL_OPS_CACHE: "OrderedDict[Any, Tuple]" = OrderedDict()
+_POOL_OPS_MAX = 16
+
+
+def _build_pool_ops(cfg: ModelConfig, batch: int, ctx: int, page_size: int,
+                    backend: str) -> Tuple:
+    full = api.make_caches(cfg, batch, ctx, specs=True)
+    _, treedef = jax.tree_util.tree_flatten(full)
+    axes = jax.tree_util.tree_leaves(_batch_axes(cfg, batch, ctx))
+    paged_axes = _paged_leaf_axes(cfg, batch, ctx)
+    paged_ids = sorted(paged_axes)
+    n_leaves = len(axes)
+    resid_ids = [i for i in range(n_leaves) if i not in paged_axes]
+    resid_axes = [axes[i] for i in resid_ids]
+    tmpl_flat = jax.tree_util.tree_leaves(api.make_caches(cfg, 1, ctx))
+    tmpl_resid = [tmpl_flat[i] for i in resid_ids]
+    tmpl_pages = [
+        jax.lax.slice_in_dim(
+            jax.lax.index_in_dim(tmpl_flat[i], 0, paged_axes[i], keepdims=False),
+            0, page_size, axis=paged_axes[i],
+        )
+        for i in paged_ids
+    ]
+    P = ctx // page_size
+
+    def reset_resid(resid, slot):
+        return [
+            jax.lax.dynamic_update_slice_in_dim(r, t.astype(r.dtype), slot, axis=ax)
+            for r, t, ax in zip(resid, tmpl_resid, resid_axes)
+        ]
+
+    def write(pages, resid, sub, dest, slot):
+        # ``dest`` (P,) routes each logical page to its physical page —
+        # entries set to SCRATCH_PAGE (shared prefix pages, unmapped tail)
+        # are dropped into the scratch page
+        sub_flat = jax.tree_util.tree_leaves(sub)
+        new_pages = []
+        for j, i in enumerate(paged_ids):
+            ax = paged_axes[i]
+            s = jax.lax.index_in_dim(sub_flat[i], 0, ax, keepdims=False)
+            s = s.reshape(s.shape[:ax] + (P, page_size) + s.shape[ax + 1 :])
+            idx = (slice(None),) * ax + (dest,)
+            new_pages.append(pages[j].at[idx].set(s.astype(pages[j].dtype)))
+        new_resid = [
+            jax.lax.dynamic_update_slice_in_dim(
+                r, sub_flat[i].astype(r.dtype), slot, axis=ax
+            )
+            for r, i, ax in zip(resid, resid_ids, resid_axes)
+        ]
+        return new_pages, new_resid
+
+    def scrub(pages, ids):
+        # rewrite physical pages ``ids`` (P,; SCRATCH entries harmless) to
+        # template content, so a recycled page can't leak a previous
+        # request's KV (or stale valid-looking positions) into a new slot
+        out = []
+        for j, i in enumerate(paged_ids):
+            ax = paged_axes[i]
+            t = jnp.broadcast_to(
+                jnp.expand_dims(tmpl_pages[j], ax),
+                tmpl_pages[j].shape[:ax] + (ids.shape[0],) + tmpl_pages[j].shape[ax:],
+            )
+            idx = (slice(None),) * ax + (ids,)
+            out.append(pages[j].at[idx].set(t.astype(pages[j].dtype)))
+        return out
+
+    def read(pages, resid, table_row, slot):
+        # batch-1 logical cache for one slot (chunked prefill works on
+        # this view, then write_slot puts it back)
+        from repro.kernels.ops import paged_gather_op
+
+        leaves: List[Any] = [None] * n_leaves
+        for j, i in enumerate(paged_ids):
+            leaves[i] = paged_gather_op(
+                pages[j], table_row[None], page_axis=paged_axes[i], backend=backend
+            )
+        for j, i in enumerate(resid_ids):
+            leaves[i] = jax.lax.dynamic_slice_in_dim(
+                resid[j], slot, 1, axis=resid_axes[j]
+            )
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return tuple(jax.jit(f) for f in (reset_resid, write, scrub, read))
+
+
+def _pool_ops(cfg: ModelConfig, batch: int, ctx: int, page_size: int,
+              backend: str) -> Tuple:
+    return lru_cached(
+        _POOL_OPS_CACHE,
+        (cfg, batch, ctx, page_size, backend),
+        lambda: _build_pool_ops(cfg, batch, ctx, page_size, backend),
+        _POOL_OPS_MAX,
+    )
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One memoized chunk-aligned prompt prefix.
+
+    ``pages`` are the shared physical pages holding the prefix's
+    full-attention KV; ``resid`` is the batch-1 snapshot of the non-paged
+    prefix-dependent state at the boundary (MoD ring caches + cursors), so
+    restoring an entry reproduces the *exact* chunked-prefill state — reuse
+    is bit-identical to recomputing the prefix.
+    """
+
+    n_tokens: int
+    pages: Tuple[int, ...]
+    resid: Dict[int, jax.Array]  # flat-leaf index -> batch-1 leaf value
+
+
+class PagedCachePool:
+    """Block-paged KV pool: page tables + free-list + prefix cache.
+
+    Full-attention KV leaves are stored as ``(n_pages, page_size, ...)``
+    physical blocks shared by all slots; each slot owns a logical page
+    table row of ``P = ctx // page_size`` entries. Everything else (MoD
+    capacity-sized rings, SSM state, cursors, cross-KV) stays in a
+    slot-contiguous *residual* pool, exactly as in :class:`CachePool` —
+    page accounting is per-leaf-kind. Engine memory therefore scales with
+    *actual* sequence lengths (pages allocate lazily as slots grow) and
+    shared prompt prefixes are stored once (hash-chained prefix cache with
+    refcounted pages + LRU eviction of unreferenced entries).
+
+    The decode step stays once-compiled and fixed-shape: ``materialize``
+    rebuilds the logical ``(B, ctx)`` cache pytree from the page tables
+    (kernels/paged gather) inside the jitted step, and ``writeback``
+    scatters the step's one new row per slot into its tail page.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        batch_size: int,
+        ctx: int,
+        page_size: int,
+        n_pages: Optional[int] = None,
+        prefix_chunk: Optional[int] = None,
+        backend: str = "xla",
+        prefix_max_entries: int = 64,
+    ):
+        if page_size < 1 or ctx % page_size:
+            raise ValueError(
+                f"page_size {page_size} must divide ctx {ctx}"
+            )
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.ctx = ctx
+        self.page_size = page_size
+        self.pages_per_slot = P = ctx // page_size
+        self.n_pages = int(n_pages) if n_pages else batch_size * P + _RESERVED
+        if self.n_pages < _RESERVED + 1:
+            raise ValueError(f"n_pages {self.n_pages} leaves no allocatable page")
+        self.backend = backend
+        # prefix-cache hashing granularity (engine's prefill_chunk); page-
+        # aligned so cached boundaries cover only *full* pages
+        self.prefix_chunk = prefix_chunk
+        if prefix_chunk is not None and prefix_chunk % page_size:
+            raise ValueError(
+                f"prefix_chunk {prefix_chunk} must be a multiple of "
+                f"page_size {page_size}"
+            )
+        # each entry pins a batch-1 residual snapshot (MoD rings, cursors)
+        # in device memory — real bytes the page accounting alone wouldn't
+        # see — so the registry is capacity-bounded, not just pressure-
+        # evicted, and cache_bytes() reports the snapshot footprint
+        self.prefix_max_entries = prefix_max_entries
+
+        full = api.make_caches(cfg, batch_size, ctx)
+        flat, self._treedef = jax.tree_util.tree_flatten(full)
+        self._axes = jax.tree_util.tree_leaves(_batch_axes(cfg, batch_size, ctx))
+        self._paged_axes = _paged_leaf_axes(cfg, batch_size, ctx)
+        self._paged_ids = sorted(self._paged_axes)
+        self._resid_ids = [i for i in range(len(flat)) if i not in self._paged_axes]
+        self._template = api.make_caches(cfg, 1, ctx)  # batch-1 initial values
+        tmpl_flat = jax.tree_util.tree_leaves(self._template)
+
+        # physical page storage: one template page broadcast n_pages times
+        # (template content is position-uniform: zeros, pos = -1)
+        def phys(i):
+            ax = self._paged_axes[i]
+            t = jax.lax.index_in_dim(tmpl_flat[i], 0, ax, keepdims=False)
+            page = jax.lax.slice_in_dim(t, 0, page_size, axis=ax)  # lead+(p,)+tail
+            return jnp.broadcast_to(
+                jnp.expand_dims(page, ax),
+                page.shape[:ax] + (self.n_pages,) + page.shape[ax:],
+            ).copy()
+
+        self.pages: List[jax.Array] = [phys(i) for i in self._paged_ids]
+        self.resid: List[jax.Array] = [flat[i] for i in self._resid_ids]
+
+        # host-side page accounting
+        self.table_np = np.full((batch_size, P), SCRATCH_PAGE, np.int32)
+        self.n_mapped = np.zeros((batch_size,), np.int64)
+        self.ref = np.zeros((self.n_pages,), np.int64)
+        self.cache_cnt = np.zeros((self.n_pages,), np.int64)  # prefix entries per page
+        self.free: deque = deque(range(_RESERVED, self.n_pages))
+        self.prefix: "OrderedDict[bytes, PrefixEntry]" = OrderedDict()
+        # telemetry
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
+        self.prefix_evictions = 0
+        self.peak_pages_in_use = 0
+
+        (self._reset_resid_fn, self._write_fn, self._scrub_fn,
+         self._read_fn) = _pool_ops(cfg, batch_size, ctx, page_size, backend)
+
+    # -- pure (jitted) cache-movement ops ------------------------------
+
+    def step_spec(self) -> PoolSpec:
+        """Array-free static layout spec for the jitted decode step."""
+        return PoolSpec(
+            paged_ids=tuple(self._paged_ids),
+            paged_axes=tuple(self._paged_axes[i] for i in self._paged_ids),
+            resid_ids=tuple(self._resid_ids),
+            treedef=self._treedef,
+            page_size=self.page_size,
+            backend=self.backend,
+        )
+
+    def materialize(self, pages, resid, table):
+        return paged_materialize(self.step_spec(), pages, resid, table)
+
+    def writeback(self, new_caches, pages, table, pos):
+        return paged_writeback(self.step_spec(), new_caches, pages, table, pos)
+
+    def snapshot_resid(self, work: Any) -> Dict[int, jax.Array]:
+        """Residual-leaf snapshot of a batch-1 working cache (the non-paged
+        prefix-dependent state stored in a PrefixEntry)."""
+        leaves = jax.tree_util.tree_leaves(work)
+        return {i: leaves[i] for i in self._resid_ids}
+
+    def overlay_resid(self, work: Any, resid: Dict[int, jax.Array]) -> Any:
+        """Replace a batch-1 working cache's residual leaves with a
+        snapshot (prefix-cache restore)."""
+        leaves = list(jax.tree_util.tree_leaves(work))
+        for i, v in resid.items():
+            leaves[i] = v
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    # -- slot lifecycle (host-side accounting + jitted data ops) -------
+
+    def device_table(self) -> jax.Array:
+        return jnp.asarray(self.table_np)
+
+    def acquire(self, slot: int) -> None:
+        """Claim a slot for a new request: residual rows back to template,
+        page table to all-NULL (pristine reads until pages are mapped)."""
+        self.release(slot)
+        self.table_np[slot, :] = NULL_PAGE
+        self.resid = self._reset_resid_fn(self.resid, slot)
+
+    def release(self, slot: int) -> None:
+        """Drop the slot's page references; pages go back to the free list
+        unless a prefix-cache entry still pins them."""
+        for j in range(int(self.n_mapped[slot])):
+            pid = int(self.table_np[slot, j])
+            if pid < _RESERVED:
+                continue
+            self.ref[pid] -= 1
+            if self.ref[pid] == 0 and self.cache_cnt[pid] == 0:
+                self.free.append(pid)
+        self.table_np[slot, :] = SCRATCH_PAGE
+        self.n_mapped[slot] = 0
+
+    def _evict_entry(self, key: bytes) -> None:
+        entry = self.prefix.pop(key)
+        self.prefix_evictions += 1
+        for pid in entry.pages:
+            self.cache_cnt[pid] -= 1
+            if self.cache_cnt[pid] == 0 and self.ref[pid] == 0:
+                self.free.append(pid)
+
+    def _pop_free(self) -> Optional[int]:
+        """Pop a free page, evicting prefix entries under pressure.
+
+        Only entries whose eviction actually frees a page are evicted (a
+        page frees iff no slot references it and this entry is its last
+        registry pin) — evicting a still-slot-referenced entry would wipe
+        reusable prefixes while freeing nothing. Oldest qualifying entry
+        first (LRU order)."""
+        while not self.free:
+            victim = None
+            for h, e in self.prefix.items():
+                if any(
+                    self.ref[pid] == 0 and self.cache_cnt[pid] == 1
+                    for pid in e.pages
+                ):
+                    victim = h
+                    break
+            if victim is None:
+                return None
+            self._evict_entry(victim)
+        return self.free.popleft()
+
+    @property
+    def allocatable_pages(self) -> int:
+        """Hard capacity: every page that can ever hold request KV."""
+        return self.n_pages - _RESERVED
+
+    def available_pages(self) -> int:
+        """Pages obtainable right now: free-list + evictable prefix pages."""
+        evictable = int(
+            np.sum((self.ref[_RESERVED:] == 0) & (self.cache_cnt[_RESERVED:] > 0))
+        )
+        return len(self.free) + evictable
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def alloc_pages(self, slot: int, upto_tokens: int) -> bool:
+        """Map (and scrub) owned pages so the slot covers ``upto_tokens``
+        logical positions. False = pool exhausted (caller preempts)."""
+        need = self.pages_needed(upto_tokens)
+        new_ids = []
+        while int(self.n_mapped[slot]) < need:
+            pid = self._pop_free()
+            if pid is None:
+                if new_ids:
+                    self.pages = self._scrub_fn(self.pages, self._pad_ids(new_ids))
+                return False
+            j = int(self.n_mapped[slot])
+            self.table_np[slot, j] = pid
+            self.ref[pid] += 1
+            self.n_mapped[slot] += 1
+            new_ids.append(pid)
+        if new_ids:
+            self.pages = self._scrub_fn(self.pages, self._pad_ids(new_ids))
+        self.peak_pages_in_use = max(
+            self.peak_pages_in_use, int(np.sum(self.ref[_RESERVED:] > 0))
+        )
+        return True
+
+    def _pad_ids(self, ids: List[int]) -> jax.Array:
+        pad = [SCRATCH_PAGE] * (self.pages_per_slot - len(ids))
+        return jnp.asarray((ids + pad)[: self.pages_per_slot], jnp.int32)
+
+    def write_slot(self, slot: int, sub: Any, start_page: int = 0) -> None:
+        """Scatter a batch-1 cache pytree into the slot: residual rows
+        wholesale, paged leaves page-by-page into the slot's *owned* pages
+        (logical pages below ``start_page`` — restored shared prefix — are
+        skipped so shared pages are never rewritten)."""
+        dest = np.full((self.pages_per_slot,), SCRATCH_PAGE, np.int32)
+        n = int(self.n_mapped[slot])
+        dest[start_page:n] = self.table_np[slot, start_page:n]
+        self.pages, self.resid = self._write_fn(
+            self.pages, self.resid, sub, jnp.asarray(dest), slot
+        )
+
+    def read_slot(self, slot: int) -> Any:
+        return self._read_fn(
+            self.pages, self.resid, jnp.asarray(self.table_np[slot]), slot
+        )
+
+    # -- prefix cache ---------------------------------------------------
+
+    def _chain_hashes(self, tokens: np.ndarray) -> List[Tuple[int, bytes]]:
+        """(boundary n_tokens, chain hash) per full prefill chunk."""
+        if self.prefix_chunk is None:
+            return []
+        c = self.prefix_chunk
+        out, h = [], b"paged-prefix"
+        for end in range(c, len(tokens) + 1, c):
+            h = hashlib.sha1(h + np.ascontiguousarray(tokens[end - c : end]).tobytes()).digest()
+            out.append((end, h))
+        return out
+
+    def prefix_probe_pages(self, tokens: np.ndarray) -> int:
+        """Pages a prefix hit would cover for this prompt — admission-gate
+        probe only: touches neither the LRU order nor the hit telemetry."""
+        best = 0
+        for end, h in self._chain_hashes(tokens):
+            if end >= len(tokens) or h not in self.prefix:
+                break
+            best = len(self.prefix[h].pages)
+        return best
+
+    def prefix_match(self, tokens: np.ndarray) -> Optional[Tuple[bytes, PrefixEntry]]:
+        """Longest cached chunk-aligned *proper* prefix of ``tokens``
+        (strictly shorter than the prompt: at least one token must still
+        run through prefill to produce first-token logits)."""
+        best = None
+        for end, h in self._chain_hashes(tokens):
+            if end >= len(tokens):
+                break
+            e = self.prefix.get(h)
+            if e is None:
+                break
+            best = (h, e)
+        self.prefix_lookup_tokens += len(tokens)
+        return best
+
+    def prefix_attach(self, slot: int, key: bytes) -> Dict[int, jax.Array]:
+        """Map a cached prefix's shared pages into the slot (incref) and
+        return the residual-state snapshot to resume prefill from."""
+        entry = self.prefix[key]
+        self.prefix.move_to_end(key)
+        n = len(entry.pages)
+        for j, pid in enumerate(entry.pages):
+            self.table_np[slot, j] = pid
+            self.ref[pid] += 1
+        self.n_mapped[slot] = n
+        self.prefix_hit_tokens += entry.n_tokens
+        self.peak_pages_in_use = max(
+            self.peak_pages_in_use, int(np.sum(self.ref[_RESERVED:] > 0))
+        )
+        return entry.resid
+
+    def prefix_register(
+        self, slot: int, tokens: np.ndarray, boundary_resids: Dict[int, Dict[int, jax.Array]]
+    ) -> None:
+        """Insert entries for every chunk boundary prefilled this admission
+        (``boundary_resids``: n_tokens -> residual snapshot at boundary)."""
+        for end, h in self._chain_hashes(tokens):
+            if h in self.prefix:
+                self.prefix.move_to_end(h)
+                continue
+            if end not in boundary_resids:
+                continue
+            npg = end // self.page_size
+            pages = tuple(int(x) for x in self.table_np[slot, :npg])
+            for pid in pages:
+                self.cache_cnt[pid] += 1
+            self.prefix[h] = PrefixEntry(
+                n_tokens=end, pages=pages, resid=boundary_resids[end]
+            )
+        # capacity bound on entries (their residual snapshots are device
+        # memory): evict oldest regardless of page freeability — the point
+        # is reclaiming the snapshot, pages follow their refcounts
+        while len(self.prefix) > self.prefix_max_entries:
+            self._evict_entry(next(iter(self.prefix)))
+
+    # -- telemetry ------------------------------------------------------
+
+    def page_stats(self) -> Dict[str, float]:
+        alloc = self.n_pages - _RESERVED
+        in_use = int(np.sum(self.ref[_RESERVED:] > 0))
+        cached_only = int(
+            np.sum((self.ref[_RESERVED:] == 0) & (self.cache_cnt[_RESERVED:] > 0))
+        )
+        return {
+            "n_pages": float(alloc),
+            "pages_in_use": float(in_use),
+            "pages_cached_only": float(cached_only),
+            "pages_free": float(len(self.free)),
+            "page_utilization": in_use / alloc if alloc else 0.0,
+            "page_utilization_peak": (
+                self.peak_pages_in_use / alloc if alloc else 0.0
+            ),
+            "prefix_entries": float(len(self.prefix)),
+            "prefix_resid_bytes": self._prefix_resid_bytes(),
+            "prefix_hit_rate": (
+                self.prefix_hit_tokens / self.prefix_lookup_tokens
+                if self.prefix_lookup_tokens
+                else 0.0
+            ),
+            "prefix_evictions": float(self.prefix_evictions),
+        }
+
+    def _prefix_resid_bytes(self) -> float:
+        """Device bytes pinned by prefix entries' residual snapshots."""
+        return float(sum(
+            leaf.size * leaf.dtype.itemsize
+            for e in self.prefix.values()
+            for leaf in e.resid.values()
+        ))
+
+    def cache_bytes(self) -> Dict[str, float]:
+        """Physical footprint (pages + residual + prefix snapshots), same
+        mod/full split as CachePool.
+
+        All paged leaves are full-attention rings, so they count as "full";
+        the residual pool carries the capacity-sized MoD rings ("mod"),
+        and ``prefix_resid`` is the registry's snapshot memory (bounded by
+        ``prefix_max_entries``).
+        """
+        sizes = {"total": 0.0, "mod": 0.0, "full": 0.0, "paged": 0.0,
+                 "resid": 0.0, "prefix_resid": self._prefix_resid_bytes()}
+        sizes["total"] += sizes["prefix_resid"]
+        paths = jax.tree_util.tree_flatten_with_path(
+            api.make_caches(self.cfg, self.batch_size, self.ctx, specs=True)
+        )[0]
+        for j, i in enumerate(self._paged_ids):
+            b = float(self.pages[j].size * self.pages[j].dtype.itemsize)
+            sizes["total"] += b
+            sizes["full"] += b
+            sizes["paged"] += b
+        for j, i in enumerate(self._resid_ids):
+            leaf = self.resid[j]
+            b = float(leaf.size * leaf.dtype.itemsize)
+            keys = [getattr(p, "key", None) for p in paths[i][0]]
+            sizes["total"] += b
+            sizes["mod" if "mod" in keys else "full"] += b
+            sizes["resid"] += b
         sizes["mod_vs_full_ratio"] = sizes["mod"] / sizes["full"] if sizes["full"] else 0.0
         return sizes

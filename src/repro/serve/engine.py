@@ -38,6 +38,19 @@ request regardless of batch composition. The (B, V) logits round-trip to
 host once per step; at smoke scale that is noise, on an accelerator you
 would fold sampling into the step.
 
+Paged serving
+-------------
+``ServingEngine(page_size=...)`` swaps the contiguous pool for the
+block-paged :class:`repro.serve.cache.PagedCachePool`: full-attention KV
+lives in refcounted pages mapped lazily as sequences grow, admission is
+page-aware (worst-case availability), pool exhaustion preempts the
+youngest slot back to the queue front, ``prefill_chunk`` ingests dense/MoE
+prompts in fixed-shape pieces, and ``prefix_cache=True`` reuses
+chunk-aligned shared prompt prefixes (pages + residual-state snapshot)
+bit-identically to a cold run. The decode step remains a single jitted
+fixed-shape function: the page-table gather (materialize) and tail-page
+scatter (writeback) run inside it (DESIGN.md §Serving engine).
+
 SPMD serving
 ------------
 ``ServingEngine(mesh=...)`` drives the same engine multi-device: params
@@ -53,6 +66,7 @@ token-for-token.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -62,7 +76,12 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.routing import batch_capacity_k
 from repro.models import api
-from repro.serve.cache import CachePool
+from repro.serve.cache import (
+    CachePool,
+    PagedCachePool,
+    paged_materialize,
+    paged_writeback,
+)
 from repro.serve.request import (
     FINISH_EOS,
     FINISH_LENGTH,
@@ -81,14 +100,25 @@ _BATCH_PREFILL_FAMILIES = ("dense", "moe")
 # config (ModelConfig is frozen/hashable), so tearing an engine down and
 # building another — per sweep point in benchmarks/serving.py, per call in
 # greedy_generate — reuses compiled executables instead of re-tracing.
-_JIT_CACHE: Dict[Any, Callable] = {}
+# Bounded LRU: benchmark sweeps mint one entry per (cfg, ctx)/(cfg, spmd)
+# key forever, so an unbounded dict leaks executables across long sweeps.
+# Evicting only drops the cache's reference — live engines keep their own.
+# Chunked prefill traces per fixed chunk size (not per prompt length), so
+# prompt-length diversity can't mint entries either.
+_JIT_CACHE: "OrderedDict[Any, Callable]" = OrderedDict()
+_JIT_CACHE_MAX = 32
 
 
 def _cached_jit(kind: str, key: Any, make: Callable[[], Callable]) -> Callable:
-    fn = _JIT_CACHE.get((kind, key))
-    if fn is None:
-        fn = _JIT_CACHE[(kind, key)] = jax.jit(make())
-    return fn
+    from repro.serve.cache import lru_cached
+
+    return lru_cached(_JIT_CACHE, (kind, key), lambda: jax.jit(make()), _JIT_CACHE_MAX)
+
+
+class _PoolExhausted(RuntimeError):
+    """Internal: a gate-passed admission lost its pages (e.g. another
+    admission in the same wave evicted the prefix entry its page discount
+    relied on). Caught in _admit, which unwinds the admission gracefully."""
 
 
 def routed_capacity(
@@ -120,6 +150,11 @@ class ServingEngine:
         prefill: str = "auto",  # "auto" | "batch" | "step"
         mesh=None,  # jax.sharding.Mesh — SPMD decode over a sharded pool
         data_shards: Optional[int] = None,  # partitioned routing semantics
+        page_size: Optional[int] = None,  # block-paged KV pool (None = contiguous)
+        n_pages: Optional[int] = None,  # physical page count (default: B·ctx/page)
+        prefix_cache: bool = False,  # hash-chained prompt-prefix page reuse
+        prefill_chunk: Optional[int] = None,  # chunked batched prefill (dense/MoE)
+        paged_backend: str = "xla",  # paged gather/scatter: "xla" | "pallas"
     ):
         """``mesh`` makes the engine multi-device: params are placed per the
         sharding rules, the cache pool is batch-sharded over the mesh's data
@@ -127,7 +162,20 @@ class ServingEngine:
         (DESIGN.md §SPMD routed execution). ``data_shards`` without a mesh
         runs the *same partitioned routing semantics* on one device — the
         reference configuration the SPMD tests compare token streams
-        against. With both given they must agree."""
+        against. With both given they must agree.
+
+        ``page_size`` switches the engine to the block-paged KV pool
+        (:class:`repro.serve.cache.PagedCachePool`): full-attention KV
+        lives in refcounted pages allocated lazily as sequences grow,
+        admission is page-aware (worst-case page availability), pool
+        exhaustion preempts the youngest slot back to the queue, and —
+        with ``prefix_cache`` — chunk-aligned prompt prefixes are reused
+        across requests. ``prefill_chunk`` caps how much prompt one
+        admission ingests per jitted call (fixed-shape chunks, so the
+        retrace cache can't grow with prompt-length diversity); prefix
+        caching requires it page-aligned and defaults it to ``page_size``.
+        Token streams are bit-identical to the contiguous pool at equal
+        prefill settings (tests/test_paged.py)."""
         if prefill not in ("auto", "batch", "step"):
             raise ValueError(f"unknown prefill mode {prefill!r}")
         from repro.distributed.sharding import shard_ctx
@@ -158,20 +206,6 @@ class ServingEngine:
         self.cfg = cfg
         self.batch_size = batch_size
         self.ctx = ctx
-        self.pool = CachePool(cfg, batch_size, ctx, mesh=mesh)
-        self.scheduler = Scheduler(
-            batch_size, policy, routed_capacity(cfg, batch_size, shards)
-        )
-        self.slots = [Slot(i) for i in range(batch_size)]
-        self.finished: List[RequestOutput] = []
-        self.step_count = 0
-        self.generated_tokens = 0
-        self._routed_frac_sum = 0.0
-        self._routed_frac_steps = 0
-        self._occupancy_sum = 0
-        self._uid = 0
-        self._used_uids: set = set()
-        self._wall_s = 0.0
 
         self._batch_prefill = (
             prefill == "batch"
@@ -180,21 +214,96 @@ class ServingEngine:
         if self._batch_prefill and cfg.family not in _BATCH_PREFILL_FAMILIES:
             raise ValueError(f"family {cfg.family!r} has no batched prefill")
 
+        self._paged = page_size is not None
+        if not self._paged and (n_pages is not None or prefix_cache):
+            raise ValueError("n_pages/prefix_cache require page_size")
+        if prefill_chunk is not None and not self._batch_prefill:
+            raise ValueError(
+                "prefill_chunk applies to batched-prefill families (dense/MoE); "
+                f"family {cfg.family!r} ingests prompts through decode steps"
+            )
+        if prefix_cache:
+            if not self._batch_prefill:
+                raise ValueError("prefix_cache requires a batched-prefill family")
+            if prefill_chunk is None:
+                prefill_chunk = page_size  # page-aligned boundaries by default
+        if self._paged and mesh is not None:
+            raise NotImplementedError("paged pool + SPMD mesh: shard the pages")
+        self._prefix_cache = prefix_cache
+        self._prefill_chunk = prefill_chunk
+
+        if self._paged:
+            self.pool: Any = PagedCachePool(
+                cfg, batch_size, ctx, page_size,
+                n_pages=n_pages,
+                prefix_chunk=prefill_chunk if prefix_cache else None,
+                backend=paged_backend,
+            )
+        else:
+            self.pool = CachePool(cfg, batch_size, ctx, mesh=mesh)
+        self.scheduler = Scheduler(
+            batch_size, policy, routed_capacity(cfg, batch_size, shards)
+        )
+        self.slots = [Slot(i) for i in range(batch_size)]
+        self.finished: List[RequestOutput] = []
+        self.step_count = 0
+        self.generated_tokens = 0
+        self.preemptions = 0  # mid-generation evictions (pages exhausted)
+        self.admission_aborts = 0  # gate-passed admissions unwound pre-batch
+        self._prefill_tokens_computed = 0
+        self._routed_frac_sum = 0.0
+        self._routed_frac_steps = 0
+        self._occupancy_sum = 0
+        self._uid = 0
+        self._used_uids: set = set()
+        self._wall_s = 0.0
+
         # The one decode step every slot shares; jax caches one executable
         # per shape, and shapes are fixed, so this compiles exactly once
         # (and is shared by every engine with the same config + shard ctx).
         spmd = self.spmd
-        self._step_fn = _cached_jit(
-            "step", (cfg, spmd),
-            lambda: lambda p, c, t, pos, act: api.model_decode(
-                p, c, cfg, t, pos, act, spmd=spmd
-            ),
-        )
+        if self._paged:
+            spec = self.pool.step_spec()
+
+            def _make_paged_step():
+                def step(p, pages, resid, table, t, pos, act):
+                    caches = paged_materialize(spec, pages, resid, table)
+                    logits, new_caches, aux = api.model_decode(
+                        p, caches, cfg, t, pos, act, spmd=spmd
+                    )
+                    new_pages, new_resid = paged_writeback(
+                        spec, new_caches, pages, table, pos
+                    )
+                    return logits, new_pages, new_resid, aux
+
+                return step
+
+            self._step_fn = _cached_jit(
+                "paged_step",
+                (cfg, spmd, ctx, page_size, self.pool.n_pages, paged_backend),
+                _make_paged_step,
+            )
+        else:
+            self._step_fn = _cached_jit(
+                "step", (cfg, spmd),
+                lambda: lambda p, c, t, pos, act: api.model_decode(
+                    p, c, cfg, t, pos, act, spmd=spmd
+                ),
+            )
         # Batch-1 prefill; retraced per distinct prompt length only.
         self._prefill_fn = _cached_jit(
             "prefill", (cfg, ctx),
             lambda: lambda p, toks: api.model_prefill(p, cfg, {"tokens": toks}, ctx),
         )
+        if prefill_chunk is not None:
+            # fixed (1, chunk) shape + traced start/length scalars: exactly
+            # one trace per (cfg, ctx, chunk) no matter the prompt mix
+            self._chunk_fn = _cached_jit(
+                "prefill_chunk", (cfg, ctx, prefill_chunk),
+                lambda: lambda p, c, toks, start, nv: api.model_prefill_chunk(
+                    p, cfg, c, toks, start, nv
+                ),
+            )
         if cfg.family == "encdec":
             from repro.models import encdec as ED
 
@@ -215,6 +324,13 @@ class ServingEngine:
             raise ValueError(
                 f"request needs {req.total_len} positions but engine ctx is {self.ctx}"
             )
+        if self._paged and self.pool.pages_needed(req.total_len) > self.pool.allocatable_pages:
+            # fail fast: the admission gate would block this forever and
+            # run() would only report an opaque step-budget overflow
+            raise ValueError(
+                f"request needs {self.pool.pages_needed(req.total_len)} pages "
+                f"worst-case but the pool has {self.pool.allocatable_pages}"
+            )
         if req.uid is None:
             req.uid = self._uid
         elif req.uid in self._used_uids:
@@ -229,42 +345,159 @@ class ServingEngine:
     # Admission
     # ------------------------------------------------------------------
 
+    def _page_gate(self) -> Optional[Callable]:
+        """Admission gate for the paged pool: a request enters only if its
+        *worst-case* page count (ceil(total_len / page_size), no prefix
+        discount — conservative) is obtainable right now, net of pages the
+        same admission wave already claimed. Availability, not reservation:
+        running slots still grow lazily, so the preemption path remains the
+        backstop for overcommit."""
+        if not self._paged:
+            return None
+        claimed = [0]
+
+        def gate(req: Request) -> bool:
+            need = self.pool.pages_needed(req.total_len)
+            if self._prefix_cache:
+                # a cached prefix covers part of the worst case for free
+                # (telemetry-free probe; the real match happens at prefill)
+                need -= self.pool.prefix_probe_pages(np.asarray(req.tokens))
+            ok = need <= self.pool.available_pages() - claimed[0]
+            if ok:
+                claimed[0] += need
+            return ok
+
+        return gate
+
     def _admit(self) -> None:
         plans = self.scheduler.plan_admissions(
-            self.slots, stepped_prefill=not self._batch_prefill
+            self.slots,
+            stepped_prefill=not self._batch_prefill,
+            page_gate=self._page_gate(),
         )
         for slot, req in plans:
-            self.pool.reset(slot.idx)
+            if self._paged:
+                self.pool.acquire(slot.idx)
+            else:
+                self.pool.reset(slot.idx)
             slot.req = req
             slot.generated = []
             slot.admitted_step = self.step_count
             slot.first_token_step = -1
             slot.routed_sum, slot.routed_steps = 0.0, 0
-            slot.score, slot.score_sum = float("nan"), 0.0
+            slot.score, slot.score_sum, slot.score_steps = float("nan"), 0.0, 0
             if self.cfg.family == "encdec" and req.enc_emb is not None:
                 sub = self._cross_fn(
                     self.params, self.pool._template, jnp.asarray(req.enc_emb)[None]
                 )
                 self.pool.write_slot(slot.idx, sub)
             if self._batch_prefill:
-                logits, sub = self._prefill_fn(
-                    self.params, jnp.asarray(req.tokens)[None]
-                )
-                self.pool.write_slot(slot.idx, sub)
+                try:
+                    if self._prefill_chunk is not None:
+                        logits_row = self._chunked_prefill(slot, req)
+                    else:
+                        logits, sub = self._prefill_fn(
+                            self.params, jnp.asarray(req.tokens)[None]
+                        )
+                        if self._paged and not self.pool.alloc_pages(
+                            slot.idx, req.prompt_len
+                        ):
+                            raise _PoolExhausted
+                        self.pool.write_slot(slot.idx, sub)
+                        logits_row = np.asarray(logits[0, -1])
+                        self._prefill_tokens_computed += req.prompt_len
+                except _PoolExhausted:
+                    self._abort_admission(slot, req)
+                    continue
                 slot.pos = req.prompt_len
                 slot.prompt_idx = req.prompt_len
                 # first new token comes from the prefill's last-position
                 # logits — no re-decode of the last prompt token
-                tok = self._sample(req, np.asarray(logits[0, -1]), 0)
+                tok = self._sample(req, logits_row, 0)
                 self._push_token(slot, tok)
                 if slot.req is not None:  # not finished at admission
                     slot.state = GENERATE
                     slot.next_token = tok
             else:
+                if self._paged and not self.pool.alloc_pages(slot.idx, 1):
+                    self._abort_admission(slot, req)
+                    continue
                 slot.state = PREFILL
                 slot.pos = 0
                 slot.prompt_idx = 0
                 slot.next_token = int(req.tokens[0])
+
+    def _abort_admission(self, slot: Slot, req: Request) -> None:
+        """A gate-passed admission lost its pages before entering the batch
+        (same-wave prefix eviction, lazy-growth races): unwind it instead
+        of crashing — pages released, request back to the queue front, a
+        later step's gate re-decides with the pages it actually has."""
+        self.pool.release(slot.idx)
+        slot.req = None
+        slot.state = FREE
+        slot.generated = []
+        self.scheduler.requeue(req)
+        # not a preemption — the request never entered the decode batch
+        self.admission_aborts += 1
+
+    def _chunked_prefill(self, slot: Slot, req: Request) -> np.ndarray:
+        """Ingest the prompt in fixed ``prefill_chunk`` pieces against the
+        slot's working cache; returns the last-position logits row.
+
+        With the prefix cache on, the longest chunk-aligned cached prefix
+        is restored first (shared pages attached + residual snapshot
+        overlaid) and only the remainder is computed; every chunk boundary
+        prefilled here is registered for future requests. Reuse is
+        bit-identical to recomputing: the restored state *is* the state a
+        cold run would have produced at that boundary.
+        """
+        tokens = np.asarray(req.tokens)
+        L = req.prompt_len
+        C = self._prefill_chunk
+        start_tok = 0
+        prefix_key = None
+        if self._paged and self._prefix_cache:
+            m = self.pool.prefix_match(tokens)
+            if m is not None:
+                prefix_key, entry = m
+                start_tok = entry.n_tokens
+        # shared prefix pages attach first (logical pages 0..n), then the
+        # suffix's own pages are allocated after them
+        if prefix_key is not None:
+            resid_snap = self.pool.prefix_attach(slot.idx, prefix_key)
+        if self._paged:
+            if not self.pool.alloc_pages(slot.idx, L):
+                raise _PoolExhausted
+            work = self.pool.read_slot(slot.idx)
+            if prefix_key is not None:
+                work = self.pool.overlay_resid(work, resid_snap)
+        else:
+            work = self.pool._template
+        boundary_resids: Dict[int, Any] = {}
+        logits = None
+        off = start_tok
+        while off < L:
+            nv = min(C, L - off)
+            chunk = np.zeros((1, C), np.int32)
+            chunk[0, :nv] = tokens[off : off + nv]
+            logits, work = self._chunk_fn(
+                self.params, work, jnp.asarray(chunk),
+                jnp.int32(off), jnp.int32(nv),
+            )
+            off += nv
+            self._prefill_tokens_computed += nv
+            if self._paged and self._prefix_cache and off % C == 0:
+                boundary_resids[off] = self.pool.snapshot_resid(work)
+        if self._paged:
+            self.pool.write_slot(
+                slot.idx, work, start_page=start_tok // self.pool.page_size
+            )
+            if self._prefix_cache:
+                self.pool.prefix_register(slot.idx, tokens, boundary_resids)
+        else:
+            self.pool.write_slot(slot.idx, work)
+        assert logits is not None  # lookup never matches the whole prompt
+        return np.asarray(logits[0])
 
     def _place(self, host_arr) -> jax.Array:
         """Host array -> device; batch-sharded over the mesh's data axes
@@ -319,8 +552,11 @@ class ServingEngine:
                     else float("nan")
                 ),
                 mean_score=(
-                    slot.score_sum / slot.routed_steps
-                    if slot.routed_steps
+                    # score_steps, not routed_steps: the two aux keys are
+                    # surfaced under independent presence checks, so the
+                    # mean must use its own counter
+                    slot.score_sum / slot.score_steps
+                    if slot.score_steps
                     else float("nan")
                 ),
             )
@@ -328,6 +564,45 @@ class ServingEngine:
         slot.req = None
         slot.state = FREE
         slot.generated = []
+        if self._paged:
+            self.pool.release(slot.idx)
+
+    def _preempt(self, slot: Slot) -> None:
+        """Page-pool OOM backstop: evict the youngest-admitted slot back to
+        the *front* of the queue with its pages released. The request
+        restarts from scratch on re-admission; per-request keyed sampling
+        (``fold_in(key, token_index)``) regenerates the identical stream,
+        though a ``stream`` callback will see the replay."""
+        req = slot.req
+        self.pool.release(slot.idx)
+        self.generated_tokens -= len(slot.generated)  # regenerated later
+        slot.req = None
+        slot.state = FREE
+        slot.generated = []
+        self.scheduler.requeue(req)
+        self.preemptions += 1
+
+    def _grow_pages(self) -> None:
+        """Map each active slot's next write page before the step; on pool
+        exhaustion (free list empty, nothing evictable) preempt the
+        youngest-admitted active slot and retry — the oldest request always
+        keeps making progress."""
+        while True:
+            needy = [
+                s for s in self.slots
+                if s.active
+                and self.pool.pages_needed(s.pos + 1) > int(self.pool.n_mapped[s.idx])
+            ]
+            for s in needy:
+                if not self.pool.alloc_pages(s.idx, s.pos + 1):
+                    victim = max(
+                        (t for t in self.slots if t.active),
+                        key=lambda t: (t.admitted_step, t.idx),
+                    )
+                    self._preempt(victim)
+                    break  # re-scan: the victim may have been in `needy`
+            else:
+                return
 
     # ------------------------------------------------------------------
     # Stepping
@@ -345,6 +620,8 @@ class ServingEngine:
         done_before = len(self.finished)
         t0 = time.time()
         self._admit()
+        if self._paged:
+            self._grow_pages()  # may preempt; must precede the active scan
         active_slots = [s for s in self.slots if s.active]
         if not active_slots:
             self.step_count += 1
@@ -360,10 +637,17 @@ class ServingEngine:
             pos[s.idx] = s.pos
             active[s.idx] = True
 
-        logits, self.pool.caches, aux = self._step_fn(
-            self.params, self.pool.caches, self._place(tokens),
-            self._place(pos), self._place(active),
-        )
+        if self._paged:
+            logits, self.pool.pages, self.pool.resid, aux = self._step_fn(
+                self.params, self.pool.pages, self.pool.resid,
+                self.pool.device_table(), jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(active),
+            )
+        else:
+            logits, self.pool.caches, aux = self._step_fn(
+                self.params, self.pool.caches, self._place(tokens),
+                self._place(pos), self._place(active),
+            )
         logits_np = np.asarray(logits)
 
         routed = aux.get("mod/decode_routed")
@@ -382,6 +666,7 @@ class ServingEngine:
             if scores_np is not None:
                 s.score = float(scores_np[s.idx])
                 s.score_sum += s.score
+                s.score_steps += 1
             s.pos += 1
             if s.state == PREFILL:
                 s.prompt_idx += 1
@@ -477,7 +762,8 @@ class ServingEngine:
                     )
                 )
             )
-        outs = [o for o in self.run() if o.uid in set(uids)]
+        uid_set = set(uids)  # built once: the per-element rebuild was O(N^2)
+        outs = [o for o in self.run() if o.uid in uid_set]
         return jnp.asarray(pad_outputs(outs, s0 + n_tokens))
 
     def _step_signatures(self) -> Optional[int]:
@@ -499,7 +785,7 @@ class ServingEngine:
 
     def stats(self) -> Dict[str, Any]:
         steps = max(1, self.step_count)
-        return {
+        out = {
             "steps": float(self.step_count),
             "generated_tokens": float(self.generated_tokens),
             "finished_requests": float(len(self.finished)),
@@ -512,7 +798,13 @@ class ServingEngine:
                 else float("nan")
             ),
             "kv_cache_bytes": self.pool.cache_bytes()["total"],
+            "prefill_tokens_computed": float(self._prefill_tokens_computed),
             # latest per-slot batch_capacity scores (NaN = free / MoD off):
             # what the router is currently ranking live slots by
             "slot_scores": [s.score for s in self.slots],
         }
+        if self._paged:
+            out["preemptions"] = float(self.preemptions)
+            out["admission_aborts"] = float(self.admission_aborts)
+            out.update(self.pool.page_stats())
+        return out

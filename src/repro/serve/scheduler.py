@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -72,6 +72,9 @@ class Slot:
     routed_steps: int = 0
     score: float = float("nan")  # latest MoD predictor/router score
     score_sum: float = 0.0  # accumulated scores (for the request's mean)
+    score_steps: int = 0  # steps that actually reported a score — tracked
+    # separately from routed_steps because the two aux keys
+    # (mod/decode_scores / mod/decode_routed) are surfaced independently
 
     @property
     def active(self) -> bool:
@@ -98,27 +101,55 @@ class Scheduler:
         self.submitted += 1
 
     def plan_admissions(
-        self, slots: List[Slot], stepped_prefill: bool
+        self,
+        slots: List[Slot],
+        stepped_prefill: bool,
+        page_gate: Optional[Callable[[Request], bool]] = None,
     ) -> List[Tuple[Slot, Request]]:
         """Pick (slot, request) pairs to admit this step.
 
         ``stepped_prefill`` tells the policy whether admitted prompts will
         be ingested through the shared decode step (and therefore compete
         for MoD routed capacity) or prefilled off-path in one shot.
+
+        ``page_gate`` is the paged pool's admission check: a request is
+        admissible only if its worst-case page count is obtainable right
+        now (free + evictable prefix pages, minus what this admission wave
+        already claimed). Admission stops at the first gated request —
+        FCFS order is preserved rather than admitting around the head of
+        the line. Note the gate checks *availability*, not a reservation:
+        already-running slots still grow lazily, so concurrent growth can
+        overcommit the pool — the engine's preemption path handles that.
         """
         free = [s for s in slots if s.state == FREE]
         plans: List[Tuple[Slot, Request]] = []
-        if self.policy == "mod_aware" and stepped_prefill and self.routed_capacity:
+        # A zero routed budget (kb == 0) must *block* stepped-prefill
+        # admission, not disable the cap — hence the explicit None test
+        # (a falsy check admitted an unbounded wave at kb == 0).
+        if (
+            self.policy == "mod_aware"
+            and stepped_prefill
+            and self.routed_capacity is not None
+        ):
             budget = self.routed_capacity - sum(1 for s in slots if s.state == PREFILL)
         else:
             budget = len(free)
         for slot in free:
             if not self.queue or budget <= 0:
                 break
+            if page_gate is not None and not page_gate(self.queue[0]):
+                break
             plans.append((slot, self.queue.popleft()))
             budget -= 1
         self.admitted += len(plans)
         return plans
+
+    def requeue(self, req: Request) -> None:
+        """Preemption path: a running request goes back to the *front* of
+        the queue (it keeps its FCFS seniority) and its admission is
+        unwound so the invariants keep balancing."""
+        self.queue.appendleft(req)
+        self.admitted -= 1
 
     def check_invariants(self, slots: List[Slot], finished: int) -> None:
         """Every submitted request is in exactly one place; no slot leaks."""

@@ -1,0 +1,352 @@
+"""Paged KV pool: kernel oracles, paged-vs-contiguous token identity across
+families (greedy + seeded sampling in one stream), chunked prefill, prefix
+cache reuse, page-exhaustion preemption, and page accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MoDConfig, SSMConfig
+from repro.kernels import ops, ref
+from repro.models import api
+from repro.serve import Request, ServingEngine
+from repro.serve.cache import NULL_PAGE, SCRATCH_PAGE, PagedCachePool
+from tests.helpers import tiny_cfg
+
+# ---------------------------------------------------------------------------
+# Kernels: xla == pallas == ref oracle
+# ---------------------------------------------------------------------------
+
+
+def test_paged_kernels_match_ref_and_xla():
+    rng = np.random.default_rng(0)
+    N, p, F, B, P = 9, 4, 6, 3, 2
+    pages = jnp.asarray(rng.normal(size=(N, p, F)), jnp.float32)
+    table = jnp.asarray(rng.integers(0, N, size=(B, P)), jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    pos = jnp.asarray([1, 7, 2], jnp.int32)
+
+    g_ref = np.asarray(ref.paged_gather_ref(pages, table))
+    g_xla = np.asarray(ops.paged_gather_op(pages, table, backend="xla"))
+    g_pl = np.asarray(
+        ops.paged_gather_op(pages, table, backend="pallas", interpret=True)
+    )
+    np.testing.assert_array_equal(g_ref, g_xla)
+    np.testing.assert_array_equal(g_ref, g_pl)
+
+    s_ref = np.asarray(ref.paged_scatter_rows_ref(pages, table, rows, pos))
+    s_xla = np.asarray(ops.paged_scatter_rows_op(pages, table, rows, pos, backend="xla"))
+    s_pl = np.asarray(
+        ops.paged_scatter_rows_op(pages, table, rows, pos, backend="pallas", interpret=True)
+    )
+    np.testing.assert_array_equal(s_ref, s_xla)
+    np.testing.assert_array_equal(s_ref, s_pl)
+
+
+def test_paged_kernels_lead_dims():
+    """Cache leaves carry layer-group lead dims; the ops wrappers fold them."""
+    rng = np.random.default_rng(1)
+    G, N, p, nkv, hd, B, P = 2, 7, 4, 2, 3, 3, 2
+    pages = jnp.asarray(rng.normal(size=(G, N, p, nkv, hd)), jnp.float32)
+    table = jnp.asarray(rng.integers(0, N, size=(B, P)), jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(G, B, nkv, hd)), jnp.float32)
+    pos = jnp.asarray([0, 5, 3], jnp.int32)
+    for fn, args in (
+        (ops.paged_gather_op, (pages, table)),
+        (ops.paged_scatter_rows_op, (pages, table, rows, pos)),
+    ):
+        x = np.asarray(fn(*args, page_axis=1, backend="xla"))
+        y = np.asarray(fn(*args, page_axis=1, backend="pallas", interpret=True))
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Engine: paged == contiguous token streams
+# ---------------------------------------------------------------------------
+
+
+def _family_cfg(family):
+    if family == "ssm":
+        return dataclasses.replace(
+            tiny_cfg(), family="ssm",
+            ssm=SSMConfig(enabled=True, d_state=16, head_dim=32, chunk=16),
+        )
+    if family == "hybrid":
+        return dataclasses.replace(
+            tiny_cfg(), family="hybrid", hybrid_attn_every=2,
+            ssm=SSMConfig(enabled=True, d_state=16, head_dim=32, chunk=16),
+        )
+    if family == "encdec":
+        return dataclasses.replace(tiny_cfg(), family="encdec")
+    if family == "moe":
+        return dataclasses.replace(tiny_cfg(), family="moe")
+    return tiny_cfg()
+
+
+def _mixed_requests(cfg, family, n=3, seed=3):
+    """Greedy and seeded-sampled requests in one stream (slot churn at B=2)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        kw = {}
+        if family == "encdec":
+            kw["enc_emb"] = np.asarray(
+                jax.random.normal(
+                    jax.random.PRNGKey(i), (cfg.enc_seq_len, cfg.d_model)
+                ) * 0.02
+            )
+        reqs.append(
+            Request(
+                tokens=rng.integers(0, cfg.vocab, size=4 + i).astype(np.int32),
+                max_new_tokens=4,
+                temperature=0.0 if i % 2 == 0 else 0.8,
+                key=jax.random.PRNGKey(100 + i),
+                **kw,
+            )
+        )
+    return reqs
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "ssm", "encdec"])
+def test_paged_engine_token_identity(family):
+    """The paged pool must be invisible: token streams (greedy AND seeded
+    sampling, under slot churn) bit-identical to the contiguous pool, with
+    the decode step still compiling exactly once."""
+    cfg = _family_cfg(family)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    outs = {}
+    for paged in (False, True):
+        kw = {"page_size": 4} if paged else {}
+        eng = ServingEngine(params, cfg, batch_size=2, ctx=16, **kw)
+        for r in _mixed_requests(cfg, family):
+            eng.submit(r)
+        outs[paged] = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+        if paged and eng.decode_compilations is not None:
+            assert eng.decode_compilations <= 1
+    assert outs[False] == outs[True]
+
+
+def test_paged_engine_token_identity_hybrid():
+    """Hybrid rides along: shared-attn KV pages + SSM residual state."""
+    cfg = _family_cfg("hybrid")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    outs = {}
+    for paged in (False, True):
+        kw = {"page_size": 4} if paged else {}
+        eng = ServingEngine(params, cfg, batch_size=2, ctx=16, **kw)
+        for r in _mixed_requests(cfg, "hybrid"):
+            eng.submit(r)
+        outs[paged] = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+    assert outs[False] == outs[True]
+
+
+def test_paged_pallas_backend_matches_xla():
+    """The pallas paged gather/scatter variant drives the same engine to the
+    same tokens as the xla reference backend."""
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    outs = {}
+    for backend in ("xla", "pallas"):
+        eng = ServingEngine(
+            params, cfg, batch_size=2, ctx=16, page_size=4, paged_backend=backend
+        )
+        for r in _mixed_requests(cfg, "dense", n=2):
+            eng.submit(r)
+        outs[backend] = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+    assert outs["xla"] == outs["pallas"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill + prefix cache
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_matches_unchunked_dense():
+    """MoD off: per-chunk routing can't differ, so chunked prefill must
+    reproduce the unchunked engine's greedy streams exactly."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32) for n in (9, 5, 11)]
+    outs = {}
+    for chunk in (None, 4):
+        eng = ServingEngine(
+            params, cfg, batch_size=2, ctx=24, page_size=4, prefill_chunk=chunk
+        )
+        for p in prompts:
+            eng.submit(Request(tokens=p, max_new_tokens=5))
+        outs[chunk] = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+    assert outs[None] == outs[4]
+
+
+def test_chunked_prefill_mod_runs_and_fills_caches():
+    """MoD on: routing is chunk-local (documented trade-off), but the
+    engine must still produce valid streams, and chunk-size-1 sanity."""
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    p = np.random.default_rng(6).integers(0, cfg.vocab, size=7).astype(np.int32)
+    for chunk in (1, 4):
+        eng = ServingEngine(
+            params, cfg, batch_size=1, ctx=16, page_size=4, prefill_chunk=chunk
+        )
+        eng.submit(Request(tokens=p, max_new_tokens=4))
+        out = eng.run()[0]
+        assert out.tokens.shape == (4,)
+        assert (out.tokens >= 0).all() and (out.tokens < cfg.vocab).all()
+
+
+def test_prefix_cache_identical_tokens_fewer_prefill_tokens():
+    """Shared-prefix requests: the prefix cache must change nothing about
+    the tokens (reuse restores the exact chunk-boundary state) while
+    measurably cutting prefill compute, and page tables must share the
+    prefix's physical pages across slots."""
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    prompts = [
+        np.concatenate([shared, rng.integers(0, cfg.vocab, size=3).astype(np.int32)])
+        for _ in range(4)
+    ]
+    outs, engines = {}, {}
+    for prefix in (False, True):
+        eng = ServingEngine(
+            params, cfg, batch_size=2, ctx=24, page_size=4,
+            prefill_chunk=4, prefix_cache=prefix,
+        )
+        for p in prompts:
+            eng.submit(Request(tokens=p, max_new_tokens=5))
+        outs[prefix] = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+        engines[prefix] = eng
+    assert outs[False] == outs[True]
+    cold = engines[False].stats()["prefill_tokens_computed"]
+    warm = engines[True].stats()["prefill_tokens_computed"]
+    assert warm < cold, (warm, cold)
+    assert engines[True].stats()["prefix_hit_rate"] > 0.0
+
+
+def test_prefix_cache_same_prompt_reuses_pages():
+    """Submitting the same prompt twice sequentially: the second admission
+    hits the chunk-aligned prefix and computes only the ragged tail."""
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    p = np.random.default_rng(8).integers(0, cfg.vocab, size=10).astype(np.int32)
+    eng = ServingEngine(
+        params, cfg, batch_size=1, ctx=16, page_size=4,
+        prefill_chunk=4, prefix_cache=True,
+    )
+    eng.submit(Request(tokens=p, max_new_tokens=3))
+    first = eng.run()[0]
+    computed_first = eng.stats()["prefill_tokens_computed"]
+    eng.submit(Request(tokens=p, max_new_tokens=3))
+    second = eng.run()[1]
+    computed_second = eng.stats()["prefill_tokens_computed"] - computed_first
+    np.testing.assert_array_equal(first.tokens, second.tokens)
+    # 10-token prompt, chunk 4 -> boundary at 8 cached; only 2 recomputed
+    assert computed_first == 10 and computed_second == 2, (
+        computed_first, computed_second)
+
+
+# ---------------------------------------------------------------------------
+# Admission gate + preemption
+# ---------------------------------------------------------------------------
+
+
+def test_page_exhaustion_preempts_youngest_back_to_queue():
+    """Cross-wave overcommit (worst-case availability is checked, not
+    reserved): when lazy growth exhausts the pool, the youngest slot is
+    preempted with pages released, re-queued at the *front*, and the final
+    streams still match the contiguous engine exactly (MoD off: admission
+    pattern cannot couple rows)."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, size=4).astype(np.int32) for _ in range(2)]
+
+    def reqs():
+        return [Request(tokens=p, max_new_tokens=12) for p in prompts]
+
+    # 6 allocatable pages; each request's worst case is 4 pages -> both
+    # admitted a wave apart, combined growth hits the ceiling
+    eng = ServingEngine(params, cfg, batch_size=2, ctx=16, page_size=4, n_pages=8)
+    outs = {o.uid: o.full_sequence.tolist() for o in eng.run_stream(reqs(), 2)}
+    assert eng.preemptions >= 1
+    ref_eng = ServingEngine(params, cfg, batch_size=2, ctx=16)
+    ref_outs = {o.uid: o.full_sequence.tolist() for o in ref_eng.run_stream(reqs(), 2)}
+    assert outs == ref_outs
+    # pool drained clean: nothing referenced after the last release
+    assert eng.stats()["pages_in_use"] == 0.0
+    eng.scheduler.check_invariants(eng.slots, len(outs))
+
+
+def test_admission_gate_blocks_oversized_and_transient_requests():
+    """Worst-case page admission: a request that can *never* fit fails fast
+    at submit (run() would otherwise spin to its step budget with an
+    opaque error); one that fits but finds the pool busy waits queued."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    # 2 allocatable pages, request worst case = 4 pages -> impossible ever
+    eng = ServingEngine(params, cfg, batch_size=1, ctx=16, page_size=4, n_pages=4)
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(
+            tokens=np.arange(8, dtype=np.int32) % cfg.vocab, max_new_tokens=8))
+    # fits the pool's total but not while the first request holds it:
+    # stays queued (head-of-line) until pages free, then completes
+    eng2 = ServingEngine(params, cfg, batch_size=2, ctx=16, page_size=4, n_pages=6)
+    a = Request(tokens=np.arange(4, dtype=np.int32), max_new_tokens=12)  # 4 pages
+    b = Request(tokens=np.arange(4, dtype=np.int32), max_new_tokens=12)
+    eng2.submit(a)
+    eng2.step()
+    eng2.submit(b)
+    eng2.step()
+    assert len(eng2.scheduler.queue) == 1  # gated while A runs
+    outs = eng2.run()
+    assert len(outs) == 2
+
+
+# ---------------------------------------------------------------------------
+# Pool accounting (host-side unit tests, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_page_accounting_and_prefix_eviction():
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    pool = PagedCachePool(cfg, batch_size=2, ctx=16, page_size=4, n_pages=8,
+                          prefix_chunk=4)
+    assert pool.available_pages() == 6
+    pool.acquire(0)
+    assert (pool.table_np[0] == NULL_PAGE).all()
+    assert pool.alloc_pages(0, 9)  # 3 pages
+    assert pool.available_pages() == 3
+    assert int(pool.n_mapped[0]) == 3
+    # register a 2-page (8-token) prefix; release keeps its pages cached
+    toks = np.arange(12, dtype=np.int32)
+    work = pool.read_slot(0)
+    pool.prefix_register(0, toks, {4: pool.snapshot_resid(work),
+                                   8: pool.snapshot_resid(work)})
+    pool.release(0)
+    assert (pool.table_np[0] == SCRATCH_PAGE).all()
+    stats = pool.page_stats()
+    assert stats["pages_in_use"] == 0 and stats["pages_cached_only"] == 2
+    assert pool.available_pages() == 6  # cached pages are evictable
+    # exhausting the free list evicts LRU prefix entries
+    pool.acquire(0)
+    assert pool.alloc_pages(0, 16)  # 4 pages: 4 free + evict
+    pool.acquire(1)
+    assert pool.alloc_pages(1, 8)  # remaining 2 via eviction
+    assert not pool.alloc_pages(1, 12)  # nothing left anywhere
+    assert pool.prefix_evictions >= 1
+    pool.release(0)
+    assert pool.alloc_pages(1, 12)
+
+
+def test_pool_rejects_bad_geometry():
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    with pytest.raises(ValueError):
+        PagedCachePool(cfg, 2, 16, page_size=5)
+    with pytest.raises(ValueError):
+        PagedCachePool(cfg, 2, 16, page_size=4, prefix_chunk=6)
+    with pytest.raises(ValueError):
+        ServingEngine(None, cfg, 2, 16, prefix_cache=True)

@@ -306,6 +306,71 @@ def test_scheduler_fcfs_tie_break_equal_arrival_is_submission_order():
         assert [s.idx for s, _ in plans] == [0, 1, 2, 3], policy
 
 
+def test_scheduler_zero_routed_capacity_blocks_stepped_admission():
+    """Regression: kb == 0 must *block* stepped-prefill admission, not
+    disable the cap (the old falsy check admitted an unbounded wave)."""
+    reqs = [Request(tokens=np.asarray([1, 2]), max_new_tokens=2) for _ in range(4)]
+    sched = Scheduler(4, policy="mod_aware", routed_capacity=0)
+    for r in reqs:
+        sched.submit(r)
+    slots = [Slot(i) for i in range(4)]
+    assert sched.plan_admissions(slots, stepped_prefill=True) == []
+    # batched prefill is off the decode path and stays uncapped at kb=0
+    assert len(sched.plan_admissions(slots, stepped_prefill=False)) == 4
+
+
+def test_mean_score_uses_its_own_counter():
+    """Regression: routed_steps and score_steps increment under independent
+    aux-key presence checks, so mean_score must divide by score_steps —
+    with scores absent it is NaN, not score_sum / routed_steps."""
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=1, ctx=16)
+    slot = eng.slots[0]
+    slot.req = Request(tokens=np.asarray([1, 2]), max_new_tokens=2, uid=0)
+    slot.req._submitted_step = 0
+    eng.scheduler.submitted += 1
+    eng.scheduler.admitted += 1
+    slot.state = "generate"
+    slot.generated = [3]
+    slot.routed_sum, slot.routed_steps = 2.0, 4  # routed aux present...
+    slot.score_sum, slot.score_steps = 7.0, 0  # ...scores aux absent
+    eng._finish(slot, "length")
+    out = eng.finished[0]
+    assert np.isnan(out.mean_score)
+    assert out.routed_frac == pytest.approx(0.5)
+    # and when both were reported, the mean uses the score counter
+    slot2 = eng.slots[0]
+    slot2.req = Request(tokens=np.asarray([1, 2]), max_new_tokens=2, uid=1)
+    slot2.req._submitted_step = 0
+    eng.scheduler.submitted += 1
+    eng.scheduler.admitted += 1
+    slot2.state = "generate"
+    slot2.generated = [3]
+    slot2.routed_sum, slot2.routed_steps = 1.0, 4
+    slot2.score_sum, slot2.score_steps = 6.0, 3
+    eng._finish(slot2, "length")
+    assert eng.finished[1].mean_score == pytest.approx(2.0)
+
+
+def test_jit_cache_is_bounded():
+    """Regression: the module-level jit cache is a bounded LRU — benchmark
+    sweeps minting one entry per (cfg, ctx) can no longer leak compiled
+    executables without bound."""
+    from repro.serve import engine as E
+
+    before = dict(E._JIT_CACHE)
+    try:
+        for i in range(3 * E._JIT_CACHE_MAX):
+            E._cached_jit("bound_probe", i, lambda: (lambda x: x))
+        assert len(E._JIT_CACHE) <= E._JIT_CACHE_MAX
+        # most-recently-used entries survive
+        assert ("bound_probe", 3 * E._JIT_CACHE_MAX - 1) in E._JIT_CACHE
+    finally:
+        E._JIT_CACHE.clear()
+        E._JIT_CACHE.update(before)
+
+
 def test_engine_sharded_semantics_routed_telemetry():
     """data_shards (no mesh) engine: per-request routed fractions reflect
     the partitioned budget d·round(ratio·B/d) and the scheduler cap uses
