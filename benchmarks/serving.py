@@ -43,10 +43,29 @@ from repro.train.serve import greedy_generate
 
 SMOKE = dict(slots=4, prompt_len=8, gen=8, requests=6, arrivals=(0, 2))
 FULL = dict(slots=8, prompt_len=16, gen=16, requests=16, arrivals=(0, 1, 2, 4))
+# High-diversity mixed prefill+decode sweep (ragged vs padded engine):
+# prompt lengths spread over [2, max_prompt_len], open stream, so most
+# steps carry prefill segments and decode rows at once. Prefill-heavy on
+# purpose — that is the regime the flat-token layout exists for.
+MIXED_SMOKE = dict(slots=4, max_prompt_len=16, gen=4, requests=6,
+                   arrival_every=1, ragged_segments=4)
+MIXED_FULL = dict(slots=8, max_prompt_len=32, gen=8, requests=16,
+                  arrival_every=1, ragged_segments=8)
 
 
 def _prompts(n: int, s0: int, vocab: int, seed: int = 7) -> np.ndarray:
     return np.random.default_rng(seed).integers(0, vocab, size=(n, s0)).astype(np.int32)
+
+
+def _diverse_prompts(n: int, max_len: int, vocab: int, seed: int = 13) -> List[np.ndarray]:
+    """Prompt lengths spread deterministically over [2, max_len] — the
+    high-diversity workload where chunk-tail padding hurts the padded
+    engine most."""
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(1, vocab - 1, size=2 + (i * 7) % (max_len - 1)).astype(np.int32)
+        for i in range(n)
+    ]
 
 
 def _shared_prefix_prompts(n: int, s0: int, vocab: int, prefix_frac: float = 0.5,
@@ -76,8 +95,12 @@ def warmup(cfg, params, slots, prompt_len, gen, page_size: int = 0) -> None:
                     "prefix_cache": True})
     for kw in kws:
         eng = ServingEngine(params, cfg, batch_size=slots, ctx=prompt_len + gen, **kw)
+        # max_new_tokens >= 2: the first token is sampled from the prefill
+        # logits, so a 1-token request finishes without ever running the
+        # decode step — its cold compile would then land inside the first
+        # timed sweep cell
         eng.submit(Request(tokens=_prompts(1, prompt_len, cfg.vocab)[0],
-                           max_new_tokens=1))
+                           max_new_tokens=2))
         eng.run()
 
 
@@ -97,6 +120,10 @@ def _measure(engine, outputs) -> Dict[str, float]:
         "routed_frac": s["mean_routed_frac"],
         "kv_cache_bytes": s["kv_cache_bytes"],
         "decode_compilations": float(engine.decode_compilations or 0),
+        # fraction of fixed-shape step positions carrying no real token
+        # (idle decode rows, chunk tails) — the number the ragged flat
+        # layout exists to shrink
+        "padded_token_fraction": s["padded_token_fraction"],
     }
 
 
@@ -186,8 +213,61 @@ def paged_sweep(cfg, params, slots, prompt_len, gen, requests, page_size,
     }
 
 
+def check_mixed_identity(cfg, params, slots, max_prompt_len, gen, page_size) -> None:
+    """The ragged engine's token streams must be bit-identical to the
+    padded paged engine on the diverse-length workload when every request
+    is admitted upfront with enough segments to drain all prompts in the
+    first step (the decode steps then see identical batch compositions)."""
+    prompts = _diverse_prompts(min(4, slots), max_prompt_len, cfg.vocab)
+    ctx = -(-(max_prompt_len + gen) // page_size) * page_size
+    n_chunks = sum(-(-len(p) // page_size) for p in prompts)
+    streams = {}
+    for ragged in (False, True):
+        kw = {"ragged": True, "ragged_segments": n_chunks} if ragged else {}
+        eng = ServingEngine(params, cfg, batch_size=len(prompts), ctx=ctx,
+                            page_size=page_size, prefill_chunk=page_size, **kw)
+        for p in prompts:
+            eng.submit(Request(tokens=p, max_new_tokens=gen))
+        streams[ragged] = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+        assert (eng.decode_compilations or 0) <= 1, "mixed step retraced"
+    assert streams[False] == streams[True], "ragged layout changed token streams"
+
+
+def mixed_sweep(cfg, params, slots, max_prompt_len, gen, requests,
+                arrival_every, page_size, ragged, ragged_segments,
+                padded_tokens_per_s: float = 0.0, reps: int = 3) -> Dict[str, float]:
+    """One mixed prefill+decode point: diverse prompt lengths offered as an
+    open stream, so most steps interleave prefill and decode work. Run
+    ``reps`` times and keep the fastest (CPU wall-clock on tiny models is
+    noisy at these run lengths); each rep replays the same request stream,
+    so the telemetry of the kept run matches any other rep's."""
+    ctx = -(-(max_prompt_len + gen) // page_size) * page_size
+    kw = dict(batch_size=slots, ctx=ctx, page_size=page_size,
+              prefill_chunk=page_size)
+    if ragged:
+        kw.update(ragged=True, ragged_segments=ragged_segments)
+    warm = ServingEngine(params, cfg, **kw)
+    warm.submit(Request(tokens=_diverse_prompts(1, max_prompt_len, cfg.vocab)[0],
+                        max_new_tokens=2))
+    warm.run()
+    best = None
+    for _ in range(reps):
+        engine = ServingEngine(params, cfg, **kw)
+        outputs = engine.run_stream(
+            [Request(tokens=p, max_new_tokens=gen)
+             for p in _diverse_prompts(requests, max_prompt_len, cfg.vocab)],
+            arrival_every,
+        )
+        m = _measure(engine, outputs)
+        if best is None or m["tokens_per_s"] > best["tokens_per_s"]:
+            best = m
+    if ragged and padded_tokens_per_s:
+        best["ragged_vs_padded_ratio"] = best["tokens_per_s"] / padded_tokens_per_s
+    return best
+
+
 def run(smoke: bool = False, backend: str = "xla", page_size: int = 4,
-        prefix_cache: bool = True) -> List[Dict]:
+        prefix_cache: bool = True, ragged: bool = True) -> List[Dict]:
     p = dict(SMOKE if smoke else FULL)
     arrivals = p.pop("arrivals")
     models = {
@@ -215,6 +295,17 @@ def run(smoke: bool = False, backend: str = "xla", page_size: int = 4,
             rows.append({"model": f"{name}-paged", "backend": backend,
                          "arrival_every": 0, "page_size": page_size,
                          "prefix_cache": prefix_cache, **p, **m})
+        if page_size and ragged:
+            mx = dict(MIXED_SMOKE if smoke else MIXED_FULL)
+            check_mixed_identity(cfg, params, mx["slots"], mx["max_prompt_len"],
+                                 mx["gen"], page_size)
+            pm = mixed_sweep(cfg, params, page_size=page_size, ragged=False, **mx)
+            rows.append({"model": f"{name}-mixed-padded", "backend": backend,
+                         "page_size": page_size, **mx, **pm})
+            rm = mixed_sweep(cfg, params, page_size=page_size, ragged=True,
+                             padded_tokens_per_s=pm["tokens_per_s"], **mx)
+            rows.append({"model": f"{name}-mixed-ragged", "backend": backend,
+                         "page_size": page_size, **mx, **rm})
     return rows
 
 
@@ -230,15 +321,23 @@ def log_perf(rows: List[Dict], out: str) -> None:
             log = []
     paged_keys = ("page_utilization", "prefix_hit_rate", "preemptions",
                   "prefill_tokens_computed", "prefill_saved_frac",
-                  "paged_tokens_ratio", "page_size", "prefix_cache")
+                  "paged_tokens_ratio", "page_size", "prefix_cache",
+                  "ragged_vs_padded_ratio", "ragged_segments", "max_prompt_len")
     for r in rows:
         load = "closed" if r["arrival_every"] <= 0 else f"every{r['arrival_every']}"
-        paged = "-paged" in str(r["model"])
+        model = str(r["model"])
+        paged = "-paged" in model
+        mixed = "-mixed-" in model
         log.append({
             "cell": "S:serving",
             "name": f"{r['model']}-{load}",
             "backend": r.get("backend", "xla"),
             "hypothesis": (
+                "one jitted mixed prefill+decode step over flat token "
+                "segments beats the padded two-path engine on "
+                "diverse-length open streams (ragged_vs_padded_ratio > 1) "
+                "and shrinks padded_token_fraction."
+                if mixed else
                 "block-paged pool + prefix cache: identical tokens to the "
                 "contiguous pool, with prefill savings on shared prefixes "
                 "and memory proportional to live pages."
@@ -252,7 +351,8 @@ def log_perf(rows: List[Dict], out: str) -> None:
                for k in ("tokens_per_s", "latency_p50_steps",
                          "latency_p95_steps", "queue_wait_mean_steps",
                          "mean_occupancy", "routed_frac",
-                         "kv_cache_bytes", "steps", "wall_s")},
+                         "kv_cache_bytes", "steps", "wall_s",
+                         "decode_compilations", "padded_token_fraction")},
             **{k: r[k] for k in paged_keys if k in r},
         })
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
@@ -262,10 +362,10 @@ def log_perf(rows: List[Dict], out: str) -> None:
 
 def main(
     smoke: bool = False, out: str = "results/perf_log.json", backend: str = "xla",
-    page_size: int = 4, prefix_cache: bool = True,
+    page_size: int = 4, prefix_cache: bool = True, ragged: bool = True,
 ) -> List[str]:
     rows = run(smoke=smoke, backend=backend, page_size=page_size,
-               prefix_cache=prefix_cache)
+               prefix_cache=prefix_cache, ragged=ragged)
     log_perf(rows, out)
     lines = []
     for r in rows:
@@ -284,6 +384,12 @@ def main(
                 f"serving/{r['model']}_prefix_hit_rate,{r['prefix_hit_rate']:.3f},"
                 f"prefill_saved={r['prefill_saved_frac']:.2f} "
                 f"page_util={r['page_utilization']:.2f}"
+            )
+        if "ragged_vs_padded_ratio" in r:
+            lines.append(
+                f"serving/{r['model']}_vs_padded,{r['ragged_vs_padded_ratio']:.2f},"
+                f"padded_frac={r['padded_token_fraction']:.2f} "
+                f"compilations={r['decode_compilations']:.0f}"
             )
     mod = [r for r in rows if r["model"] == "mod" and r["arrival_every"] == 0]
     den = [r for r in rows if r["model"] == "dense" and r["arrival_every"] == 0]
@@ -308,6 +414,11 @@ if __name__ == "__main__":
     ap.add_argument("--prefix-cache", dest="prefix_cache", action="store_true",
                     default=True, help="prefix cache in the paged sweep (default on)")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache", action="store_false")
+    ap.add_argument("--ragged", dest="ragged", action="store_true", default=True,
+                    help="mixed prefill+decode sweep: ragged vs padded engine "
+                         "rows (default on; needs --page-size > 0)")
+    ap.add_argument("--no-ragged", dest="ragged", action="store_false")
     a = ap.parse_args()
     print("\n".join(main(smoke=a.smoke, out=a.out, backend=a.backend,
-                         page_size=a.page_size, prefix_cache=a.prefix_cache)))
+                         page_size=a.page_size, prefix_cache=a.prefix_cache,
+                         ragged=a.ragged)))

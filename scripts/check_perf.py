@@ -84,6 +84,33 @@ def check_structure(cells: List[Dict]) -> List[str]:
         for k in ("page_utilization", "prefix_hit_rate", "paged_tokens_ratio"):
             if k not in e:
                 errors.append(f"{SERVING_CELL}/{e.get('name')}: missing {k}")
+    # ragged flat-token cells (PR 6+): the mixed prefill+decode sweep must
+    # exist for both engines, the ragged cell must beat its padded twin
+    # (the tentpole acceptance criterion — structural, not tolerance-gated),
+    # and the once-compiled-step contract must hold.
+    mixed_ragged = [e for (c, n), e in idx.items()
+                    if c == SERVING_CELL and "-mixed-ragged" in n]
+    if not mixed_ragged:
+        errors.append(f"no mixed-ragged {SERVING_CELL} cells in snapshot "
+                      "(benchmarks/serving.py --ragged)")
+    for e in mixed_ragged:
+        name = e.get("name")
+        ratio = e.get("ragged_vs_padded_ratio")
+        if ratio is None:
+            errors.append(f"{SERVING_CELL}/{name}: missing ragged_vs_padded_ratio")
+        elif float(ratio) <= 1.0:
+            errors.append(
+                f"{SERVING_CELL}/{name}: ragged_vs_padded_ratio {ratio:.3f} "
+                "<= 1.0 (mixed ragged cell must beat the padded engine)"
+            )
+        if "padded_token_fraction" not in e:
+            errors.append(f"{SERVING_CELL}/{name}: missing padded_token_fraction")
+        dc = e.get("decode_compilations")
+        if dc is not None and float(dc) > 1:
+            errors.append(
+                f"{SERVING_CELL}/{name}: decode_compilations {dc} > 1 "
+                "(the mixed step must trace at most once)"
+            )
     return errors
 
 

@@ -5,8 +5,9 @@
 #   unit      full pytest suite on one CPU device (pallas in interpret mode)
 #             — includes tests/test_paged.py: paged-vs-contiguous token
 #             identity, prefix-cache reuse, page-exhaustion preemption
-#   backends  routing-backend equivalence tests (incl. fused kernels) and
-#             paged gather/scatter kernel oracles in isolation
+#   backends  routing-backend equivalence tests (incl. fused kernels),
+#             paged gather/scatter kernel oracles and the ragged
+#             flat-token kernel family (interpret mode) in isolation
 #   spmd      SPMD routed execution on a real 8-device CPU mesh
 #             (XLA_FLAGS=--xla_force_host_platform_device_count=8 in a
 #             fresh process: test_routing_spmd + test_sharding +
@@ -50,6 +51,8 @@ python -m pytest -x -q tests/test_routing_backends.py
 python -m pytest -x -q tests/test_routing_backends.py -k "fused"
 # paged-pool gather/scatter kernels vs the ref.py oracles
 python -m pytest -x -q tests/test_paged.py -k "kernels"
+# ragged flat-token kernels (interpret=True) vs their dense oracles
+python -m pytest -x -q tests/test_ragged.py
 stage_done backends $((SECONDS - STAGE_T0))
 
 stage spmd

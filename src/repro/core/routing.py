@@ -164,6 +164,99 @@ def decide_tokens(
     return RouteDecision("token_topk", idx, gate, topk_mask, logits)
 
 
+def decide_tokens_ragged(
+    params: Params,
+    x: jax.Array,  # (1, T, D) flat token stream
+    row_offsets: jax.Array,  # (n_seg+1,) int32, non-decreasing, starts at 0
+    cfg: ModelConfig,
+    seg_cap: int,  # static bound: every segment has <= seg_cap tokens
+    rng: Optional[jax.Array] = None,
+) -> RouteDecision:
+    """Segment-aware ``token_topk`` over a flat token stream.
+
+    The expert-choice top-k is per *segment* (one request's tokens between
+    consecutive row offsets), exactly the padded path's per-sequence
+    selection: each segment's router logits are windowed into a
+    ``(n_seg, seg_cap)`` view with tails at ``-inf`` (matching the padded
+    chunk's ``positions < 0`` demotion) and ``mod_select`` runs on that —
+    for equal-length segments the windowed view IS the padded ``(B, S)``
+    tensor, so the decision is bit-for-bit identical. ``idx`` comes back as
+    *flat* row indices ``(n_seg, k)`` with masked tail selections at ``-1``
+    (never a clamped pointer into a neighbouring segment); ``gate`` is
+    zeroed there, and ``mask``/``logits`` keep the flat ``(1, T)`` layout
+    so :func:`routing_aux` works unchanged.
+    """
+    T = x.shape[1]
+    n_seg = row_offsets.shape[0] - 1
+    C = int(seg_cap)
+    k_cap = cfg.mod.capacity(C)
+    offs = row_offsets.astype(jnp.int32)
+    lens = offs[1:] - offs[:-1]  # (n_seg,)
+    logits_flat = R.router_logits(params["router"], x)  # (1, T) f32
+    win = offs[:-1, None] + jnp.arange(C, dtype=jnp.int32)[None]  # (n_seg, C)
+    valid = jnp.arange(C, dtype=jnp.int32)[None] < lens[:, None]
+    win_c = jnp.clip(win, 0, T - 1)
+    wlogits = jnp.where(valid, logits_flat[0][win_c], -jnp.inf)
+    idx_l, gate_logits, _ = R.mod_select(wlogits, k_cap, cfg.mod, rng)
+    gate = R.apply_gate(gate_logits, cfg.mod)
+    sel_valid = jnp.take_along_axis(valid, idx_l, axis=1)
+    gate = jnp.where(sel_valid, gate, 0.0)
+    idx_flat = jnp.where(sel_valid, offs[:-1, None] + idx_l, -1).astype(jnp.int32)
+    safe = jnp.where(idx_flat >= 0, idx_flat, T)
+    mask_flat = (
+        jnp.zeros((T + 1,), bool).at[safe.reshape(-1)].set(True)[:T][None]
+    )  # (1, T)
+    return RouteDecision("token_topk_ragged", idx_flat, gate, mask_flat, logits_flat)
+
+
+def execute_routed_ragged(
+    decision: RouteDecision,
+    x: jax.Array,  # (1, T, D) flat token stream
+    block_delta_fn: BlockDeltaFn,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array] = None,  # (1, T) int32
+) -> Tuple[jax.Array, Aux]:
+    """Eq. 1 over the flat stream: gather the routed rows of every segment
+    into one ``(n_seg, k, D)`` sub-tensor, run the block delta (the block
+    sees segments as batch rows — same shapes as the padded path), and
+    gated-scatter-add back onto the flat stream.
+
+    Backends mirror :func:`execute_routed`: ``"xla"`` uses a dump-row
+    take / at-add, ``"pallas"`` the flat one-hot kernels
+    (kernels/ragged.py). ``"pallas_fused"`` has no ragged fused block yet
+    and falls back to the pallas dispatch kernels under the same config.
+    """
+    assert decision.strategy == "token_topk_ragged", decision.strategy
+    T = x.shape[1]
+    idx = decision.idx  # (n_seg, k) flat, -1 masked
+    backend = cfg.mod.backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown MoD backend {backend!r} (want one of {BACKENDS})")
+    if positions is None:
+        pos_sub = None
+    else:
+        pos_flat = positions[0]
+        pos_sub = jnp.where(idx >= 0, pos_flat[jnp.clip(idx, 0, T - 1)], -1)
+    if backend in ("pallas", "pallas_fused"):
+        from repro.kernels.ops import ragged_gather_rows_op, ragged_scatter_add_rows_op
+
+        x_sub = ragged_gather_rows_op(x[0], idx)
+        delta, aux = block_delta_fn(x_sub, pos_sub)
+        out = ragged_scatter_add_rows_op(x[0], idx, delta, decision.gate)
+        return out[None], aux
+    xp = jnp.concatenate([x[0], jnp.zeros((1, x.shape[2]), x.dtype)])
+    x_sub = jnp.take(xp, jnp.where(idx >= 0, idx, T), axis=0)
+    delta, aux = block_delta_fn(x_sub, pos_sub)
+    update = (decision.gate[..., None] * delta.astype(jnp.float32)).astype(x.dtype)
+    k = idx.shape[1]
+    out = (
+        jnp.concatenate([x[0], jnp.zeros((1, x.shape[2]), x.dtype)])
+        .at[jnp.where(idx >= 0, idx, T).reshape(-1)]
+        .add(update.reshape(idx.shape[0] * k, -1))[:T]
+    )
+    return out[None], aux
+
+
 def batch_capacity_k(cfg: ModelConfig, batch: int, data_shards: int = 1) -> int:
     """kb of the batch_capacity strategy: rows routed per decode step.
 

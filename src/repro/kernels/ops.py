@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged as _pg
+from repro.kernels import ragged as _rg
 from repro.kernels import routing as _rt
 from repro.kernels import ssd as _ssd
 from repro.kernels import swiglu as _sw
@@ -140,6 +141,62 @@ def paged_scatter_rows_op(
     rperm = (page_axis,) + tuple(range(nlead)) + tuple(range(page_axis + 1, rows.ndim))
     rcanon = rows.transpose(rperm).reshape(rows.shape[page_axis], -1)  # (B, F)
     out = _pg.paged_scatter_rows_pallas(canon, table, rcanon, pos, interpret=interp)
+    return _uncanon(out, rest, page_axis)
+
+
+# ---------------------------------------------------------------------------
+# Ragged flat-token ops (kernels/ragged.py): the mixed prefill+decode step's
+# flat (total_tokens, ...) layout. The attention/dispatch kernels run on the
+# canonical flat shapes directly; the write-back wrapper folds leaf lead/tail
+# dims into F like the paged ops above.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("seg_cap", "causal", "window", "scale", "interpret")
+)
+def ragged_attention_op(
+    q, k_pages, v_pages, pos_pages, table, row_offsets, seg_slot, q_pos, *,
+    seg_cap, causal=True, window=0, scale=None, interpret=None,
+):
+    """Ragged paged flash attention: flat query stream, K/V straight out of
+    the block-paged pool via per-slot page tables (scalar-prefetch grid)."""
+    interp = on_cpu() if interpret is None else interpret
+    return _rg.ragged_paged_flash_attention(
+        q, k_pages, v_pages, pos_pages, table, row_offsets, seg_slot, q_pos,
+        seg_cap=seg_cap, causal=causal, window=window, scale=scale,
+        interpret=interp,
+    )
+
+
+def ragged_gather_rows_op(x, idx, *, interpret=None):
+    """Flat-stream MoD row-gather; idx (n_seg, k) flat ids, -1 = masked."""
+    interp = on_cpu() if interpret is None else interpret
+    return _rg.ragged_gather_rows(x, idx, interpret=interp)
+
+
+def ragged_scatter_add_rows_op(x, idx, delta, gate, *, interpret=None):
+    """Flat-stream MoD gated scatter-add; -1 selections are dropped."""
+    interp = on_cpu() if interpret is None else interpret
+    return _rg.ragged_scatter_add_rows(x, idx, delta, gate, interpret=interp)
+
+
+def ragged_paged_scatter_rows_op(
+    pages, table, rows, slot, pos, valid, *,
+    page_axis=0, backend="xla", dump_page=1, interpret=None,
+):
+    """Mixed-step write-back: W token rows (decode + prefill) into their
+    slots' pages in one pass; invalid rows land on ``dump_page``."""
+    p = pages.shape[page_axis + 1]
+    pid, off = _rg.ragged_page_targets(table, slot, pos, valid, p, dump_page)
+    if backend == "xla":
+        return _rg.ragged_paged_scatter_rows_xla(pages, pid, off, rows, page_axis)
+    interp = on_cpu() if interpret is None else interpret
+    canon, rest = _canon_pages(pages, page_axis)
+    nlead = page_axis
+    rperm = (page_axis,) + tuple(range(nlead)) + tuple(range(page_axis + 1, rows.ndim))
+    rcanon = rows.transpose(rperm).reshape(rows.shape[page_axis], -1)  # (W, F)
+    out = _rg.ragged_paged_scatter_rows_pallas(canon, pid, off, rcanon, interpret=interp)
     return _uncanon(out, rest, page_axis)
 
 

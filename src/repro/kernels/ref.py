@@ -136,6 +136,108 @@ def paged_scatter_rows_ref(
 
 
 # ---------------------------------------------------------------------------
+# Ragged flat-token oracles (kernels/ragged.py): literal per-segment /
+# per-row loops over the flat stream, independent of the blocked kernels
+# and of the one-hot / scalar-prefetch formulations they validate.
+# ---------------------------------------------------------------------------
+
+
+def ragged_attention_ref(
+    q: jax.Array,  # (T, nq, hd) flat query stream
+    k_pages: jax.Array,  # (N, p, nkv, hd)
+    v_pages: jax.Array,
+    pos_pages: jax.Array,  # (N, p) int32; -1 = empty
+    table: jax.Array,  # (B, P) int32
+    row_offsets: jax.Array,  # (n_seg+1,) int32
+    seg_slot: jax.Array,  # (n_seg,) int32
+    q_pos: jax.Array,  # (T,) int32
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:  # (T, nq, hd); rows past row_offsets[-1] are zero
+    """Segment-by-segment oracle: materialize the segment's slot cache from
+    its page table, run :func:`attention_ref` on that one segment."""
+    import numpy as np
+
+    offs = np.asarray(row_offsets)
+    slots = np.asarray(seg_slot)
+    T = q.shape[0]
+    out = np.zeros(q.shape, np.asarray(q).dtype)
+    for s in range(offs.shape[0] - 1):
+        lo, hi = int(offs[s]), int(offs[s + 1])
+        if hi <= lo:
+            continue
+        tbl1 = table[int(slots[s]) : int(slots[s]) + 1]  # (1, P)
+        kk = paged_gather_ref(
+            k_pages.reshape(k_pages.shape[0], k_pages.shape[1], -1), tbl1
+        ).reshape(1, -1, *k_pages.shape[2:])
+        vv = paged_gather_ref(
+            v_pages.reshape(v_pages.shape[0], v_pages.shape[1], -1), tbl1
+        ).reshape(1, -1, *v_pages.shape[2:])
+        kv_pos = paged_gather_ref(pos_pages[..., None], tbl1)[..., 0]  # (1, ctx)
+        seg = attention_ref(
+            q[None, lo:hi], kk, vv, q_pos[None, lo:hi], kv_pos,
+            causal=causal, window=window, scale=scale,
+        )
+        out[lo:hi] = np.asarray(seg[0])
+    return jnp.asarray(out)
+
+
+def ragged_gather_rows_ref(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[s, i] = x[idx[s, i]] (zero row where idx < 0), row by row."""
+    import numpy as np
+
+    x_np, idx_np = np.asarray(x), np.asarray(idx)
+    n_seg, k = idx_np.shape
+    out = np.zeros((n_seg, k, x_np.shape[1]), x_np.dtype)
+    for s in range(n_seg):
+        for i in range(k):
+            if idx_np[s, i] >= 0:
+                out[s, i] = x_np[idx_np[s, i]]
+    return jnp.asarray(out)
+
+
+def ragged_scatter_add_rows_ref(
+    x: jax.Array,  # (T, D)
+    idx: jax.Array,  # (n_seg, k) flat indices, unique where >= 0
+    delta: jax.Array,  # (n_seg, k, D)
+    gate: jax.Array,  # (n_seg, k) f32
+) -> jax.Array:
+    """out[t] = x[t] + cast(gate * delta) for the at most one (s, i) with
+    idx[s, i] == t; masked (-1) selections contribute nothing."""
+    import numpy as np
+
+    out = np.asarray(x).copy()
+    idx_np = np.asarray(idx)
+    gated = np.asarray(gate)[..., None].astype(np.float32) * np.asarray(
+        delta
+    ).astype(np.float32)
+    for s in range(idx_np.shape[0]):
+        for i in range(idx_np.shape[1]):
+            t = idx_np[s, i]
+            if t >= 0:
+                out[t] = out[t] + gated[s, i].astype(out.dtype)
+    return jnp.asarray(out)
+
+
+def ragged_paged_scatter_rows_ref(
+    pages: jax.Array,  # (N, p, F)
+    pid: jax.Array,  # (W,)
+    off: jax.Array,  # (W,)
+    rows: jax.Array,  # (W, F)
+) -> jax.Array:
+    """pages[pid[w], off[w]] = rows[w], write by write (valid targets are
+    unique by contract; dump-page collisions are garbage by contract)."""
+    import numpy as np
+
+    pages_np = np.asarray(pages).copy()
+    pid_np, off_np, rows_np = np.asarray(pid), np.asarray(off), np.asarray(rows)
+    for w in range(pid_np.shape[0]):
+        pages_np[pid_np[w], off_np[w]] = rows_np[w]
+    return jnp.asarray(pages_np)
+
+
+# ---------------------------------------------------------------------------
 # Fused routed-block oracles (the "pallas_fused" backend, paper Eq. 1 with
 # the dispatch folded into the compute): direct one-pass formulations built
 # on the one-hot gather/scatter above.

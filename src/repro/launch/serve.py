@@ -65,6 +65,13 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked batched prefill piece size (dense/MoE; "
                          "0 = whole prompt in one jitted call)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="ragged flat-token batching: one jitted step "
+                         "carries decode rows AND a flat prefill-segment "
+                         "stream over the paged pool (requires --page-size; "
+                         "admission is budgeted by free segments)")
+    ap.add_argument("--ragged-segments", type=int, default=4,
+                    help="prefill segments per mixed step (--ragged)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -102,6 +109,8 @@ def main() -> None:
         n_pages=args.n_pages or None,
         prefix_cache=args.prefix_cache,
         prefill_chunk=args.prefill_chunk or None,
+        ragged=args.ragged,
+        ragged_segments=args.ragged_segments,
     )
 
     outputs = engine.run_stream(
@@ -139,6 +148,10 @@ def main() -> None:
               f"prefix_hit_rate={s['prefix_hit_rate']:.2f} "
               f"preemptions={s['preemptions']:.0f} "
               f"prefill_tokens_computed={s['prefill_tokens_computed']:.0f}")
+    if args.ragged:
+        print(f"[serve] ragged mixed step: segments={args.ragged_segments} "
+              f"padded_token_fraction={s['padded_token_fraction']:.3f} "
+              f"compilations={engine.decode_compilations or 0}")
     first = min(outputs, key=lambda o: o.uid)
     print(f"[serve] sample continuation: {first.tokens[-10:].tolist()}")
 

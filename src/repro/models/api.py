@@ -81,6 +81,27 @@ def model_forward(
     raise ValueError(cfg.family)
 
 
+def model_forward_ragged(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (T,) flat token stream
+    row_offsets: jax.Array,  # (n_seg+1,) int32
+    seg_cap: int,  # static per-segment length bound
+    rng=None,
+) -> Tuple[jax.Array, Aux]:
+    """Flat-token ("ragged") forward: segments packed on one (T,) stream,
+    delimited by ``row_offsets`` — no per-sequence padding rows. Transformer
+    families only (the layout is an attention/dispatch concern); for
+    equal-length segments the dense-family logits match ``model_forward``
+    (tests/test_ragged.py; MoE capacity bucketing is stream-global, see
+    ``transformer.forward_ragged``). Returns (logits (T, V), aux)."""
+    if cfg.family in ("dense", "moe"):
+        return T.forward_ragged(params, cfg, tokens, row_offsets, seg_cap, rng=rng)
+    raise NotImplementedError(
+        f"ragged forward for family {cfg.family}: use the padded model_forward"
+    )
+
+
 def combine_losses(ce: jax.Array, aux: Aux, cfg: ModelConfig) -> jax.Array:
     loss = ce
     if cfg.mod.enabled:

@@ -394,6 +394,31 @@ def routed_self_attention(
     )
 
 
+def ragged_self_attention(
+    params: Params,
+    x: jax.Array,  # (1, T, D) flat token stream
+    positions: jax.Array,  # (1, T) within-segment positions; -1 = padded tail
+    seg_id: jax.Array,  # (T,) int32 segment of each flat row
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Self-attention over a flat ragged token stream (segments packed
+    back-to-back, ``input_row_offsets`` layout). Causality is block-diagonal:
+    a query attends only within its own segment, at ``kv_pos <= q_pos`` on
+    within-segment positions. Adding the cross-segment ``NEG_INF`` entries
+    contributes exact-zero softmax terms, so on the dense-``attend`` path
+    each segment's rows equal the padded per-sequence attention bit for bit
+    (tests/test_ragged.py). The paged pallas twin of this read pattern is
+    ``kernels.ragged.ragged_paged_flash_attention``.
+    """
+    q = _project_q(params, x, cfg)
+    k, v = _project_kv(params, x, cfg)
+    q, k = _rope_qk(q, k, positions, positions, cfg)
+    tp = _t_pos(positions)
+    mask = make_mask(tp, tp, cfg.attn.causal, cfg.attn.window)
+    mask &= (seg_id[:, None] == seg_id[None, :])[None]
+    return attend(q, k, v, mask, cfg) @ params["wo"]
+
+
 def cross_attention(
     params: Params,
     x: jax.Array,

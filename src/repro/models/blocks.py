@@ -54,6 +54,23 @@ def block_apply(
     return h + m, aux
 
 
+def block_apply_ragged(
+    p: Params,
+    x: jax.Array,  # (1, T, D) flat token stream
+    positions: jax.Array,  # (1, T); -1 = padded tail
+    seg_id: jax.Array,  # (T,)
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Aux]:
+    """Full residual block over a flat ragged stream: attention is
+    segment-block-diagonal, the MLP is pointwise (layout-blind)."""
+    a = A.ragged_self_attention(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions, seg_id, cfg
+    )
+    h = x + a
+    m, aux = _ffn(p, h, cfg)
+    return h + m, aux
+
+
 def block_delta(
     p: Params, x: jax.Array, positions: jax.Array, cfg: ModelConfig
 ) -> Tuple[jax.Array, Aux]:

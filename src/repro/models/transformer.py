@@ -165,6 +165,74 @@ def forward(
     return logits, aux
 
 
+def forward_ragged(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (T,) flat token stream
+    row_offsets: jax.Array,  # (n_seg+1,) int32; row_offsets[-1] <= T
+    seg_cap: int,  # static bound: every segment has <= seg_cap tokens
+    rng: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Aux]:
+    """Flat-token forward (the ``input_row_offsets`` layout): segments are
+    packed back-to-back on one ``(T,)`` stream instead of padded ``(B, S)``
+    rows. Attention is segment-block-diagonal
+    (:func:`~repro.models.blocks.block_apply_ragged`), MoD selection is
+    per-segment (:func:`~repro.core.routing.decide_tokens_ragged`), and the
+    routed block sees segments as batch rows — so for equal-length segments
+    every dense-family layer runs the padded path's ops on the padded
+    path's values and the logits match (tests/test_ragged.py). MoE blocks
+    are the exception: expert capacity buckets are per *stream* row, so on
+    the flat layout they span the whole batch — the serving engine's mixed
+    step instead replays the padded chunk schedule per segment, which is
+    bit-identical for every family. Rows behind ``row_offsets[-1]`` are a
+    masked padding tail (positions -1).
+
+    Returns (logits (T, V), aux).
+    """
+    from repro.kernels.ragged import flat_segment_ids
+
+    T = tokens.shape[0]
+    x = embed(params["embed"], tokens[None])  # (1, T, D)
+    offs = row_offsets.astype(jnp.int32)
+    seg_id = flat_segment_ids(offs, T)
+    t = jnp.arange(T, dtype=jnp.int32)
+    positions = jnp.where(t < offs[-1], t - offs[seg_id], -1)[None]  # (1, T)
+    key0 = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def body(carry, gp):
+        h, key = carry
+        key, sub = jax.random.split(key)
+        aux: Aux = {}
+        if "full" in gp:
+            h, a = BLK.block_apply_ragged(gp["full"], h, positions, seg_id, cfg)
+            aux.update(_prefix("full", a))
+        if "mod" in gp:
+            decision = ROUT.decide_tokens_ragged(
+                gp["mod"], h, offs, cfg, seg_cap, sub
+            )
+
+            def delta_fn(xs, ps):
+                return BLK.block_delta(gp["mod"]["block"], xs, ps, cfg)
+
+            h_in = h
+            h, a = ROUT.execute_routed_ragged(decision, h, delta_fn, cfg, positions)
+            a = dict(a)
+            a.update(ROUT.routing_aux(decision, gp["mod"], h_in, cfg))
+            aux.update(a)
+        return (h, key), aux
+
+    (x, _), aux_stack = scan_or_loop(
+        body, (x, key0), params["groups"], unroll=cfg.unroll_layers
+    )
+    aux = jax.tree.map(jnp.mean, aux_stack)
+    if "tail" in params:
+        x, a = BLK.block_apply_ragged(params["tail"], x, positions, seg_id, cfg)
+        aux.update(_prefix("tail", a))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits[0], aux
+
+
 def lm_loss(
     params: Params,
     cfg: ModelConfig,

@@ -184,6 +184,10 @@ class PoolSpec:
     treedef: Any
     page_size: int
     backend: str
+    # batch axis of EVERY flat leaf (paged and residual alike), so a jitted
+    # step can slice / update one slot's batch-1 view of the materialized
+    # cache pytree — the ragged mixed step's per-segment working state
+    axes: Tuple[int, ...] = ()
 
 
 def paged_materialize(
@@ -231,6 +235,68 @@ def paged_writeback(
         new_pages.append(
             paged_scatter_rows_op(
                 pages[j], table, rows, pos, page_axis=ax, backend=spec.backend
+            )
+        )
+    new_resid = [leaves[i] for i in spec.resid_ids]
+    return new_pages, new_resid
+
+
+def slot_slice(spec: PoolSpec, caches: Any, slot: jax.Array) -> Any:
+    """Batch-1 view of one slot of a materialized cache pytree (traced
+    ``slot`` — used inside the ragged mixed step's segment scan)."""
+    leaves = jax.tree_util.tree_leaves(caches)
+    out = [
+        jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+        for leaf, ax in zip(leaves, spec.axes)
+    ]
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
+def slot_update(spec: PoolSpec, caches: Any, sub: Any, slot: jax.Array) -> Any:
+    """Write a batch-1 cache pytree back into ``slot`` of the full pytree."""
+    leaves = jax.tree_util.tree_leaves(caches)
+    subs = jax.tree_util.tree_leaves(sub)
+    out = [
+        jax.lax.dynamic_update_slice_in_dim(leaf, s.astype(leaf.dtype), slot, axis=ax)
+        for leaf, s, ax in zip(leaves, subs, spec.axes)
+    ]
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
+def paged_writeback_tokens(
+    spec: PoolSpec,
+    new_caches: Any,
+    pages: List[jax.Array],
+    table: jax.Array,
+    slot: jax.Array,  # (W,) int32 — slot of each written token row
+    pos: jax.Array,  # (W,) int32 — absolute position of each row
+    valid: jax.Array,  # (W,) bool — invalid rows land on the scratch page
+) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """Ragged-step write-back: an arbitrary flat list of (slot, pos) token
+    rows — this step's decode rows plus every prefill-segment token — is
+    scattered from the updated logical cache into the pool's pages in one
+    pass per leaf (kernels ``ragged_paged_scatter_rows_op``). The
+    fixed-one-row-per-slot :func:`paged_writeback` is the decode-only
+    special case. Invalid entries (inactive slots, padded segment tails)
+    write to SCRATCH_PAGE, which is never read."""
+    from repro.kernels.ops import ragged_paged_scatter_rows_op
+
+    leaves = jax.tree_util.tree_leaves(new_caches)
+    ctx = table.shape[1] * spec.page_size
+    pos_c = jnp.clip(pos, 0, ctx - 1).astype(jnp.int32)
+    slot_c = jnp.clip(slot, 0, table.shape[0] - 1).astype(jnp.int32)
+    new_pages: List[jax.Array] = []
+    for j, (i, ax) in enumerate(zip(spec.paged_ids, spec.paged_axes)):
+        view = leaves[i]  # lead + (B, ctx) + tail
+        rows = jnp.take(view, slot_c, axis=ax)  # lead + (W, ctx) + tail
+        idx = pos_c.reshape((1,) * ax + (-1, 1) + (1,) * (view.ndim - ax - 2))
+        rows = jnp.squeeze(
+            jnp.take_along_axis(rows, idx.astype(jnp.int32), axis=ax + 1), ax + 1
+        )
+        new_pages.append(
+            ragged_paged_scatter_rows_op(
+                pages[j], table, rows, slot, pos, valid,
+                page_axis=ax, backend=spec.backend, dump_page=SCRATCH_PAGE,
             )
         )
     new_resid = [leaves[i] for i in spec.resid_ids]
@@ -474,6 +540,7 @@ class PagedCachePool:
             treedef=self._treedef,
             page_size=self.page_size,
             backend=self.backend,
+            axes=tuple(self._axes),
         )
 
     def materialize(self, pages, resid, table):
@@ -495,6 +562,28 @@ class PagedCachePool:
         for i, v in resid.items():
             leaves[i] = v
         return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def snapshot_resid_slot(self, slot: int) -> Dict[int, jax.Array]:
+        """Batch-1 residual snapshot of one *pool* slot — the ragged mixed
+        step keeps its prefill working state in the pool itself, so prefix
+        boundaries are snapshotted straight from the slot's residual rows
+        (the padded path snapshots its batch-1 ``work`` pytree instead)."""
+        return {
+            i: jax.lax.dynamic_slice_in_dim(self.resid[j], slot, 1, axis=self._axes[i])
+            for j, i in enumerate(self._resid_ids)
+        }
+
+    def overlay_resid_slot(self, slot: int, resid: Dict[int, jax.Array]) -> None:
+        """Write a residual snapshot into one pool slot's rows (ragged-mode
+        prefix restore: the chunk resumes against the pool, not a batch-1
+        working copy)."""
+        new = list(self.resid)
+        for j, i in enumerate(self._resid_ids):
+            if i in resid:
+                new[j] = jax.lax.dynamic_update_slice_in_dim(
+                    new[j], resid[i].astype(new[j].dtype), slot, axis=self._axes[i]
+                )
+        self.resid = new
 
     # -- slot lifecycle (host-side accounting + jitted data ops) -------
 

@@ -81,6 +81,9 @@ from repro.serve.cache import (
     PagedCachePool,
     paged_materialize,
     paged_writeback,
+    paged_writeback_tokens,
+    slot_slice,
+    slot_update,
 )
 from repro.serve.request import (
     FINISH_EOS,
@@ -155,6 +158,8 @@ class ServingEngine:
         prefix_cache: bool = False,  # hash-chained prompt-prefix page reuse
         prefill_chunk: Optional[int] = None,  # chunked batched prefill (dense/MoE)
         paged_backend: str = "xla",  # paged gather/scatter: "xla" | "pallas"
+        ragged: bool = False,  # flat-token mixed prefill+decode step
+        ragged_segments: int = 4,  # prefill segments per ragged step
     ):
         """``mesh`` makes the engine multi-device: params are placed per the
         sharding rules, the cache pool is batch-sharded over the mesh's data
@@ -175,7 +180,20 @@ class ServingEngine:
         retrace cache can't grow with prompt-length diversity); prefix
         caching requires it page-aligned and defaults it to ``page_size``.
         Token streams are bit-identical to the contiguous pool at equal
-        prefill settings (tests/test_paged.py)."""
+        prefill settings (tests/test_paged.py).
+
+        ``ragged=True`` (paged, dense/MoE only) replaces the two separate
+        jitted entry points — per-admission chunked prefill plus the (B, 1)
+        decode step — with ONE jitted mixed step per engine step: up to
+        ``ragged_segments`` fixed-size prefill segments (each a
+        ``prefill_chunk``-token slice of some slot's prompt, several
+        consecutive segments per slot allowed) run as a flat token stream
+        alongside the decode rows, and a single ragged write-back scatters
+        every produced KV row into the pool's pages. Admission is budgeted
+        by free segment tokens rather than free slots, prompts no longer
+        stall decode (no off-path prefill calls), and token streams stay
+        bit-identical to the padded engine (tests/test_serve_ragged.py).
+        DESIGN.md §Serving engine, "Flat-token layout"."""
         if prefill not in ("auto", "batch", "step"):
             raise ValueError(f"unknown prefill mode {prefill!r}")
         from repro.distributed.sharding import shard_ctx
@@ -229,6 +247,24 @@ class ServingEngine:
                 prefill_chunk = page_size  # page-aligned boundaries by default
         if self._paged and mesh is not None:
             raise NotImplementedError("paged pool + SPMD mesh: shard the pages")
+        self._ragged = ragged
+        self._ragged_segments = int(ragged_segments)
+        if ragged:
+            if not self._paged:
+                raise ValueError("ragged=True requires the paged pool (page_size)")
+            if not self._batch_prefill:
+                raise ValueError(
+                    "ragged=True needs a batched-prefill family (dense/MoE): "
+                    "prefill segments replay model_prefill_chunk inside the step"
+                )
+            if mesh is not None or data_shards:
+                raise NotImplementedError(
+                    "ragged mixed step + SPMD mesh/data_shards"
+                )
+            if self._ragged_segments < 1:
+                raise ValueError("ragged_segments must be >= 1")
+            if prefill_chunk is None:
+                prefill_chunk = page_size
         self._prefix_cache = prefix_cache
         self._prefill_chunk = prefill_chunk
 
@@ -251,6 +287,12 @@ class ServingEngine:
         self.preemptions = 0  # mid-generation evictions (pages exhausted)
         self.admission_aborts = 0  # gate-passed admissions unwound pre-batch
         self._prefill_tokens_computed = 0
+        # fixed-shape steps always compute full (B·1 / segment-grid) token
+        # grids; these two split the grid into real vs padding positions so
+        # stats() can report padded_token_fraction — the batching-overhead
+        # number the ragged layout exists to shrink
+        self._positions_computed = 0
+        self._positions_wasted = 0
         self._routed_frac_sum = 0.0
         self._routed_frac_steps = 0
         self._occupancy_sum = 0
@@ -262,7 +304,119 @@ class ServingEngine:
         # per shape, and shapes are fixed, so this compiles exactly once
         # (and is shared by every engine with the same config + shard ctx).
         spmd = self.spmd
-        if self._paged:
+        if self._ragged:
+            spec = self.pool.step_spec()
+            C = self._prefill_chunk
+            S = self._ragged_segments
+
+            def _make_ragged_step():
+                # One fixed-shape mixed step. Inputs beyond the decode
+                # triple: a flat (S·C,) prefill token stream plus per-segment
+                # (slot, start, len, flat-offset) descriptors; dead segments
+                # carry len 0 and are exact no-ops on the caches (masked
+                # chunk positions never write — tests/test_serve_ragged.py).
+                def step(p, pages, resid, table, dec_t, dec_pos, dec_act,
+                         pf_tokens, seg_slot, seg_start, seg_len, seg_off):
+                    caches = paged_materialize(spec, pages, resid, table)
+                    T = pf_tokens.shape[0]
+                    # logits aval of one chunk call — the dead branch of the
+                    # per-segment cond must return the exact shape/dtype
+                    lg_aval = jax.eval_shape(
+                        lambda c: api.model_prefill_chunk(
+                            p, cfg, slot_slice(spec, c, jnp.int32(0)),
+                            jnp.zeros((1, C), jnp.int32),
+                            jnp.int32(0), jnp.int32(0),
+                        )[0],
+                        caches,
+                    )
+
+                    def seg_body(carry, xs):
+                        slot, start, ln, off = xs
+                        j = jnp.arange(C, dtype=jnp.int32)
+                        chunk = jnp.where(
+                            j < ln, jnp.take(pf_tokens, jnp.clip(off + j, 0, T - 1)), 0
+                        )[None]
+
+                        def live(c):
+                            sub = slot_slice(spec, c, slot)
+                            lg, new_sub = api.model_prefill_chunk(
+                                p, cfg, sub, chunk, start, ln
+                            )
+                            # per-segment residual snapshot: prefix
+                            # boundaries land mid-scan, so the host can't
+                            # slice them from the pool after the step
+                            # (later segments of the same slot have
+                            # already advanced it)
+                            res = tuple(
+                                jax.tree_util.tree_leaves(new_sub)[i]
+                                for i in spec.resid_ids
+                            )
+                            return slot_update(spec, c, new_sub, slot), lg[0], res
+
+                        def dead(c):
+                            # a real runtime skip (cond, not select): decode-
+                            # heavy steps don't pay for idle segment slots
+                            leaves = jax.tree_util.tree_leaves(c)
+                            res = tuple(
+                                jax.lax.dynamic_slice_in_dim(
+                                    leaves[i], 0, 1, axis=spec.axes[i]
+                                )
+                                for i in spec.resid_ids
+                            )
+                            return c, jnp.zeros(lg_aval.shape[1:], lg_aval.dtype), res
+
+                        new_carry, lg, res = jax.lax.cond(ln > 0, live, dead, carry)
+                        return new_carry, (lg, res)
+
+                    caches, (seg_logits, seg_resid) = jax.lax.scan(
+                        seg_body, caches, (seg_slot, seg_start, seg_len, seg_off)
+                    )
+                    dlogits, dec_caches, aux = api.model_decode(
+                        p, caches, cfg, dec_t, dec_pos, dec_act, spmd=None
+                    )
+                    # decode ran over every row; keep its cache writes only
+                    # where a row actually decoded, so slots mid-prefill
+                    # never absorb the garbage decode row
+                    dl = jax.tree_util.tree_leaves(dec_caches)
+                    pl = jax.tree_util.tree_leaves(caches)
+                    merged = jax.tree_util.tree_unflatten(
+                        spec.treedef,
+                        [
+                            jnp.where(
+                                dec_act.reshape(
+                                    (1,) * ax + (-1,) + (1,) * (d.ndim - ax - 1)
+                                ),
+                                d, c,
+                            )
+                            for d, c, ax in zip(dl, pl, spec.axes)
+                        ],
+                    )
+                    B = dec_pos.shape[0]
+                    arC = jnp.arange(C, dtype=jnp.int32)
+                    w_slot = jnp.concatenate(
+                        [jnp.arange(B, dtype=jnp.int32), jnp.repeat(seg_slot, C)]
+                    )
+                    w_pos = jnp.concatenate(
+                        [dec_pos.astype(jnp.int32),
+                         (seg_start[:, None] + arC[None]).reshape(-1)]
+                    )
+                    w_valid = jnp.concatenate(
+                        [dec_act, (arC[None] < seg_len[:, None]).reshape(-1)]
+                    )
+                    new_pages, new_resid = paged_writeback_tokens(
+                        spec, merged, pages, table, w_slot, w_pos, w_valid
+                    )
+                    return dlogits, seg_logits, seg_resid, new_pages, new_resid, aux
+
+                return step
+
+            self._step_fn = _cached_jit(
+                "ragged_step",
+                (cfg, ctx, page_size, self.pool.n_pages, paged_backend, C, S),
+                _make_ragged_step,
+            )
+            self._ragged_spec = spec
+        elif self._paged:
             spec = self.pool.step_spec()
 
             def _make_paged_step():
@@ -369,6 +523,40 @@ class ServingEngine:
 
         return gate
 
+    def _admit_ragged(self) -> None:
+        """Token-budget admission for the ragged mixed step: a request is
+        admitted only while the step has free prefill segments left after
+        the slots already mid-prompt — free *slots* are not the scarce
+        resource, segment tokens are. Admitted slots enter PREFILL with no
+        off-path compute; their prompts drain through the mixed step."""
+        n_prefilling = sum(1 for s in self.slots if s.state == PREFILL)
+        plans = self.scheduler.plan_admissions(
+            self.slots,
+            stepped_prefill=False,
+            page_gate=self._page_gate(),
+            max_admissions=max(0, self._ragged_segments - n_prefilling),
+        )
+        for slot, req in plans:
+            self.pool.acquire(slot.idx)
+            slot.req = req
+            slot.generated = []
+            slot.admitted_step = self.step_count
+            slot.first_token_step = -1
+            slot.routed_sum, slot.routed_steps = 0.0, 0
+            slot.score, slot.score_sum, slot.score_steps = float("nan"), 0.0, 0
+            slot.state = PREFILL
+            slot.pos = 0
+            slot.prompt_idx = 0
+            slot.next_token = 0
+            if self._prefix_cache:
+                m = self.pool.prefix_match(np.asarray(req.tokens))
+                if m is not None:
+                    prefix_key, entry = m
+                    resid_snap = self.pool.prefix_attach(slot.idx, prefix_key)
+                    self.pool.overlay_resid_slot(slot.idx, resid_snap)
+                    slot.prompt_idx = entry.n_tokens
+                    slot.pos = entry.n_tokens
+
     def _admit(self) -> None:
         plans = self.scheduler.plan_admissions(
             self.slots,
@@ -406,6 +594,7 @@ class ServingEngine:
                         self.pool.write_slot(slot.idx, sub)
                         logits_row = np.asarray(logits[0, -1])
                         self._prefill_tokens_computed += req.prompt_len
+                        self._positions_computed += req.prompt_len
                 except _PoolExhausted:
                     self._abort_admission(slot, req)
                     continue
@@ -486,6 +675,8 @@ class ServingEngine:
             )
             off += nv
             self._prefill_tokens_computed += nv
+            self._positions_computed += C
+            self._positions_wasted += C - nv
             if self._paged and self._prefix_cache and off % C == 0:
                 boundary_resids[off] = self.pool.snapshot_resid(work)
         if self._paged:
@@ -604,6 +795,53 @@ class ServingEngine:
             else:
                 return
 
+    def _plan_segments(self) -> List[tuple]:
+        """Greedy FCFS segment plan for the mixed step's prefill budget
+        (``ragged_segments`` segments × ``prefill_chunk`` tokens): oldest
+        mid-prompt slot first, several consecutive segments per slot
+        allowed (the in-step scan runs them in order). Also maps every
+        page the step will write — the planned prefill extent plus each
+        decoding slot's next row; on pool exhaustion the youngest active
+        slot (possibly mid-prefill) is preempted and planning restarts,
+        so the oldest request always keeps making progress."""
+        C = self._prefill_chunk
+        while True:
+            segs: List[tuple] = []
+            planned_end: Dict[int, int] = {}
+            budget = self._ragged_segments
+            for s in sorted(
+                (t for t in self.slots if t.state == PREFILL),
+                key=lambda t: (t.admitted_step, t.idx),
+            ):
+                off = s.prompt_idx
+                L = s.req.prompt_len
+                while budget > 0 and off < L:
+                    nv = min(C, L - off)
+                    segs.append((s, off, nv))
+                    off += nv
+                    budget -= 1
+                if off > s.prompt_idx:
+                    planned_end[s.idx] = off
+                if budget <= 0:
+                    break
+            ok = True
+            for s in self.slots:
+                need = None
+                if s.state == GENERATE:
+                    need = s.pos + 1
+                elif s.idx in planned_end:
+                    need = planned_end[s.idx]
+                if need is not None and not self.pool.alloc_pages(s.idx, need):
+                    ok = False
+                    break
+            if ok:
+                return segs
+            victim = max(
+                (t for t in self.slots if t.active),
+                key=lambda t: (t.admitted_step, t.idx),
+            )
+            self._preempt(victim)
+
     # ------------------------------------------------------------------
     # Stepping
     # ------------------------------------------------------------------
@@ -617,6 +855,8 @@ class ServingEngine:
 
         Returns the requests that finished during this call.
         """
+        if self._ragged:
+            return self._step_ragged()
         done_before = len(self.finished)
         t0 = time.time()
         self._admit()
@@ -649,6 +889,8 @@ class ServingEngine:
                 self._place(pos), self._place(active),
             )
         logits_np = np.asarray(logits)
+        self._positions_computed += B
+        self._positions_wasted += B - len(active_slots)
 
         routed = aux.get("mod/decode_routed")
         scores = aux.get("mod/decode_scores")
@@ -685,6 +927,126 @@ class ServingEngine:
                 self._push_token(s, tok)
                 if s.req is not None:
                     s.next_token = tok
+
+        self.step_count += 1
+        self._wall_s += time.time() - t0
+        self.scheduler.check_invariants(self.slots, len(self.finished))
+        return self.finished[done_before:]
+
+    def _step_ragged(self) -> List[RequestOutput]:
+        """One mixed prefill+decode step: admit by token budget, plan the
+        prefill segment grid, run the single jitted step, then advance
+        every slot host-side. Token streams are bit-identical to the
+        padded engine: each segment replays the exact ``prefill_chunk``
+        call the padded path would have made (same chunk boundaries, same
+        batch-1 cache state), and decode rows see the same pool state."""
+        done_before = len(self.finished)
+        t0 = time.time()
+        self._admit_ragged()
+        segs = self._plan_segments()  # maps pages; may preempt mid-prefill
+        active_slots = [s for s in self.slots if s.active]
+        if not active_slots:
+            self.step_count += 1
+            self._wall_s += time.time() - t0
+            return self.finished[done_before:]
+
+        B = self.batch_size
+        C = self._prefill_chunk
+        S = self._ragged_segments
+        dec_tokens = np.zeros((B, 1), np.int32)
+        dec_pos = np.zeros((B,), np.int32)
+        dec_act = np.zeros((B,), bool)
+        decode_slots = [s for s in self.slots if s.state == GENERATE]
+        for s in decode_slots:
+            dec_tokens[s.idx, 0] = s.next_token
+            dec_pos[s.idx] = s.pos
+            dec_act[s.idx] = True
+
+        # dead segments (slot 0, len 0) are exact cache no-ops in-step
+        pf_tokens = np.zeros((S * C,), np.int32)
+        seg_slot = np.zeros((S,), np.int32)
+        seg_start = np.zeros((S,), np.int32)
+        seg_len = np.zeros((S,), np.int32)
+        seg_off = np.zeros((S,), np.int32)
+        for k, (s, start, nv) in enumerate(segs):
+            seg_slot[k] = s.idx
+            seg_start[k] = start
+            seg_len[k] = nv
+            seg_off[k] = k * C
+            pf_tokens[k * C : k * C + nv] = np.asarray(
+                s.req.tokens[start : start + nv]
+            )
+
+        (logits, seg_logits, seg_resid, self.pool.pages, self.pool.resid,
+         aux) = self._step_fn(
+            self.params, self.pool.pages, self.pool.resid,
+            self.pool.device_table(),
+            jnp.asarray(dec_tokens), jnp.asarray(dec_pos), jnp.asarray(dec_act),
+            jnp.asarray(pf_tokens), jnp.asarray(seg_slot),
+            jnp.asarray(seg_start), jnp.asarray(seg_len), jnp.asarray(seg_off),
+        )
+        logits_np = np.asarray(logits)
+        seg_logits_np = np.asarray(seg_logits)
+
+        n_pf = sum(nv for _, _, nv in segs)
+        self._prefill_tokens_computed += n_pf
+        # dead segments (len 0) are skipped at runtime by the in-step cond,
+        # so only live segments' chunk grids count as computed positions
+        self._positions_computed += len(segs) * C + B
+        self._positions_wasted += (len(segs) * C - n_pf) + (B - len(decode_slots))
+        self._occupancy_sum += len(active_slots)
+
+        routed = aux.get("mod/decode_routed")
+        scores = aux.get("mod/decode_scores")
+        routed_np = None if routed is None else np.asarray(routed)
+        scores_np = None if scores is None else np.asarray(scores)
+        if decode_slots and "mod/decode_routed_frac" in aux:
+            self._routed_frac_sum += float(aux["mod/decode_routed_frac"])
+            self._routed_frac_steps += 1
+
+        # prefill slots: advance prompt progress, register every chunk
+        # boundary a segment completed (per-segment residual snapshots come
+        # out of the in-step scan — the pool itself has already advanced
+        # past mid-step boundaries), then sample first tokens where the
+        # prompt completed — from that slot's last segment's logits (the
+        # padded path's "no re-decode of the last prompt token" invariant)
+        last_seg: Dict[int, int] = {}
+        for k, (s, start, nv) in enumerate(segs):
+            s.prompt_idx = start + nv
+            s.pos = start + nv
+            last_seg[s.idx] = k
+        if self._prefix_cache:
+            resid_ids = self._ragged_spec.resid_ids
+            for k, (s, start, nv) in enumerate(segs):
+                end = start + nv
+                if end % C == 0:
+                    snap = {i: seg_resid[j][k] for j, i in enumerate(resid_ids)}
+                    self.pool.prefix_register(
+                        s.idx, np.asarray(s.req.tokens), {end: snap}
+                    )
+        for s in [t for t in self.slots if t.state == PREFILL]:
+            if s.idx not in last_seg:
+                continue  # over budget this step; waits for the next
+            if s.prompt_idx >= s.req.prompt_len:
+                tok = self._sample(s.req, seg_logits_np[last_seg[s.idx]], 0)
+                self._push_token(s, tok)
+                if s.req is not None:
+                    s.state = GENERATE
+                    s.next_token = tok
+
+        for s in decode_slots:
+            if routed_np is not None:
+                s.routed_sum += float(routed_np[s.idx])
+                s.routed_steps += 1
+            if scores_np is not None:
+                s.score = float(scores_np[s.idx])
+                s.score_sum += s.score
+                s.score_steps += 1
+            s.pos += 1
+            tok = self._sample(s.req, logits_np[s.idx], len(s.generated))
+            self._push_token(s, tok)
+            if s.req is not None:
+                s.next_token = tok
 
         self.step_count += 1
         self._wall_s += time.time() - t0
@@ -799,6 +1161,13 @@ class ServingEngine:
             ),
             "kv_cache_bytes": self.pool.cache_bytes()["total"],
             "prefill_tokens_computed": float(self._prefill_tokens_computed),
+            # fraction of fixed-shape step positions that carried no real
+            # token (inactive decode rows, dead/padded prefill segments)
+            "padded_token_fraction": (
+                self._positions_wasted / self._positions_computed
+                if self._positions_computed
+                else 0.0
+            ),
             # latest per-slot batch_capacity scores (NaN = free / MoD off):
             # what the router is currently ranking live slots by
             "slot_scores": [s.score for s in self.slots],

@@ -105,6 +105,7 @@ class Scheduler:
         slots: List[Slot],
         stepped_prefill: bool,
         page_gate: Optional[Callable[[Request], bool]] = None,
+        max_admissions: Optional[int] = None,
     ) -> List[Tuple[Slot, Request]]:
         """Pick (slot, request) pairs to admit this step.
 
@@ -115,11 +116,19 @@ class Scheduler:
         ``page_gate`` is the paged pool's admission check: a request is
         admissible only if its worst-case page count is obtainable right
         now (free + evictable prefix pages, minus what this admission wave
-        already claimed). Admission stops at the first gated request —
-        FCFS order is preserved rather than admitting around the head of
-        the line. Note the gate checks *availability*, not a reservation:
-        already-running slots still grow lazily, so concurrent growth can
-        overcommit the pool — the engine's preemption path handles that.
+        already claimed). A gated request is *skipped, not a barrier*: it
+        stays in place (keeping its FCFS seniority for later steps) while
+        smaller requests behind it may admit. The earlier stop-at-first-
+        gated behaviour head-of-line-blocked every free slot behind one
+        large request even when the rest of the queue fit comfortably
+        (regression-tested in tests/test_serve_ragged.py). Note the gate
+        checks
+        *availability*, not a reservation: already-running slots still
+        grow lazily, so concurrent growth can overcommit the pool — the
+        engine's preemption path handles that.
+
+        ``max_admissions`` additionally caps this wave (the ragged engine
+        budgets admissions by free prefill-segment tokens, not free slots).
         """
         free = [s for s in slots if s.state == FREE]
         plans: List[Tuple[Slot, Request]] = []
@@ -134,13 +143,27 @@ class Scheduler:
             budget = self.routed_capacity - sum(1 for s in slots if s.state == PREFILL)
         else:
             budget = len(free)
+        if max_admissions is not None:
+            budget = min(budget, max_admissions)
+        taken: set = set()
+        qi = 0
         for slot in free:
-            if not self.queue or budget <= 0:
+            if budget <= 0:
                 break
-            if page_gate is not None and not page_gate(self.queue[0]):
+            while qi < len(self.queue):
+                req = self.queue[qi]
+                qi += 1
+                if page_gate is None or page_gate(req):
+                    plans.append((slot, req))
+                    taken.add(qi - 1)
+                    budget -= 1
+                    break
+            else:
                 break
-            plans.append((slot, self.queue.popleft()))
-            budget -= 1
+        if taken:
+            self.queue = deque(
+                r for i, r in enumerate(self.queue) if i not in taken
+            )
         self.admitted += len(plans)
         return plans
 

@@ -13,6 +13,7 @@ from repro.kernels import ops, ref
 from repro.models import api
 from repro.serve import Request, ServingEngine
 from repro.serve.cache import NULL_PAGE, SCRATCH_PAGE, PagedCachePool
+from repro.serve.scheduler import PREFILL
 from tests.helpers import tiny_cfg
 
 # ---------------------------------------------------------------------------
@@ -277,6 +278,48 @@ def test_page_exhaustion_preempts_youngest_back_to_queue():
     ref_outs = {o.uid: o.full_sequence.tolist() for o in ref_eng.run_stream(reqs(), 2)}
     assert outs == ref_outs
     # pool drained clean: nothing referenced after the last release
+    assert eng.stats()["pages_in_use"] == 0.0
+    eng.scheduler.check_invariants(eng.slots, len(outs))
+
+
+def test_preemption_mid_chunked_prefill_resumes_bit_identical():
+    """Preemption landing *mid-prompt*: the ragged engine ingests prompts
+    one segment per step, so an older slot's lazy growth can exhaust the
+    pool while a younger slot is still chunk-prefilling. The victim must
+    requeue with its pages released and — on re-admission — produce a
+    stream bit-identical to an uninterrupted run (prefill restarts from
+    token 0, which recomputes the exact same caches)."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    pa = rng.integers(1, cfg.vocab - 1, size=4).astype(np.int32)
+    pb = rng.integers(1, cfg.vocab - 1, size=14).astype(np.int32)
+
+    def reqs():
+        return [
+            Request(tokens=pa, max_new_tokens=12),  # grows to 4 pages
+            Request(tokens=pb, max_new_tokens=2),  # 4-step prefill, 4 pages
+        ]
+
+    def run(**kw):
+        eng = ServingEngine(params, cfg, batch_size=2, ctx=32, page_size=4,
+                            ragged=True, ragged_segments=1, **kw)
+        victim_states = []
+        orig = eng._preempt
+        eng._preempt = lambda s: (victim_states.append(s.state), orig(s))[1]
+        for r in reqs():
+            eng.submit(r)
+        outs = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+        return outs, eng, victim_states
+
+    # 5 allocatable pages: A's lazy growth collides with B's 4th prefill
+    # chunk at the step B would have completed its prompt
+    outs, eng, victim_states = run(n_pages=7)
+    assert eng.preemptions >= 1
+    assert PREFILL in victim_states, "preemption never landed mid-prefill"
+    ref_outs, ref_eng, ref_states = run()  # default pool: no pressure
+    assert ref_eng.preemptions == 0 and not ref_states
+    assert outs == ref_outs
     assert eng.stats()["pages_in_use"] == 0.0
     eng.scheduler.check_invariants(eng.slots, len(outs))
 
