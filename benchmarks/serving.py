@@ -51,6 +51,11 @@ MIXED_SMOKE = dict(slots=4, max_prompt_len=16, gen=4, requests=6,
                    arrival_every=1, ragged_segments=4)
 MIXED_FULL = dict(slots=8, max_prompt_len=32, gen=8, requests=16,
                   arrival_every=1, ragged_segments=8)
+# Self-speculative sweep: decode-heavy on purpose (long generations, short
+# prompts) — speculation amortizes per-step host dispatch across the
+# drafted window, a win that only shows once decode dominates the run.
+SPEC_SMOKE = dict(slots=4, prompt_len=8, gen=24, requests=6)
+SPEC_FULL = dict(slots=8, prompt_len=8, gen=48, requests=16)
 
 
 def _prompts(n: int, s0: int, vocab: int, seed: int = 7) -> np.ndarray:
@@ -266,6 +271,67 @@ def mixed_sweep(cfg, params, slots, max_prompt_len, gen, requests,
     return best
 
 
+def check_speculative_identity(cfg, params, slots, prompt_len, gen, page_size,
+                               speculate, draft_ratio) -> None:
+    """--speculate must be invisible to greedy token streams: the
+    speculative engine's outputs are bit-identical to the non-speculative
+    paged engine on the same upfront-submitted workload (the global accept
+    cap keeps batch composition — and hence MoD batch-capacity routing —
+    aligned step for step)."""
+    prompts = _prompts(min(4, slots), prompt_len, cfg.vocab)
+    streams = {}
+    for spec in (None, speculate):
+        kw = dict(page_size=page_size, prefill_chunk=page_size)
+        if spec:
+            kw.update(speculate=spec, draft_ratio=draft_ratio)
+        eng = ServingEngine(params, cfg, batch_size=len(prompts),
+                            ctx=prompt_len + gen, **kw)
+        for i in range(len(prompts)):
+            eng.submit(Request(tokens=prompts[i], max_new_tokens=gen))
+        streams[bool(spec)] = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+        assert (eng.decode_compilations or 0) <= 1, "speculative step retraced"
+    assert streams[False] == streams[True], "speculation changed token streams"
+
+
+def speculative_sweep(cfg, params, slots, prompt_len, gen, requests, page_size,
+                      speculate, draft_ratio, plain_tokens_per_s,
+                      reps: int = 3) -> Dict[str, float]:
+    """One self-speculative point: greedy closed batch through the paged
+    engine, drafting ``speculate`` tokens per round at ``draft_ratio``
+    capacity and verifying the window at full capacity in one jitted call.
+    ``speculate=None`` measures the matching plain baseline. Keep the
+    fastest of ``reps`` (CPU wall-clock noise; every rep replays the same
+    stream, so the kept run's accept telemetry matches any other rep's)."""
+    prompts = _prompts(requests, prompt_len, cfg.vocab)
+    kw = dict(batch_size=slots, ctx=prompt_len + gen, page_size=page_size,
+              prefill_chunk=page_size)
+    if speculate:
+        kw.update(speculate=speculate, draft_ratio=draft_ratio)
+    warm = ServingEngine(params, cfg, **kw)
+    warm.submit(Request(tokens=prompts[0], max_new_tokens=2))
+    warm.run()
+    best = None
+    for _ in range(reps):
+        engine = ServingEngine(params, cfg, **kw)
+        outputs = engine.run_stream(
+            [Request(tokens=prompts[i], max_new_tokens=gen)
+             for i in range(requests)], 0)
+        m = _measure(engine, outputs)
+        if speculate:
+            s = engine.stats()
+            m.update(
+                speculate=speculate, draft_ratio=draft_ratio,
+                speculative_accept_rate=s["speculative_accept_rate"],
+                speculative_tokens_per_round=s["speculative_tokens_per_round"],
+                speculative_rounds=s["speculative_rounds"],
+            )
+        if best is None or m["tokens_per_s"] > best["tokens_per_s"]:
+            best = m
+    if speculate and plain_tokens_per_s:
+        best["spec_vs_plain_ratio"] = best["tokens_per_s"] / plain_tokens_per_s
+    return best
+
+
 def run(smoke: bool = False, backend: str = "xla", page_size: int = 4,
         prefix_cache: bool = True, ragged: bool = True) -> List[Dict]:
     p = dict(SMOKE if smoke else FULL)
@@ -295,6 +361,39 @@ def run(smoke: bool = False, backend: str = "xla", page_size: int = 4,
             rows.append({"model": f"{name}-paged", "backend": backend,
                          "arrival_every": 0, "page_size": page_size,
                          "prefix_cache": prefix_cache, **p, **m})
+        if page_size:
+            # self-speculative decoding (ROADMAP item 2): draft at reduced
+            # MoD capacity, verify at full, roll back via paged truncation.
+            # Dense models draft at their own (full) capacity — the win is
+            # the scan-batched verify amortizing per-step host dispatch.
+            sp = dict(SPEC_SMOKE if smoke else SPEC_FULL)
+            spec_ns = (4, 6)
+            # the draft_ratio sweep: the engine's own ratio is the fused
+            # draft==verify fast path; half-ratio is a genuinely cheaper
+            # drafter paying a real (two-pass) draft cost for its accept
+            # rate. Dense models have one capacity, so one ratio cell.
+            full_r = cfg.mod.capacity_ratio if cfg.mod.enabled else 0.0
+            half = cfg.mod.capacity_ratio / 2 if cfg.mod.enabled else 0.0
+            ratios = ((full_r,) if smoke or not cfg.mod.enabled
+                      else (half, full_r))
+            check_speculative_identity(cfg, params, sp["slots"],
+                                       sp["prompt_len"], sp["gen"], page_size,
+                                       spec_ns[-1], ratios[0])
+            plain = speculative_sweep(cfg, params, page_size=page_size,
+                                      speculate=None, draft_ratio=0.0,
+                                      plain_tokens_per_s=0.0, **sp)
+            rows.append({"model": f"{name}-spec-plain", "backend": backend,
+                         "arrival_every": 0, "page_size": page_size, **sp,
+                         **plain})
+            for n_spec in spec_ns:
+                for r in ratios:
+                    m = speculative_sweep(
+                        cfg, params, page_size=page_size, speculate=n_spec,
+                        draft_ratio=r,
+                        plain_tokens_per_s=plain["tokens_per_s"], **sp)
+                    rows.append({"model": f"{name}-spec-n{n_spec}-r{r:g}",
+                                 "backend": backend, "arrival_every": 0,
+                                 "page_size": page_size, **sp, **m})
         if page_size and ragged:
             mx = dict(MIXED_SMOKE if smoke else MIXED_FULL)
             check_mixed_identity(cfg, params, mx["slots"], mx["max_prompt_len"],
@@ -322,17 +421,27 @@ def log_perf(rows: List[Dict], out: str) -> None:
     paged_keys = ("page_utilization", "prefix_hit_rate", "preemptions",
                   "prefill_tokens_computed", "prefill_saved_frac",
                   "paged_tokens_ratio", "page_size", "prefix_cache",
-                  "ragged_vs_padded_ratio", "ragged_segments", "max_prompt_len")
+                  "ragged_vs_padded_ratio", "ragged_segments", "max_prompt_len",
+                  "speculate", "draft_ratio", "speculative_accept_rate",
+                  "speculative_tokens_per_round", "speculative_rounds",
+                  "spec_vs_plain_ratio")
     for r in rows:
         load = "closed" if r["arrival_every"] <= 0 else f"every{r['arrival_every']}"
         model = str(r["model"])
         paged = "-paged" in model
         mixed = "-mixed-" in model
+        spec = "-spec-" in model
         log.append({
             "cell": "S:serving",
             "name": f"{r['model']}-{load}",
             "backend": r.get("backend", "xla"),
             "hypothesis": (
+                "self-speculative decoding: draft n tokens at reduced MoD "
+                "capacity, verify the window at full capacity in one jitted "
+                "scan, roll back rejected tails by paged truncation — "
+                "greedy streams bit-identical with spec_vs_plain_ratio > 1 "
+                "at a well-chosen (n, draft_ratio)."
+                if spec else
                 "one jitted mixed prefill+decode step over flat token "
                 "segments beats the padded two-path engine on "
                 "diverse-length open streams (ragged_vs_padded_ratio > 1) "
@@ -384,6 +493,12 @@ def main(
                 f"serving/{r['model']}_prefix_hit_rate,{r['prefix_hit_rate']:.3f},"
                 f"prefill_saved={r['prefill_saved_frac']:.2f} "
                 f"page_util={r['page_utilization']:.2f}"
+            )
+        if "spec_vs_plain_ratio" in r:
+            lines.append(
+                f"serving/{r['model']}_vs_plain,{r['spec_vs_plain_ratio']:.2f},"
+                f"accept={r['speculative_accept_rate']:.3f} "
+                f"tok_per_round={r['speculative_tokens_per_round']:.2f}"
             )
         if "ragged_vs_padded_ratio" in r:
             lines.append(

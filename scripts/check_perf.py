@@ -111,6 +111,41 @@ def check_structure(cells: List[Dict]) -> List[str]:
                 f"{SERVING_CELL}/{name}: decode_compilations {dc} > 1 "
                 "(the mixed step must trace at most once)"
             )
+    # self-speculative cells (PR 7+): the sweep must exist, every cell
+    # carries the accept telemetry and keeps the once-compiled contract,
+    # and the tentpole acceptance criterion holds: the *best* cell beats
+    # its plain greedy baseline. Best, not all — the sweep includes
+    # degenerate draft ratios on purpose, and the MoD model's small
+    # routing ops serialized inside the verify scan can eat the dispatch-
+    # amortization win at CPU tiny-scale (same caveat as the
+    # mod_vs_dense_speedup line; the bit-identity contract is tested for
+    # both families regardless).
+    spec = [e for (c, n), e in idx.items()
+            if c == SERVING_CELL and "-spec-n" in n]
+    if not spec:
+        errors.append(f"no speculative {SERVING_CELL} cells in snapshot "
+                      "(benchmarks/serving.py speculative_sweep)")
+    best_ratio = 0.0
+    for e in spec:
+        name = str(e.get("name"))
+        for k in ("speculative_accept_rate", "speculative_tokens_per_round",
+                  "spec_vs_plain_ratio"):
+            if k not in e:
+                errors.append(f"{SERVING_CELL}/{name}: missing {k}")
+        dc = e.get("decode_compilations")
+        if dc is not None and float(dc) > 1:
+            errors.append(
+                f"{SERVING_CELL}/{name}: decode_compilations {dc} > 1 "
+                "(the speculative step must trace at most once)"
+            )
+        ratio = e.get("spec_vs_plain_ratio")
+        if ratio is not None:
+            best_ratio = max(best_ratio, float(ratio))
+    if spec and best_ratio <= 1.0:
+        errors.append(
+            f"best speculative cell: spec_vs_plain_ratio {best_ratio:.3f} "
+            "<= 1.0 (some (n, draft_ratio) must beat plain greedy decode)"
+        )
     return errors
 
 

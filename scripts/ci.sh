@@ -4,7 +4,9 @@
 #
 #   unit      full pytest suite on one CPU device (pallas in interpret mode)
 #             — includes tests/test_paged.py: paged-vs-contiguous token
-#             identity, prefix-cache reuse, page-exhaustion preemption
+#             identity, prefix-cache reuse, page-exhaustion preemption —
+#             plus the serving-stack coverage floor when pytest-cov is
+#             installed (requirements-dev.txt)
 #   backends  routing-backend equivalence tests (incl. fused kernels),
 #             paged gather/scatter kernel oracles and the ragged
 #             flat-token kernel family (interpret mode) in isolation
@@ -12,11 +14,15 @@
 #             (XLA_FLAGS=--xla_force_host_platform_device_count=8 in a
 #             fresh process: test_routing_spmd + test_sharding +
 #             test_pipeline)
+#   soak      differential engine soak (tests/test_serve_soak.py): fuzzed
+#             workloads must stream identically across padded / ragged /
+#             speculative engines; hard wall-clock bound so a wedged
+#             engine fails instead of hanging CI
 #   perf      scripts/check_perf.py gate over committed BENCH_*.json
 #   docs      markdown link check + quickstart as an executable smoke test
 #
 #   scripts/ci.sh            # all stages
-#   scripts/ci.sh --fast     # unit+backends+spmd only (no perf/docs);
+#   scripts/ci.sh --fast     # unit+backends+spmd+soak only (no perf/docs);
 #                            # needs no network and no BENCH snapshots
 #
 # Extra args after the flags are passed to the unit-stage pytest.
@@ -41,8 +47,21 @@ stage_done() {
   echo "=== [ci:$1] ok (${2}s) ==="
 }
 
+# serving-stack coverage rides the unit stage when pytest-cov is
+# importable (requirements-dev.txt installs it; the pinned local
+# container may lack it, in which case the suite runs uninstrumented).
+# The fail-under floor is a ratchet: raise it as the suite grows, never
+# lower it to make a red build green.
+HAVE_COV=0
+python -c "import pytest_cov" >/dev/null 2>&1 && HAVE_COV=1
+COV_ARGS=""
+if [[ "$HAVE_COV" == 1 ]]; then
+  COV_ARGS="--cov=repro.serve --cov-report=term
+            --cov-report=xml:coverage-serve.xml --cov-fail-under=70"
+fi
+
 stage unit
-python -m pytest -x -q "$@"
+python -m pytest -x -q $COV_ARGS --ignore=tests/test_serve_soak.py "$@"
 stage_done unit $((SECONDS - STAGE_T0))
 
 stage backends
@@ -62,6 +81,12 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
   python -m pytest -x -q tests/test_routing_spmd.py tests/test_sharding.py \
   tests/test_pipeline.py
 stage_done spmd $((SECONDS - STAGE_T0))
+
+stage soak
+# seeded differential fuzz over every engine variant; `timeout` turns a
+# hung engine (scheduler livelock, device deadlock) into a failure
+timeout 600 python -m pytest -x -q tests/test_serve_soak.py
+stage_done soak $((SECONDS - STAGE_T0))
 
 if [[ "$FAST" == "1" ]]; then
   echo "=== [ci] --fast: skipping perf+docs stages ==="

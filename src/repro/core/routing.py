@@ -265,7 +265,14 @@ def batch_capacity_k(cfg: ModelConfig, batch: int, data_shards: int = 1) -> int:
     ``kb_local = batch_capacity_k(cfg, B // d)`` of its own rows, so the
     *global* budget is ``d · kb_local``. The single source of truth — the
     serving scheduler budgets admissions against this same (global) number.
+
+    ``ratio <= 0`` returns 0 (not the usual floor of 1): the speculative
+    drafter runs the model at ``capacity_ratio=0.0`` to get the pure
+    residual-skip path, and a kb=0 ``top_k``/gather/scatter round trip
+    over zero rows is well-defined all the way through ``route_decode``.
     """
+    if cfg.mod.capacity_ratio <= 0.0:
+        return 0
     if data_shards > 1:
         assert batch % data_shards == 0, (batch, data_shards)
         return data_shards * batch_capacity_k(cfg, batch // data_shards)

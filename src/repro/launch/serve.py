@@ -72,6 +72,21 @@ def main() -> None:
                          "admission is budgeted by free segments)")
     ap.add_argument("--ragged-segments", type=int, default=4,
                     help="prefill segments per mixed step (--ragged)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="self-speculative decoding: draft N tokens per "
+                         "round with the model at --draft-ratio capacity, "
+                         "verify the window at full capacity in the same "
+                         "jitted call, roll back rejected tails via paged "
+                         "truncation (requires --page-size; greedy streams "
+                         "stay bit-identical to N=0)")
+    ap.add_argument("--draft-ratio", type=float, default=0.0,
+                    help="MoD capacity ratio of the drafter (0.0 = pure "
+                         "residual-skip path; only meaningful with "
+                         "--speculate)")
+    ap.add_argument("--verify-budget", type=int, default=0,
+                    help="verify-token budget per speculative round: "
+                         "admission stops while active slots x "
+                         "(speculate+1) would exceed it (0 = uncapped)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -111,6 +126,9 @@ def main() -> None:
         prefill_chunk=args.prefill_chunk or None,
         ragged=args.ragged,
         ragged_segments=args.ragged_segments,
+        speculate=args.speculate or None,
+        draft_ratio=args.draft_ratio,
+        spec_verify_budget=args.verify_budget or None,
     )
 
     outputs = engine.run_stream(
@@ -152,6 +170,12 @@ def main() -> None:
         print(f"[serve] ragged mixed step: segments={args.ragged_segments} "
               f"padded_token_fraction={s['padded_token_fraction']:.3f} "
               f"compilations={engine.decode_compilations or 0}")
+    if args.speculate:
+        print(f"[serve] speculative: n={args.speculate} "
+              f"draft_ratio={args.draft_ratio} "
+              f"accept_rate={s['speculative_accept_rate']:.3f} "
+              f"tokens_per_round={s['speculative_tokens_per_round']:.2f} "
+              f"rounds={s['speculative_rounds']:.0f}")
     first = min(outputs, key=lambda o: o.uid)
     print(f"[serve] sample continuation: {first.tokens[-10:].tolist()}")
 

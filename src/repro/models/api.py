@@ -211,6 +211,113 @@ def model_prefill_chunk(
     )
 
 
+def model_draft_window(
+    params: Params,
+    cfg: ModelConfig,  # typically the engine cfg with an overridden (low) capacity_ratio
+    caches: Params,
+    token: jax.Array,  # (B, 1) — the token each row is about to decode
+    pos: jax.Array,  # (B,)
+    active: Optional[jax.Array],
+    n: int,
+) -> jax.Array:
+    """Self-speculative draft pass: ``n`` chained greedy decode steps.
+
+    Step ``j`` feeds the previous step's argmax at ``pos + j``; the result
+    is the (n, B) draft-token window ``d_1..d_n`` (``d_{j+1}`` is the
+    drafter's guess for the token the verifier will place at position
+    ``pos + j + 1``). The cache the drafter writes into is a throwaway
+    copy carried only through the scan — the caller's cache is untouched,
+    because the full-capacity verify pass recomputes every KV row anyway.
+    ``cfg`` is normally the serving config with ``mod.capacity_ratio``
+    replaced by the aggressive draft ratio (``0.0`` = pure residual skip:
+    ``batch_capacity_k`` returns kb=0, so every routed block is an exact
+    no-op and the drafter costs only the unrouted layers).
+    """
+
+    def body(carry, j):
+        c, t = carry
+        logits, c2, _aux = model_decode(params, c, cfg, t, pos + j, active, spmd=None)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (c2, nxt[:, None]), nxt
+
+    (_, _), drafts = jax.lax.scan(
+        body, (caches, token), jnp.arange(n, dtype=jnp.int32)
+    )
+    return drafts
+
+
+def model_verify_window(
+    params: Params,
+    cfg: ModelConfig,
+    caches: Params,
+    feed: jax.Array,  # (n+1, B) — [current token, d_1 .. d_n]
+    pos: jax.Array,  # (B,) — position of feed[0]
+    active: Optional[jax.Array],
+    collect=None,  # per-step hook: (caches_after_step, positions) -> pytree
+) -> Tuple[jax.Array, Aux, Any]:
+    """Full-capacity verify pass over a speculative token window.
+
+    A ``lax.scan`` of ``model_decode`` — NOT a chunk-shaped parallel
+    forward — because bit-identity with the non-speculative engine
+    requires replaying the *exact* decode-path computation: MoD
+    ``batch_capacity`` routing ranks batch rows per step (a chunk forward
+    would route with the chunk-local ``token_topk`` strategy and diverge),
+    and the capacity rings advance one conditional append per step.
+    Returns per-step stacks: logits (n+1, B, V), aux (each leaf gains a
+    leading n+1 axis), and whatever ``collect`` extracted after each step
+    (the serving engine collects each step's paged KV rows — before a
+    later in-window write could wrap the ring — plus the residual-leaf
+    snapshots its rollback restores from).
+    """
+
+    def body(c, xs):
+        t, j = xs
+        logits, c2, aux = model_decode(params, c, cfg, t[:, None], pos + j, active, spmd=None)
+        extra = collect(c2, pos + j) if collect is not None else ()
+        return c2, (logits, aux, extra)
+
+    steps = jnp.arange(feed.shape[0], dtype=jnp.int32)
+    _, (logits, aux, extra) = jax.lax.scan(body, caches, (feed, steps))
+    return logits, aux, extra
+
+
+def model_fused_window(
+    params: Params,
+    cfg: ModelConfig,
+    caches: Params,
+    token: jax.Array,  # (B, 1) — the token each row is about to decode
+    pos: jax.Array,  # (B,)
+    active: Optional[jax.Array],
+    n: int,
+    collect=None,  # per-step hook: (caches_after_step, positions) -> pytree
+) -> Tuple[jax.Array, jax.Array, Aux, Any]:
+    """Draft + verify in ONE autoregressive scan, for the degenerate
+    self-speculative case where the drafter *is* the verifier (dense
+    family, or ``draft_ratio == cfg.mod.capacity_ratio``). The two-pass
+    shape would run the same model twice over the same window — n draft
+    steps whose logits the n+1 verify steps recompute exactly. Here each
+    scan step feeds the previous step's argmax, so the chain is
+    simultaneously the draft window (``argmax`` outputs, first n steps)
+    and the verify stack (the logits): ``n+1`` model steps per round
+    instead of ``2n+1``. Bit-identical to
+    ``model_draft_window`` + ``model_verify_window`` at an equal draft
+    config by construction — it is the same computation, deduplicated.
+    Returns (drafts (n, B), logits (n+1, B, V), aux stacks, collect ys).
+    """
+
+    def body(carry, j):
+        c, t = carry
+        logits, c2, aux = model_decode(params, c, cfg, t, pos + j, active, spmd=None)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        extra = collect(c2, pos + j) if collect is not None else ()
+        return (c2, nxt[:, None]), (logits, nxt, aux, extra)
+
+    _, (logits, nxt, aux, extra) = jax.lax.scan(
+        body, (caches, token), jnp.arange(n + 1, dtype=jnp.int32)
+    )
+    return nxt[:n], logits, aux, extra
+
+
 # ---------------------------------------------------------------------------
 # Dry-run input specs (no allocation)
 # ---------------------------------------------------------------------------

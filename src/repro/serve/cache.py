@@ -303,6 +303,52 @@ def paged_writeback_tokens(
     return new_pages, new_resid
 
 
+def paged_collect_rows(spec: "PoolSpec", caches: Any, pos: jax.Array) -> List[jax.Array]:
+    """Extract each slot's KV row at ``pos[b]`` from a logical cache pytree
+    (one row per paged leaf, per slot). The speculative verify scan calls
+    this right after every in-window decode step: rows must be collected
+    *per step* because a later step at ``pos + j >= ctx`` wraps the ring
+    (``cache_write`` writes at ``cursor % ctx``) and would clobber the
+    carried logical row before a post-scan extraction could see it.
+    Out-of-range positions clip to the last row — the caller masks them
+    out of the scatter with ``valid=False``."""
+    leaves = jax.tree_util.tree_leaves(caches)
+    rows: List[jax.Array] = []
+    for i, ax in zip(spec.paged_ids, spec.paged_axes):
+        view = leaves[i]  # lead + (B, ctx) + tail
+        ctx = view.shape[ax + 1]
+        idx = jnp.clip(pos, 0, ctx - 1).astype(jnp.int32)
+        idx = idx.reshape((1,) * ax + (-1, 1) + (1,) * (view.ndim - ax - 2))
+        rows.append(jnp.squeeze(jnp.take_along_axis(view, idx, axis=ax + 1), ax + 1))
+    return rows
+
+
+def paged_scatter_rows(
+    spec: "PoolSpec",
+    rows: List[jax.Array],  # per paged leaf: lead + (W,) + tail row stacks
+    pages: List[jax.Array],
+    table: jax.Array,
+    slot: jax.Array,  # (W,) int32
+    pos: jax.Array,  # (W,) int32
+    valid: jax.Array,  # (W,) bool — invalid rows land on the scratch page
+) -> List[jax.Array]:
+    """Scatter pre-collected KV rows into the pool's pages — the
+    row-stack half of :func:`paged_writeback_tokens`, for callers (the
+    speculative step) whose rows come out of a scan instead of a final
+    logical cache."""
+    from repro.kernels.ops import ragged_paged_scatter_rows_op
+
+    new_pages: List[jax.Array] = []
+    for j, ax in enumerate(spec.paged_axes):
+        new_pages.append(
+            ragged_paged_scatter_rows_op(
+                pages[j], table, rows[j], slot, pos, valid,
+                page_axis=ax, backend=spec.backend, dump_page=SCRATCH_PAGE,
+            )
+        )
+    return new_pages
+
+
 def lru_cached(cache: "OrderedDict", key: Any, make, maxsize: int):
     """Bounded-LRU memo: the one implementation behind this module's pool-op
     cache and serve/engine.py's jit cache. Eviction only drops the cache's
@@ -609,6 +655,31 @@ class PagedCachePool:
                 self.free.append(pid)
         self.table_np[slot, :] = SCRATCH_PAGE
         self.n_mapped[slot] = 0
+
+    def truncate(self, slot: int, upto_tokens: int) -> int:
+        """Speculative rollback: shrink the slot's mapping to the pages
+        covering ``upto_tokens`` logical positions, releasing the tail
+        pages (decref — a page survives if a prefix-cache entry or another
+        slot still pins it). Tail table entries go back to NULL so reads
+        past the truncation point hit the pristine NULL page, exactly as
+        if those pages were never mapped. Stale rows *inside* the last
+        kept page (positions >= upto_tokens) are left in place: the
+        causal mask (`kv_pos <= q_pos`) hides them and the next accepted
+        tokens overwrite them in position order. Returns the number of
+        pages released."""
+        keep = min(int(self.n_mapped[slot]), self.pages_needed(upto_tokens))
+        dropped = 0
+        for j in range(keep, int(self.n_mapped[slot])):
+            pid = int(self.table_np[slot, j])
+            self.table_np[slot, j] = NULL_PAGE
+            if pid < _RESERVED:
+                continue
+            self.ref[pid] -= 1
+            if self.ref[pid] == 0 and self.cache_cnt[pid] == 0:
+                self.free.append(pid)
+            dropped += 1
+        self.n_mapped[slot] = keep
+        return dropped
 
     def _evict_entry(self, key: bytes) -> None:
         entry = self.prefix.pop(key)

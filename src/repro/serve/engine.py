@@ -65,6 +65,7 @@ token-for-token.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional
@@ -79,7 +80,9 @@ from repro.models import api
 from repro.serve.cache import (
     CachePool,
     PagedCachePool,
+    paged_collect_rows,
     paged_materialize,
+    paged_scatter_rows,
     paged_writeback,
     paged_writeback_tokens,
     slot_slice,
@@ -160,6 +163,9 @@ class ServingEngine:
         paged_backend: str = "xla",  # paged gather/scatter: "xla" | "pallas"
         ragged: bool = False,  # flat-token mixed prefill+decode step
         ragged_segments: int = 4,  # prefill segments per ragged step
+        speculate: Optional[int] = None,  # self-speculative: draft n tokens/round
+        draft_ratio: float = 0.0,  # drafter's MoD capacity ratio (0 = pure skip)
+        spec_verify_budget: Optional[int] = None,  # verify-token budget per round
     ):
         """``mesh`` makes the engine multi-device: params are placed per the
         sharding rules, the cache pool is batch-sharded over the mesh's data
@@ -193,7 +199,24 @@ class ServingEngine:
         by free segment tokens rather than free slots, prompts no longer
         stall decode (no off-path prefill calls), and token streams stay
         bit-identical to the padded engine (tests/test_serve_ragged.py).
-        DESIGN.md §Serving engine, "Flat-token layout"."""
+        DESIGN.md §Serving engine, "Flat-token layout".
+
+        ``speculate=n`` (paged, dense/MoE only) switches decode to
+        self-speculative rounds: one jitted step drafts ``n`` tokens per
+        slot with the model itself at ``mod.capacity_ratio=draft_ratio``
+        (0.0 = the pure residual-skip path — no second model, no extra
+        weights), then verifies the window with ``n+1`` full-capacity
+        decode steps batched into the same call. The host accepts the
+        longest prefix on which its sampled tokens agree with the drafts
+        (capped batch-globally so composition stays aligned), rolls the
+        rejected tail back by truncating page tables
+        (``PagedCachePool.truncate``) and restoring the in-window
+        residual snapshot, and advances up to ``n+1`` tokens per
+        host↔device round trip. Greedy streams are bit-identical to
+        ``speculate=None`` under upfront submission
+        (tests/test_speculative.py). ``spec_verify_budget`` caps
+        admissions so active slots × (n+1) verify positions never exceed
+        it. DESIGN.md §Self-speculative decoding."""
         if prefill not in ("auto", "batch", "step"):
             raise ValueError(f"unknown prefill mode {prefill!r}")
         from repro.distributed.sharding import shard_ctx
@@ -265,6 +288,33 @@ class ServingEngine:
                 raise ValueError("ragged_segments must be >= 1")
             if prefill_chunk is None:
                 prefill_chunk = page_size
+        self._speculate = None if speculate is None else int(speculate)
+        self._draft_ratio = float(draft_ratio)
+        if self._speculate is not None:
+            if self._speculate < 1:
+                raise ValueError("speculate must be >= 1")
+            if not self._paged:
+                raise ValueError(
+                    "speculate requires the paged pool (page_size): rollback "
+                    "releases rejected tail pages via PagedCachePool.truncate"
+                )
+            if not self._batch_prefill:
+                raise ValueError(
+                    "speculate needs a batched-prefill family (dense/MoE): "
+                    "stepped prompt ingestion would draft prompt tokens"
+                )
+            if not cfg.attn.causal:
+                raise ValueError(
+                    "speculate requires causal attention: rolled-back rows "
+                    "inside the last kept page are hidden by the causal mask "
+                    "until the accepted stream overwrites them"
+                )
+            if mesh is not None or data_shards:
+                raise NotImplementedError("speculative rounds + SPMD mesh/data_shards")
+            if not (0.0 <= self._draft_ratio <= 1.0):
+                raise ValueError(f"draft_ratio must be in [0, 1], got {draft_ratio}")
+        elif spec_verify_budget is not None:
+            raise ValueError("spec_verify_budget requires speculate")
         self._prefix_cache = prefix_cache
         self._prefill_chunk = prefill_chunk
 
@@ -278,7 +328,8 @@ class ServingEngine:
         else:
             self.pool = CachePool(cfg, batch_size, ctx, mesh=mesh)
         self.scheduler = Scheduler(
-            batch_size, policy, routed_capacity(cfg, batch_size, shards)
+            batch_size, policy, routed_capacity(cfg, batch_size, shards),
+            verify_token_budget=spec_verify_budget,
         )
         self.slots = [Slot(i) for i in range(batch_size)]
         self.finished: List[RequestOutput] = []
@@ -296,6 +347,12 @@ class ServingEngine:
         self._routed_frac_sum = 0.0
         self._routed_frac_steps = 0
         self._occupancy_sum = 0
+        # speculative telemetry: accept rate = accepted draft tokens over
+        # drafted tokens (the MoD "confident tokens need less depth" signal)
+        self._spec_rounds = 0
+        self._spec_drafted = 0
+        self._spec_accepted_drafts = 0
+        self._spec_emitted = 0
         self._uid = 0
         self._used_uids: set = set()
         self._wall_s = 0.0
@@ -444,6 +501,93 @@ class ServingEngine:
                     p, c, cfg, t, pos, act, spmd=spmd
                 ),
             )
+        self._spec_fn = None
+        if self._speculate is not None:
+            pspec = self.pool.step_spec()
+            n_spec = self._speculate
+            draft_cfg = dataclasses.replace(
+                cfg, mod=dataclasses.replace(cfg.mod, capacity_ratio=self._draft_ratio)
+            )
+
+            # When the drafter is the verifier (dense family, or draft
+            # ratio == the engine ratio) the two-pass shape would run the
+            # same model twice over the same window — fuse draft+verify
+            # into one autoregressive scan (n+1 model steps per round
+            # instead of 2n+1, bit-identical by construction).
+            fused = (not cfg.mod.enabled
+                     or self._draft_ratio == cfg.mod.capacity_ratio)
+            # positions the round's fixed grid computes per batch row
+            # (padded_token_fraction accounting)
+            self._spec_grid = (n_spec + 1) if fused else (2 * n_spec + 1)
+
+            def _make_spec_step():
+                # One fixed-shape speculative round: materialize once, draft
+                # n tokens cheaply, verify the n+1-token window at full
+                # capacity, and hand the host everything its accept loop
+                # needs — per-step logits, per-step residual snapshots (the
+                # rollback restore point), and every step's KV rows for one
+                # ragged page scatter. Rows for rejected positions land on
+                # mapped lookahead pages as stale-but-causally-masked data;
+                # truncate() releases the tail after the host picks the
+                # acceptance point.
+                def step(p, pages, resid, table, t, pos, act, limit):
+                    caches0 = paged_materialize(pspec, pages, resid, table)
+
+                    def collect(c2, p_step):
+                        rows = paged_collect_rows(pspec, c2, p_step)
+                        leaves = jax.tree_util.tree_leaves(c2)
+                        res = tuple(leaves[i] for i in pspec.resid_ids)
+                        return (tuple(rows), res)
+
+                    if fused:
+                        drafts, logits, aux, (rows, resids) = (
+                            api.model_fused_window(
+                                p, cfg, caches0, t, pos, act, n_spec,
+                                collect=collect,
+                            )
+                        )
+                    else:
+                        drafts = api.model_draft_window(
+                            p, draft_cfg, caches0, t, pos, act, n_spec
+                        )
+                        feed = jnp.concatenate([t[:, 0][None], drafts], axis=0)
+                        logits, aux, (rows, resids) = api.model_verify_window(
+                            p, cfg, caches0, feed, pos, act, collect=collect
+                        )
+                    B = pos.shape[0]
+                    offs = jnp.arange(n_spec + 1, dtype=jnp.int32)
+                    w_slot = jnp.tile(jnp.arange(B, dtype=jnp.int32), n_spec + 1)
+                    w_pos = (pos[None, :].astype(jnp.int32) + offs[:, None]).reshape(-1)
+                    # ``limit`` = each slot's mapped-token extent
+                    # (min(total_len, ctx)): verify positions past a slot's
+                    # own budget have no page mapped — the accept cap
+                    # discards their tokens, and masking them here keeps
+                    # the scatter off the NULL page
+                    w_valid = (
+                        act[None, :] & (pos[None, :] + offs[:, None] < limit[None, :])
+                    ).reshape(-1)
+                    # merge the (step, slot) axes of each collected row
+                    # stack into the scatter's flat row dim (index s·B + b)
+                    flat_rows = [
+                        jnp.moveaxis(r, 0, ax).reshape(
+                            r.shape[1 : ax + 1] + (-1,) + r.shape[ax + 2 :]
+                        )
+                        for r, ax in zip(rows, pspec.paged_axes)
+                    ]
+                    new_pages = paged_scatter_rows(
+                        pspec, flat_rows, pages, table, w_slot, w_pos, w_valid
+                    )
+                    return drafts, logits, resids, new_pages, aux
+
+                return step
+
+            self._spec_fn = _cached_jit(
+                "spec_step",
+                (cfg, self._draft_ratio, n_spec, ctx, page_size,
+                 self.pool.n_pages, paged_backend),
+                _make_spec_step,
+            )
+            self._spec_spec = pspec
         # Batch-1 prefill; retraced per distinct prompt length only.
         self._prefill_fn = _cached_jit(
             "prefill", (cfg, ctx),
@@ -523,18 +667,23 @@ class ServingEngine:
 
         return gate
 
-    def _admit_ragged(self) -> None:
+    def _admit_ragged(self, max_admissions: Optional[int] = None) -> None:
         """Token-budget admission for the ragged mixed step: a request is
         admitted only while the step has free prefill segments left after
         the slots already mid-prompt — free *slots* are not the scarce
         resource, segment tokens are. Admitted slots enter PREFILL with no
-        off-path compute; their prompts drain through the mixed step."""
+        off-path compute; their prompts drain through the mixed step.
+        ``max_admissions`` tightens the wave further (the speculative path
+        passes its verify-token budget cap)."""
         n_prefilling = sum(1 for s in self.slots if s.state == PREFILL)
+        cap = max(0, self._ragged_segments - n_prefilling)
+        if max_admissions is not None:
+            cap = min(cap, max_admissions)
         plans = self.scheduler.plan_admissions(
             self.slots,
             stepped_prefill=False,
             page_gate=self._page_gate(),
-            max_admissions=max(0, self._ragged_segments - n_prefilling),
+            max_admissions=cap,
         )
         for slot, req in plans:
             self.pool.acquire(slot.idx)
@@ -557,11 +706,12 @@ class ServingEngine:
                     slot.prompt_idx = entry.n_tokens
                     slot.pos = entry.n_tokens
 
-    def _admit(self) -> None:
+    def _admit(self, max_admissions: Optional[int] = None) -> None:
         plans = self.scheduler.plan_admissions(
             self.slots,
             stepped_prefill=not self._batch_prefill,
             page_gate=self._page_gate(),
+            max_admissions=max_admissions,
         )
         for slot, req in plans:
             if self._paged:
@@ -773,19 +923,27 @@ class ServingEngine:
         self.scheduler.requeue(req)
         self.preemptions += 1
 
-    def _grow_pages(self) -> None:
-        """Map each active slot's next write page before the step; on pool
-        exhaustion (free list empty, nothing evictable) preempt the
-        youngest-admitted active slot and retry — the oldest request always
-        keeps making progress."""
+    def _grow_pages(self, lookahead: int = 1) -> None:
+        """Map each active slot's next ``lookahead`` write pages before the
+        step (speculative rounds pass ``speculate + 1`` — every verify
+        position must be mapped up front, or its in-step scatter would
+        corrupt the NULL page); on pool exhaustion (free list empty,
+        nothing evictable) preempt the youngest-admitted active slot and
+        retry — the oldest request always keeps making progress."""
+        def upto(s: Slot) -> int:
+            # never demand pages past the slot's own budget (total_len):
+            # a lookahead window that overshoots it could exceed the
+            # pool's worst case that submit() admitted against
+            return min(s.pos + lookahead, s.req.total_len, self.ctx)
+
         while True:
             needy = [
                 s for s in self.slots
                 if s.active
-                and self.pool.pages_needed(s.pos + 1) > int(self.pool.n_mapped[s.idx])
+                and self.pool.pages_needed(upto(s)) > int(self.pool.n_mapped[s.idx])
             ]
             for s in needy:
-                if not self.pool.alloc_pages(s.idx, s.pos + 1):
+                if not self.pool.alloc_pages(s.idx, upto(s)):
                     victim = max(
                         (t for t in self.slots if t.active),
                         key=lambda t: (t.admitted_step, t.idx),
@@ -855,6 +1013,8 @@ class ServingEngine:
 
         Returns the requests that finished during this call.
         """
+        if self._speculate is not None:
+            return self._step_speculative()
         if self._ragged:
             return self._step_ragged()
         done_before = len(self.finished)
@@ -933,16 +1093,19 @@ class ServingEngine:
         self.scheduler.check_invariants(self.slots, len(self.finished))
         return self.finished[done_before:]
 
-    def _step_ragged(self) -> List[RequestOutput]:
+    def _step_ragged(self, admit: bool = True) -> List[RequestOutput]:
         """One mixed prefill+decode step: admit by token budget, plan the
         prefill segment grid, run the single jitted step, then advance
         every slot host-side. Token streams are bit-identical to the
         padded engine: each segment replays the exact ``prefill_chunk``
         call the padded path would have made (same chunk boundaries, same
-        batch-1 cache state), and decode rows see the same pool state."""
+        batch-1 cache state), and decode rows see the same pool state.
+        ``admit=False``: the speculative path already admitted this step
+        and fell back here because prompts are still draining."""
         done_before = len(self.finished)
         t0 = time.time()
-        self._admit_ragged()
+        if admit:
+            self._admit_ragged()
         segs = self._plan_segments()  # maps pages; may preempt mid-prefill
         active_slots = [s for s in self.slots if s.active]
         if not active_slots:
@@ -1053,6 +1216,145 @@ class ServingEngine:
         self.scheduler.check_invariants(self.slots, len(self.finished))
         return self.finished[done_before:]
 
+    def _step_speculative(self) -> List[RequestOutput]:
+        """One self-speculative round: draft ``n`` tokens per slot at the
+        aggressive capacity ratio, verify the ``n+1``-token window at full
+        capacity inside the same jitted call, accept the longest prefix on
+        which the host's sampled tokens agree with the drafts, and roll
+        the rejected tail back (page-table truncation + residual-snapshot
+        restore).
+
+        Acceptance is **batch-global**: every slot advances by the same
+        ``a = min`` over per-slot acceptance counts, additionally capped
+        at the earliest in-window termination (EOS / token budget). The
+        cap is what keeps batch composition — and therefore MoD
+        ``batch_capacity`` routing — aligned step-for-step with the
+        non-speculative engine, which is exactly why greedy streams stay
+        bit-identical under upfront submission (a per-slot acceptance
+        would let one slot outrun a termination and change the active
+        mask other slots' routing depends on). In ragged mode the round
+        falls back to the normal mixed step while any prompt is still
+        draining; speculation only covers pure-decode steps."""
+        done_before = len(self.finished)
+        t0 = time.time()
+        n = self._speculate
+        cap = self.scheduler.speculative_admission_cap(
+            sum(1 for s in self.slots if s.active), n + 1
+        )
+        if self._ragged:
+            self._admit_ragged(max_admissions=cap)
+            if any(s.state == PREFILL for s in self.slots):
+                self._wall_s += time.time() - t0
+                return self._step_ragged(admit=False)
+        else:
+            self._admit(max_admissions=cap)
+        # every verify position this round writes a KV row: map the whole
+        # window's pages up front (capped at each slot's own budget)
+        self._grow_pages(lookahead=n + 1)
+        active_slots = [s for s in self.slots if s.active]
+        if not active_slots:
+            self.step_count += 1
+            self._wall_s += time.time() - t0
+            return self.finished[done_before:]
+
+        B = self.batch_size
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        limit = np.zeros((B,), np.int32)
+        for s in active_slots:
+            tokens[s.idx, 0] = s.next_token
+            pos[s.idx] = s.pos
+            active[s.idx] = True
+            limit[s.idx] = min(s.req.total_len, self.ctx)
+
+        drafts, logits, resids, self.pool.pages, aux = self._spec_fn(
+            self.params, self.pool.pages, self.pool.resid,
+            self.pool.device_table(), jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(active), jnp.asarray(limit),
+        )
+        drafts_np = np.asarray(drafts)  # (n, B)
+        logits_np = np.asarray(logits)  # (n+1, B, V)
+
+        # Per-slot acceptance: emitted token k+1 samples from the verify
+        # logits L_k, which are valid iff every earlier emitted token
+        # matched its draft (the fed window is [cur, d_1..d_n]).
+        # Sampling is fold_in(key, token_index)-deterministic, so tokens
+        # sampled past the global cap are re-sampled identically from the
+        # same logits next round.
+        emitted: Dict[int, List[int]] = {}
+        a = n + 1
+        for s in active_slots:
+            toks: List[int] = []
+            c_s = n + 1
+            for k in range(n + 1):
+                e = self._sample(s.req, logits_np[k, s.idx], len(s.generated) + k)
+                toks.append(e)
+                if (
+                    e == s.req.eos_id
+                    or len(s.generated) + k + 1 >= s.req.max_new_tokens
+                ):
+                    c_s = k + 1  # in-window termination caps the batch
+                    break
+                if k < n and e != int(drafts_np[k, s.idx]):
+                    c_s = k + 1  # draft mismatch: L_{k+1}.. are invalid
+                    break
+            emitted[s.idx] = toks
+            a = min(a, c_s)
+
+        routed = aux.get("mod/decode_routed")  # (n+1, B)
+        scores = aux.get("mod/decode_scores")
+        routed_np = None if routed is None else np.asarray(routed)
+        scores_np = None if scores is None else np.asarray(scores)
+        frac = aux.get("mod/decode_routed_frac")  # (n+1,)
+        if frac is not None:
+            frac_np = np.asarray(frac)
+            self._routed_frac_sum += float(frac_np[:a].sum())
+            self._routed_frac_steps += a
+        self._occupancy_sum += len(active_slots) * a
+        # the round's fixed grid is n+1 verify positions per row, plus the
+        # n-step draft grid when drafting is a separate pass (_spec_grid);
+        # only the accepted tokens of active rows carried real work —
+        # rejected verify positions and any draft grid count as
+        # speculation overhead in padded_token_fraction
+        self._positions_computed += self._spec_grid * B
+        self._positions_wasted += self._spec_grid * B - a * len(active_slots)
+
+        for s in active_slots:
+            for k in range(a):
+                if routed_np is not None:
+                    s.routed_sum += float(routed_np[k, s.idx])
+                    s.routed_steps += 1
+                if scores_np is not None:
+                    s.score = float(scores_np[k, s.idx])
+                    s.score_sum += s.score
+                    s.score_steps += 1
+                s.pos += 1
+                self._push_token(s, emitted[s.idx][k])
+                if s.req is None:
+                    # the global cap places any termination at k == a-1
+                    assert k == a - 1, (k, a)
+                    break
+                s.next_token = emitted[s.idx][k]
+
+        # rollback: restore the residual stack (MoD rings + cursors) to
+        # the state after exactly `a` verify steps, and release the
+        # rejected tail's pages; stale rows inside the last kept page are
+        # causally masked until the real stream overwrites them
+        self.pool.resid = [r[a - 1] for r in resids]
+        for s in active_slots:
+            if s.req is not None:  # finished slots already released
+                self.pool.truncate(s.idx, s.pos)
+
+        self._spec_rounds += 1
+        self._spec_drafted += n * len(active_slots)
+        self._spec_accepted_drafts += (a - 1) * len(active_slots)
+        self._spec_emitted += a
+        self.step_count += a
+        self._wall_s += time.time() - t0
+        self.scheduler.check_invariants(self.slots, len(self.finished))
+        return self.finished[done_before:]
+
     def run(self, max_steps: Optional[int] = None) -> List[RequestOutput]:
         """Step until queue and slots drain; returns all finished outputs."""
         budget = max_steps if max_steps is not None else self._step_budget()
@@ -1080,7 +1382,11 @@ class ServingEngine:
         while submitted < len(requests) or self.has_work:
             if budget <= 0:
                 raise RuntimeError("serving engine exceeded its step budget")
-            if submitted < len(requests) and self.step_count % arrival_every == 0:
+            # arithmetic (not modulo) arrival check: a speculative round
+            # advances step_count by several steps at once, which could
+            # jump over a modulo boundary; for step-at-a-time engines the
+            # two are identical
+            if submitted < len(requests) and submitted * arrival_every <= self.step_count:
                 self.submit(requests[submitted])
                 submitted += 1
             outputs.extend(self.step())
@@ -1129,16 +1435,24 @@ class ServingEngine:
         return jnp.asarray(pad_outputs(outs, s0 + n_tokens))
 
     def _step_signatures(self) -> Optional[int]:
-        try:
-            return self._step_fn._cache_size()
-        except AttributeError:
-            return None
+        total = 0
+        fns = [self._step_fn]
+        if self._spec_fn is not None:
+            fns.append(self._spec_fn)
+        for fn in fns:
+            try:
+                total += fn._cache_size()
+            except AttributeError:
+                return None
+        return total
 
     @property
     def decode_compilations(self) -> Optional[int]:
         """Decode-step signatures traced since this engine was built —
         at most 1 (static shapes; 0 when another engine with the same
-        config and batch size already compiled it). None if jax doesn't
+        config and batch size already compiled it). A speculative ragged
+        engine has two entry points (mixed step for prompt drain +
+        speculative round), so its bound is 2. None if jax doesn't
         expose cache sizes."""
         now = self._step_signatures()
         if now is None or self._step_signatures0 is None:
@@ -1176,4 +1490,21 @@ class ServingEngine:
             out["preemptions"] = float(self.preemptions)
             out["admission_aborts"] = float(self.admission_aborts)
             out.update(self.pool.page_stats())
+        if self._speculate is not None:
+            out["speculative_rounds"] = float(self._spec_rounds)
+            # fraction of drafted tokens the verifier accepted — the
+            # per-token "confident tokens need less depth" signal
+            out["speculative_accept_rate"] = (
+                self._spec_accepted_drafts / self._spec_drafted
+                if self._spec_drafted
+                else float("nan")
+            )
+            # mean accepted window per round — engine steps each slot
+            # advances per host<->device round trip (1.0 = speculation
+            # never beat plain decode; max is speculate + 1)
+            out["speculative_tokens_per_round"] = (
+                self._spec_emitted / self._spec_rounds
+                if self._spec_rounds
+                else 0.0
+            )
         return out

@@ -85,16 +85,35 @@ class Scheduler:
     """Admission queue + policy over a fixed slot array."""
 
     def __init__(self, n_slots: int, policy: str = "mod_aware",
-                 routed_capacity: Optional[int] = None):
+                 routed_capacity: Optional[int] = None,
+                 verify_token_budget: Optional[int] = None):
         if policy not in ("fcfs", "mod_aware"):
             raise ValueError(f"unknown scheduling policy {policy!r}")
         self.policy = policy
         self.n_slots = n_slots
         # kb of the batch_capacity router; None (MoD off) disables the cap
         self.routed_capacity = routed_capacity
+        # speculative rounds: every active slot burns (speculate+1) verify
+        # positions per round; None = uncapped (the engine's default)
+        self.verify_token_budget = verify_token_budget
         self.queue: Deque[Request] = deque()
         self.submitted = 0
         self.admitted = 0
+
+    def speculative_admission_cap(
+        self, n_active: int, verify_cost: int
+    ) -> Optional[int]:
+        """How many more slots may admit before a speculative round would
+        exceed the verify-token budget. Each active slot consumes
+        ``verify_cost`` (= speculate n + 1) positions of the batched
+        verify pass per round, whether its drafts are accepted or not —
+        so the budget caps *concurrency*, not throughput. None when no
+        budget is configured."""
+        if self.verify_token_budget is None:
+            return None
+        if verify_cost <= 0:
+            raise ValueError(f"verify_cost must be positive, got {verify_cost}")
+        return max(0, self.verify_token_budget // verify_cost - n_active)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)

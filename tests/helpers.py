@@ -5,8 +5,42 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.config import AttentionConfig, MoDConfig, ModelConfig
+
+try:  # requirements-dev.txt installs hypothesis; the pinned local
+    # container may lack it, and the suites must degrade, not skip
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+def property_cases(argnames, fallback, build, max_examples=25):
+    """Property-based cases when hypothesis is installed, a fixed
+    parametrized grid otherwise — the one shim every property suite
+    shares (it used to be copy-pasted per file).
+
+    ``build(st)`` returns the ``@given`` strategy kwargs (built lazily so
+    this module imports without hypothesis); ``fallback`` is the
+    ``pytest.mark.parametrize`` case list for ``argnames``. The GitHub
+    Actions lanes install requirements-dev.txt and run the full
+    generative suites; a container without hypothesis still executes the
+    same properties over the fixed grid.
+    """
+    if not HAVE_HYPOTHESIS:
+        return pytest.mark.parametrize(argnames, fallback)
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    def deco(fn):
+        return settings(max_examples=max_examples, deadline=None)(
+            given(**build(st))(fn)
+        )
+
+    return deco
 
 
 def abstract_mesh_compat(shape, axes):

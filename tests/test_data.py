@@ -4,26 +4,17 @@ import pytest
 
 from repro.data.packing import pack_documents
 from repro.data.synthetic import SyntheticLM
+from tests.helpers import property_cases
 
-try:  # property-based when hypothesis is installed; fixed cases otherwise
-    import hypothesis.strategies as st
-    from hypothesis import given, settings
-
-    def _packing_cases(fn):
-        return settings(max_examples=20, deadline=None)(
-            given(
-                docs=st.lists(st.integers(1, 40), min_size=1, max_size=8),
-                seq_len=st.integers(4, 32),
-            )(fn)
-        )
-
-except ModuleNotFoundError:
-
-    def _packing_cases(fn):
-        return pytest.mark.parametrize(
-            "docs,seq_len",
-            [([3], 4), ([1, 40, 7, 2], 16), ([8] * 8, 32), ([5, 9], 31)],
-        )(fn)
+_packing_cases = property_cases(
+    "docs,seq_len",
+    [([3], 4), ([1, 40, 7, 2], 16), ([8] * 8, 32), ([5, 9], 31)],
+    lambda st: dict(
+        docs=st.lists(st.integers(1, 40), min_size=1, max_size=8),
+        seq_len=st.integers(4, 32),
+    ),
+    max_examples=20,
+)
 
 
 def test_synthetic_determinism():

@@ -10,31 +10,21 @@ from repro.config import MoDConfig
 from repro.core import router as R
 from repro.core import routing as ROUT
 from repro.kernels import ref as KREF
-from tests.helpers import tiny_cfg
+from tests.helpers import property_cases, tiny_cfg
 
 MOD = MoDConfig(enabled=True, capacity_ratio=0.25, round_to=1)
 
-try:  # property-based when hypothesis is installed; fixed cases otherwise
-    import hypothesis.strategies as st
-    from hypothesis import given, settings
-
-    def _select_cases(fn):
-        return settings(max_examples=25, deadline=None)(
-            given(
-                b=st.integers(1, 4),
-                s=st.integers(2, 48),
-                frac=st.floats(0.05, 1.0),
-                seed=st.integers(0, 2**31 - 1),
-            )(fn)
-        )
-
-except ModuleNotFoundError:
-
-    def _select_cases(fn):
-        return pytest.mark.parametrize(
-            "b,s,frac,seed",
-            [(1, 2, 0.5, 0), (4, 48, 0.05, 1), (2, 17, 1.0, 2), (3, 31, 0.8, 3)],
-        )(fn)
+_select_cases = property_cases(
+    "b,s,frac,seed",
+    [(1, 2, 0.5, 0), (4, 48, 0.05, 1), (2, 17, 1.0, 2), (3, 31, 0.8, 3)],
+    lambda st: dict(
+        b=st.integers(1, 4),
+        s=st.integers(2, 48),
+        frac=st.floats(0.05, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    ),
+    max_examples=25,
+)
 
 
 @_select_cases

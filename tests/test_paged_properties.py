@@ -1,0 +1,228 @@
+"""Property-based accounting invariants of the block-paged KV pool.
+
+A seeded driver runs random ``acquire / alloc_pages / truncate / release /
+prefix_match+attach / prefix_register`` sequences against
+:class:`PagedCachePool` and, after *every* operation, recomputes the whole
+accounting state from first principles (slot tables -> refcounts, prefix
+registry -> cache counts, idle pages -> free list). Any leak, double-free,
+NULL/SCRATCH corruption, or LRU-bound violation shows up as a divergence
+between the pool's books and the recomputation. Hypothesis feeds the
+driver random seeds when installed (requirements-dev.txt); otherwise the
+same driver runs over a fixed seed grid.
+
+The speculative engine's rollback (`truncate`) gets targeted unit cases
+too: tail release, prefix-pinned survival, sharing across slots, and the
+no-op edges the engine's accept loop relies on.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import cache
+from repro.serve.cache import NULL_PAGE, SCRATCH_PAGE, PagedCachePool, _RESERVED
+from tests.helpers import property_cases, tiny_cfg
+
+SLOTS, CTX, PAGE, CHUNK = 3, 32, 4, 8
+
+
+def _pool(n_pages=None, prefix_max_entries=64):
+    return PagedCachePool(
+        tiny_cfg(), SLOTS, CTX, PAGE, n_pages=n_pages,
+        prefix_chunk=CHUNK, prefix_max_entries=prefix_max_entries,
+    )
+
+
+def _check(pool):
+    """Recompute every book from raw structures; assert they balance."""
+    # reserved pages are never owned, cached, or free
+    assert pool.ref[:_RESERVED].sum() == 0, "NULL/SCRATCH page refcounted"
+    assert pool.cache_cnt[:_RESERVED].sum() == 0, "NULL/SCRATCH page cached"
+    free = list(pool.free)
+    assert all(p >= _RESERVED for p in free), "reserved page on free list"
+    assert len(free) == len(set(free)), "free-list duplicate (double free)"
+    # slot tables -> refcounts
+    ref = np.zeros_like(pool.ref)
+    for s in range(pool.batch_size):
+        n = int(pool.n_mapped[s])
+        row = pool.table_np[s]
+        assert (row[:n] >= _RESERVED).all(), "mapped entry is NULL/SCRATCH"
+        assert len(set(row[:n].tolist())) == n, "page mapped twice in one slot"
+        assert np.isin(row[n:], (NULL_PAGE, SCRATCH_PAGE)).all(), (
+            "unmapped table entry points at a real page"
+        )
+        np.add.at(ref, row[:n], 1)
+    np.testing.assert_array_equal(ref, pool.ref)
+    # prefix registry -> cache counts, and the LRU capacity bound
+    cnt = np.zeros_like(pool.cache_cnt)
+    for e in pool.prefix.values():
+        for pid in e.pages:
+            cnt[pid] += 1
+    np.testing.assert_array_equal(cnt, pool.cache_cnt)
+    assert len(pool.prefix) <= pool.prefix_max_entries
+    # conservation: every allocatable page is free xor referenced/cached
+    idle = {p for p in range(_RESERVED, pool.n_pages)
+            if pool.ref[p] == 0 and pool.cache_cnt[p] == 0}
+    assert set(free) == idle, "free list != idle pages (leak or early free)"
+    stats = pool.page_stats()
+    assert 0.0 <= stats["page_utilization"] <= 1.0
+    assert stats["page_utilization_peak"] >= stats["page_utilization"] - 1e-9
+
+
+def _drive(seed, n_ops, n_pages=None):
+    pool = _pool(n_pages=n_pages, prefix_max_entries=4)
+    rng = np.random.default_rng(seed)
+    # prompt pool with deliberate shared chunk-aligned prefixes
+    base = np.arange(CTX, dtype=np.int32) % 7
+    prompts = [base[:L].copy() for L in (CHUNK + 1, 2 * CHUNK, 3 * CHUNK + 2)]
+    prompts += [np.concatenate([base[:CHUNK], base[:L] + 1]).astype(np.int32)
+                for L in (3, CHUNK)]
+    live = [False] * SLOTS  # acquired slots (what the scheduler would track)
+    for _ in range(n_ops):
+        op = rng.choice(["acquire", "alloc", "truncate", "release", "prefix"])
+        slot = int(rng.integers(SLOTS))
+        if op == "acquire":
+            pool.acquire(slot)
+            live[slot] = True
+            assert int(pool.n_mapped[slot]) == 0
+            assert (pool.table_np[slot] == NULL_PAGE).all()
+        elif op == "alloc" and live[slot]:
+            upto = int(rng.integers(0, CTX + 1))
+            before = int(pool.n_mapped[slot])
+            ok = pool.alloc_pages(slot, upto)
+            if ok:
+                assert int(pool.n_mapped[slot]) == max(
+                    before, pool.pages_needed(upto)
+                )
+        elif op == "truncate" and live[slot]:
+            upto = int(rng.integers(0, CTX + 1))
+            before = int(pool.n_mapped[slot])
+            dropped = pool.truncate(slot, upto)
+            keep = min(before, pool.pages_needed(upto))
+            assert int(pool.n_mapped[slot]) == keep
+            assert dropped == before - keep
+        elif op == "release":
+            pool.release(slot)
+            live[slot] = False
+            assert int(pool.n_mapped[slot]) == 0
+            assert (pool.table_np[slot] == SCRATCH_PAGE).all()
+        elif op == "prefix":
+            tokens = prompts[int(rng.integers(len(prompts)))]
+            pool.acquire(slot)
+            live[slot] = True
+            m = pool.prefix_match(tokens)
+            if m is not None:
+                pool.prefix_attach(slot, m[0])
+            if pool.alloc_pages(slot, len(tokens)):
+                snap = pool.snapshot_resid_slot(slot)
+                covered = int(pool.n_mapped[slot]) * PAGE
+                ends = {end: snap for end in range(CHUNK, len(tokens) + 1, CHUNK)
+                        if end <= covered}
+                pool.prefix_register(slot, tokens, ends)
+        _check(pool)
+    return pool
+
+
+_sequences = property_cases(
+    "seed,n_ops",
+    [(s, 40) for s in range(4)],
+    lambda st: dict(seed=st.integers(0, 2**31 - 1), n_ops=st.integers(5, 50)),
+    max_examples=12,
+)
+
+
+@_sequences
+def test_random_op_sequences_keep_books_balanced(seed, n_ops):
+    _drive(seed, n_ops)
+
+
+@_sequences
+def test_random_op_sequences_under_page_pressure(seed, n_ops):
+    """Same driver against a pool too small for all slots at full ctx:
+    exercises alloc failure, partial maps, and eviction-under-pressure."""
+    _drive(seed, n_ops, n_pages=_RESERVED + (SLOTS * CTX // PAGE) // 2)
+
+
+# -- targeted truncate() semantics (the speculative rollback primitive) --
+
+
+def test_truncate_releases_tail_pages():
+    pool = _pool()
+    pool.acquire(0)
+    assert pool.alloc_pages(0, 16)  # 4 pages
+    free_before = len(pool.free)
+    assert pool.truncate(0, 5) == 2  # keep ceil(5/4) = 2 pages
+    assert int(pool.n_mapped[0]) == 2
+    assert (pool.table_np[0, 2:] == NULL_PAGE).all()
+    assert len(pool.free) == free_before + 2
+    _check(pool)
+
+
+def test_truncate_keeps_prefix_pinned_pages_off_the_free_list():
+    pool = _pool()
+    pool.acquire(0)
+    tokens = (np.arange(2 * CHUNK) % 5).astype(np.int32)
+    assert pool.alloc_pages(0, len(tokens))
+    snap = pool.snapshot_resid_slot(0)
+    pool.prefix_register(0, tokens, {CHUNK: snap, 2 * CHUNK: snap})
+    free_before = len(pool.free)
+    dropped = pool.truncate(0, 0)
+    # all 4 pages decref'd, but every one is pinned by a prefix entry:
+    # none may reach the free list until the entries evict
+    assert dropped == 4
+    assert int(pool.n_mapped[0]) == 0
+    assert len(pool.free) == free_before
+    assert (pool.cache_cnt[_RESERVED:] > 0).sum() == 4
+    _check(pool)
+
+
+def test_truncate_on_shared_prefix_leaves_other_slot_readable():
+    pool = _pool()
+    long = (np.arange(2 * CHUNK + 2) % 5).astype(np.int32)
+    pool.acquire(0)
+    assert pool.alloc_pages(0, len(long))
+    pool.prefix_register(0, long, {CHUNK: pool.snapshot_resid_slot(0)})
+    for slot in (1, 2):
+        pool.acquire(slot)
+        m = pool.prefix_match(long)
+        assert m is not None and m[1].n_tokens == CHUNK
+        pool.prefix_attach(slot, m[0])
+    shared = [int(p) for p in pool.table_np[1, : CHUNK // PAGE]]
+    assert shared == [int(p) for p in pool.table_np[2, : CHUNK // PAGE]]
+    pool.truncate(1, 0)  # slot 1 rolls its whole window back
+    # slot 2 still maps the shared pages; nothing hit the free list
+    assert [int(p) for p in pool.table_np[2, : CHUNK // PAGE]] == shared
+    assert all(pool.ref[p] >= 1 for p in shared)
+    _check(pool)
+
+
+def test_truncate_beyond_mapped_extent_is_a_noop():
+    pool = _pool()
+    pool.acquire(0)
+    assert pool.alloc_pages(0, 6)
+    assert pool.truncate(0, CTX) == 0
+    assert int(pool.n_mapped[0]) == 2
+    _check(pool)
+
+
+def test_truncate_mid_page_keeps_the_partial_page():
+    pool = _pool()
+    pool.acquire(0)
+    assert pool.alloc_pages(0, 8)
+    assert pool.truncate(0, PAGE + 1) == 0  # position 5 still needs page 2
+    assert int(pool.n_mapped[0]) == 2
+    assert pool.truncate(0, PAGE) == 1
+    assert int(pool.n_mapped[0]) == 1
+    _check(pool)
+
+
+def test_prefix_registry_lru_bound_evicts_oldest():
+    pool = _pool(prefix_max_entries=2)
+    for i in range(4):
+        pool.acquire(0)
+        tokens = (np.full(CHUNK, i) + np.arange(CHUNK)).astype(np.int32)
+        assert pool.alloc_pages(0, CHUNK)
+        pool.prefix_register(0, tokens, {CHUNK: pool.snapshot_resid_slot(0)})
+        pool.release(0)
+        assert len(pool.prefix) <= 2
+        _check(pool)
+    assert pool.prefix_evictions == 2
+    assert pool.page_stats()["prefix_entries"] == 2.0

@@ -1,0 +1,132 @@
+"""Differential engine soak: seeded fuzz workloads, cross-engine identity.
+
+One workload generator draws fuzzed request mixes (uneven prompt lengths,
+deliberate shared prefixes, greedy and seeded-sampled rows) and every
+engine variant — padded, ragged, speculative, prefix-cached, and
+page-pressured — must emit the *same token stream per request*. The
+serving stack's whole contract is that batching strategy, speculation,
+paging, preemption, and prefix reuse change wall-clock only, never
+tokens; this suite drives all of them through one differential oracle.
+
+Bounded-time by construction (fixed seeds, tiny model, short budgets):
+ci.sh runs it as the ``soak`` stage under a hard timeout.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import MoDConfig
+from repro.models import api
+from repro.serve import Request, ServingEngine
+from tests.helpers import tiny_cfg
+
+PAGE = 4
+
+
+def _fuzz_requests(cfg, seed, n=8, max_new=(2, 9)):
+    """Mixed prompt lengths + shared chunk-aligned prefixes + greedy/sampled."""
+    rng = np.random.default_rng(seed)
+    common = rng.integers(1, cfg.vocab - 1, size=2 * PAGE).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        L = int(rng.integers(1, 15))
+        toks = rng.integers(1, cfg.vocab - 1, size=L).astype(np.int32)
+        if rng.random() < 0.5:  # share a prefix with half the pool
+            toks = np.concatenate([common, toks[: max(1, L - PAGE)]])
+        reqs.append(
+            Request(
+                tokens=toks,
+                max_new_tokens=int(rng.integers(*max_new)),
+                temperature=0.8 if rng.random() < 0.5 else 0.0,
+                key=jax.random.PRNGKey(1000 + i),
+            )
+        )
+    return reqs
+
+
+def _run(params, cfg, reqs, *, arrival_every=0, **kw):
+    eng = ServingEngine(params, cfg, batch_size=4, ctx=32, page_size=PAGE,
+                        prefill_chunk=PAGE, **kw)
+    if arrival_every:
+        outs = eng.run_stream(reqs, arrival_every=arrival_every)
+    else:
+        for r in reqs:
+            eng.submit(r)
+        outs = eng.run()
+    streams = {o.uid: o.full_sequence.tolist() for o in outs}
+    st = eng.stats()
+    assert 0.0 <= st["padded_token_fraction"] <= 1.0
+    eng.scheduler.check_invariants(eng.slots, len(streams))
+    return streams, eng
+
+
+def _variants(n_chunks):
+    """Every engine variant the PR stack supports, vs the padded baseline.
+
+    ``n_chunks`` segments let the ragged engines drain every prompt in
+    their first mixed step — the batch compositions the decode steps see
+    then match the padded engine's exactly, which is what makes the
+    identity hold for batch-coupled MoD routing too (the contract
+    test_serve_ragged.py pins)."""
+    return {
+        "padded-spec": dict(speculate=3, draft_ratio=0.125),
+        "padded-spec-prefix": dict(speculate=2, draft_ratio=0.0,
+                                   prefix_cache=True),
+        "ragged": dict(ragged=True, ragged_segments=n_chunks),
+        "ragged-spec": dict(ragged=True, ragged_segments=n_chunks,
+                            speculate=3, draft_ratio=0.125),
+    }
+
+
+@pytest.mark.parametrize("mod", [False, True], ids=["dense", "mod"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_soak_all_engine_variants_agree(mod, seed):
+    """ragged == padded == speculative, per request, on a fuzzed workload.
+
+    MoD routing is batch-coupled, so its identity contract needs every
+    request admitted upfront into the same slots (n == batch_size); the
+    dense run churns slots with twice that many requests."""
+    cfg = tiny_cfg() if mod else tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    n = 4 if mod else 8
+    reqs = _fuzz_requests(cfg, seed, n=n)
+    n_chunks = sum(-(-r.prompt_len // PAGE) for r in reqs)
+    base, _ = _run(params, cfg, _fuzz_requests(cfg, seed, n=n))
+    assert len(base) == len(reqs)
+    for name, kw in _variants(n_chunks).items():
+        streams, eng = _run(params, cfg, _fuzz_requests(cfg, seed, n=n), **kw)
+        assert streams == base, f"{name} diverged from padded baseline"
+        if eng.decode_compilations is not None:
+            bound = 2 if (kw.get("ragged") and kw.get("speculate")) else 1
+            assert eng.decode_compilations <= bound, name
+
+
+@pytest.mark.parametrize("seed", [2, 3])
+def test_soak_page_pressure_preemption_identity(seed):
+    """A pool too small for all slots at full ctx forces preemption mid-
+    stream; restarted requests must still reproduce the exact baseline
+    tokens, with and without speculative rollback in the mix."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    mn = (6, 12)  # long enough generation that concurrent slots outgrow
+    base, _ = _run(params, cfg, _fuzz_requests(cfg, seed, max_new=mn))
+    n_pages = 2 + 10  # _RESERVED + ~2.5 pages/slot: any 3-4 slots collide
+    for kw in (dict(), dict(speculate=3, draft_ratio=0.0)):
+        streams, eng = _run(params, cfg, _fuzz_requests(cfg, seed, max_new=mn),
+                            n_pages=n_pages, **kw)
+        assert streams == base, f"page pressure changed tokens ({kw})"
+        assert eng.stats()["preemptions"] >= 1, "pressure never preempted"
+
+
+def test_soak_dense_arrival_churn_identity():
+    """Open-stream arrivals reshuffle admission order; dense rows are
+    batch-independent so the per-request streams must not move, spec or
+    not. (MoD routing is batch-coupled, so its identity contract is
+    upfront-submission only — covered above.)"""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    base, _ = _run(params, cfg, _fuzz_requests(cfg, 4))
+    for kw in (dict(), dict(speculate=2, draft_ratio=0.0)):
+        streams, _ = _run(params, cfg, _fuzz_requests(cfg, 4),
+                          arrival_every=3, **kw)
+        assert streams == base, f"arrival churn changed tokens ({kw})"

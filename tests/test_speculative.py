@@ -1,0 +1,202 @@
+"""Self-speculative decoding: bit-identity, rollback, budget, telemetry.
+
+The engine contract under test (DESIGN.md §Self-speculative decoding):
+``speculate=n`` must be *invisible* in the token streams — drafting with
+the model at an aggressive MoD capacity ratio, verifying the window at
+full capacity, and rolling rejected tails back through paged truncation
+changes only wall-clock, never tokens. Pinned for the dense AND the MoD
+family, padded and ragged engines, greedy and seeded-sampled requests,
+across draft ratios including the degenerate kb=0 pure-skip drafter.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import MoDConfig
+from repro.core import routing as ROUT
+from repro.models import api
+from repro.serve import Request, ServingEngine
+from repro.serve.scheduler import Scheduler
+from tests.helpers import tiny_cfg
+
+
+def _requests(cfg, n=4, max_new=8, sampled=False, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = [5, 9, 3, 12, 7, 4][:n]
+    return [
+        Request(
+            tokens=rng.integers(1, cfg.vocab - 1, size=L).astype(np.int32),
+            max_new_tokens=max_new,
+            temperature=0.9 if sampled and i % 2 else 0.0,
+            key=jax.random.PRNGKey(100 + i),
+        )
+        for i, L in enumerate(lens)
+    ]
+
+
+def _streams(params, cfg, reqs, **kw):
+    eng = ServingEngine(params, cfg, batch_size=4, ctx=32, page_size=4,
+                        prefill_chunk=4, **kw)
+    for r in reqs:
+        eng.submit(r)
+    outs = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+    return outs, eng
+
+
+@pytest.mark.parametrize("mod", [False, True], ids=["dense", "mod"])
+@pytest.mark.parametrize("sampled", [False, True], ids=["greedy", "sampled"])
+def test_padded_speculative_identity(mod, sampled):
+    """Padded paged engine: speculative streams == non-speculative streams
+    token for token, and the spec round compiles exactly once."""
+    cfg = tiny_cfg() if mod else tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    base, _ = _streams(params, cfg, _requests(cfg, sampled=sampled))
+    for n, ratio in ((1, 0.0), (3, 0.125), (2, cfg.mod.capacity_ratio)):
+        spec, eng = _streams(params, cfg, _requests(cfg, sampled=sampled),
+                             speculate=n, draft_ratio=ratio)
+        assert spec == base, f"speculate={n} draft_ratio={ratio} changed tokens"
+        if eng.decode_compilations is not None:
+            assert eng.decode_compilations <= 1
+        st = eng.stats()
+        assert st["speculative_rounds"] > 0
+        assert 1.0 <= st["speculative_tokens_per_round"] <= n + 1
+        eng.scheduler.check_invariants(eng.slots, len(spec))
+
+
+@pytest.mark.parametrize("mod", [False, True], ids=["dense", "mod"])
+def test_ragged_speculative_identity(mod):
+    """Ragged engine: speculation covers pure-decode steps (prefill steps
+    fall back to the mixed step) and streams stay identical; at most two
+    jitted entry points (mixed step + spec round)."""
+    cfg = tiny_cfg() if mod else tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    reqs = _requests(cfg, sampled=True)
+    n_chunks = sum(-(-r.prompt_len // 4) for r in reqs)
+    kw = dict(ragged=True, ragged_segments=n_chunks)
+    base, _ = _streams(params, cfg, _requests(cfg, sampled=True), **kw)
+    spec, eng = _streams(params, cfg, reqs, speculate=3, draft_ratio=0.125, **kw)
+    assert spec == base, "ragged speculation changed tokens"
+    if eng.decode_compilations is not None:
+        assert eng.decode_compilations <= 2
+    assert eng.stats()["speculative_rounds"] > 0
+
+
+def test_padded_speculative_identity_moe():
+    """MoE family: expert capacity buckets are stream-global, yet the
+    verify scan replays exact decode-step semantics, so speculation stays
+    invisible there too (greedy + sampled rows)."""
+    cfg = dataclasses.replace(tiny_cfg(), family="moe")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    base, _ = _streams(params, cfg, _requests(cfg, sampled=True))
+    spec, eng = _streams(params, cfg, _requests(cfg, sampled=True),
+                         speculate=3, draft_ratio=cfg.mod.capacity_ratio)
+    assert spec == base, "speculation changed MoE tokens"
+    if eng.decode_compilations is not None:
+        assert eng.decode_compilations <= 1
+    assert eng.stats()["speculative_rounds"] > 0
+
+
+def test_greedy_dense_accepts_nearly_everything():
+    """Dense greedy self-speculation drafts with the verifier itself —
+    every draft must be accepted except windows cut short by request
+    termination (the accept cap ends a round at EOS/budget)."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    reqs = [Request(tokens=np.arange(1, 6, dtype=np.int32), max_new_tokens=13)
+            for _ in range(4)]
+    _, eng = _streams(params, cfg, reqs, speculate=3)
+    st = eng.stats()
+    # 13 tokens at uniform length = 3 full rounds of 4 + one 1-token round:
+    # every mismatch-free draft lands, only the last round truncates
+    assert st["speculative_accept_rate"] >= 0.75
+    assert st["speculative_tokens_per_round"] > 2.0
+
+
+def test_fused_window_equals_two_pass_draft_verify():
+    """When the draft config equals the verify config, the fused
+    autoregressive scan must reproduce the two-pass draft+verify exactly
+    (same drafts, same logits) — it is the same computation deduplicated."""
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    caches = api.make_caches(cfg, 2, 16)
+    token = jnp_tokens = np.array([[3], [7]], np.int32)
+    pos = np.zeros((2,), np.int32)
+    active = np.ones((2,), bool)
+    drafts_f, logits_f, _, _ = api.model_fused_window(
+        params, cfg, caches, jnp_tokens, pos, active, 3
+    )
+    drafts_2 = api.model_draft_window(params, cfg, caches, token, pos, active, 3)
+    feed = np.concatenate([token[:, 0][None], np.asarray(drafts_2)], axis=0)
+    logits_2, _, _ = api.model_verify_window(params, cfg, caches, feed, pos, active)
+    np.testing.assert_array_equal(np.asarray(drafts_f), np.asarray(drafts_2))
+    np.testing.assert_allclose(np.asarray(logits_f), np.asarray(logits_2))
+
+
+def test_batch_capacity_zero_ratio_routes_nothing():
+    """draft_ratio=0.0 is the pure residual-skip drafter: kb must be 0
+    (not the usual max(1, ...) floor) so every routed block is a no-op."""
+    cfg = tiny_cfg()
+    zero = dataclasses.replace(cfg, mod=dataclasses.replace(cfg.mod, capacity_ratio=0.0))
+    assert ROUT.batch_capacity_k(zero, batch=4) == 0
+    assert ROUT.batch_capacity_k(cfg, batch=4) == 1
+
+
+def test_verify_budget_caps_concurrent_slots():
+    """spec_verify_budget caps *concurrency*: with budget 8 and n=3 every
+    active slot burns 4 verify positions per round, so at most 2 of the 4
+    slots may be active at any step; all requests still finish."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=4, ctx=32, page_size=4,
+                        prefill_chunk=4, speculate=3, spec_verify_budget=8)
+    for r in _requests(cfg):
+        eng.submit(r)
+    peak = 0
+    for _ in range(400):
+        eng.step()
+        peak = max(peak, sum(1 for s in eng.slots if s.active))
+        if len(eng.finished) == 4:
+            break
+    assert len(eng.finished) == 4
+    assert peak <= 2, f"verify budget exceeded: {peak} concurrent slots"
+
+
+def test_scheduler_admission_cap_math():
+    s = Scheduler(4, verify_token_budget=8)
+    assert s.speculative_admission_cap(0, 4) == 2
+    assert s.speculative_admission_cap(1, 4) == 1
+    assert s.speculative_admission_cap(3, 4) == 0  # never negative
+    with pytest.raises(ValueError):
+        s.speculative_admission_cap(0, 0)
+    assert Scheduler(4).speculative_admission_cap(0, 4) is None
+
+
+def test_speculate_validation_errors():
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="paged pool"):
+        ServingEngine(params, cfg, batch_size=2, ctx=32, speculate=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        ServingEngine(params, cfg, batch_size=2, ctx=32, page_size=4,
+                      speculate=0)
+    with pytest.raises(ValueError, match="draft_ratio"):
+        ServingEngine(params, cfg, batch_size=2, ctx=32, page_size=4,
+                      speculate=2, draft_ratio=1.5)
+    with pytest.raises(ValueError, match="requires speculate"):
+        ServingEngine(params, cfg, batch_size=2, ctx=32, page_size=4,
+                      spec_verify_budget=8)
+
+
+def test_run_stream_arrivals_with_speculation():
+    """Open-stream arrivals: speculative rounds advance step_count by the
+    accepted window, and the arrival schedule must still submit every
+    request (the arithmetic arrival condition, not the modulo one)."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=4, ctx=32, page_size=4,
+                        prefill_chunk=4, speculate=3)
+    outs = eng.run_stream(_requests(cfg, n=6), arrival_every=3)
+    assert len(outs) == 6
+    assert sorted(o.uid for o in outs) == list(range(6))
