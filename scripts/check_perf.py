@@ -146,6 +146,96 @@ def check_structure(cells: List[Dict]) -> List[str]:
             f"best speculative cell: spec_vs_plain_ratio {best_ratio:.3f} "
             "<= 1.0 (some (n, draft_ratio) must beat plain greedy decode)"
         )
+    # overload-control cells (PR 8+): the p99-vs-offered-load curve must
+    # exist for >= 2 loads x both controller modes, and the tentpole
+    # acceptance criterion holds at the highest load. The gated latency
+    # unit is FLOP-priced steps (p99_latency_cost): each engine step is
+    # priced by the capacity ladder's analytic FLOP ratio, which is where
+    # MoD degradation pays — steps don't get fewer under a capacity cut,
+    # they get cheaper, and open-loop arrivals + token-budget requests
+    # make both numbers deterministic. Raw step-domain p99 is gated too,
+    # with a +2-step allowance: the degraded per-wave admission budget
+    # may delay a batch-tier admission by a step when slots free together.
+    errors += check_overload_claim(cells)
+    return errors
+
+
+def check_overload_claim(cells: List[Dict],
+                         step_allowance: float = 2.0) -> List[str]:
+    """The overload-control acceptance criteria, gated structurally."""
+    errors = []
+    curves: Dict[str, Dict[float, Dict]] = {"static": {}, "adaptive": {}}
+    identity = []
+    for e in cells:
+        if str(e.get("cell")) != SERVING_CELL:
+            continue
+        name = str(e.get("name", ""))
+        if "-overload-latency-identity" in name:
+            identity.append(e)
+        elif "-overload-" in name:
+            mode = "adaptive" if "-overload-adaptive" in name else "static"
+            if e.get("offered_load") is None:
+                errors.append(f"{SERVING_CELL}/{name}: missing offered_load")
+                continue
+            curves[mode][float(e["offered_load"])] = e
+    for mode, pts in curves.items():
+        if len(pts) < 2:
+            errors.append(
+                f"overload curve needs >= 2 loads for mode {mode!r}, "
+                f"got {sorted(pts)} (benchmarks/serving.py overload_sweep)"
+            )
+    shared = sorted(set(curves["static"]) & set(curves["adaptive"]))
+    if not shared:
+        if not errors:
+            errors.append("static and adaptive overload curves share no "
+                          "offered_load points")
+        return errors
+    for load in shared:
+        for mode in ("static", "adaptive"):
+            e = curves[mode][load]
+            for k in ("p99_latency_steps", "p99_latency_cost", "shed",
+                      "degraded_decode_steps", "capacity_level_max"):
+                if k not in e:
+                    errors.append(
+                        f"{SERVING_CELL}/{e.get('name')}: missing {k}")
+    if errors:
+        return errors
+    top = shared[-1]
+    st, ad = curves["static"][top], curves["adaptive"][top]
+    if float(ad["p99_latency_cost"]) > float(st["p99_latency_cost"]):
+        errors.append(
+            f"overload load {top:g}: adaptive p99_latency_cost "
+            f"{float(ad['p99_latency_cost']):.2f} > static "
+            f"{float(st['p99_latency_cost']):.2f} (the ladder must not "
+            "worsen FLOP-priced tail latency at the highest load)"
+        )
+    if float(ad["p99_latency_steps"]) > (
+        float(st["p99_latency_steps"]) + step_allowance
+    ):
+        errors.append(
+            f"overload load {top:g}: adaptive p99_latency_steps "
+            f"{float(ad['p99_latency_steps']):.2f} > static + "
+            f"{step_allowance:g} ({float(st['p99_latency_steps']):.2f})"
+        )
+    if not float(ad.get("shed", 0)) > 0:
+        errors.append(f"overload load {top:g}: adaptive curve shed nothing "
+                      "(bounded backpressure never engaged)")
+    if not float(ad.get("degraded_decode_steps", 0)) > 0:
+        errors.append(f"overload load {top:g}: adaptive curve never ran a "
+                      "degraded decode step")
+    if not float(ad.get("capacity_level_max", 0)) >= 1:
+        errors.append(f"overload load {top:g}: adaptive controller never "
+                      "left level 0")
+    if not identity:
+        errors.append(f"no {SERVING_CELL} latency-identity cell "
+                      "(benchmarks/serving.py overload_latency_identity)")
+    for e in identity:
+        if float(e.get("latency_identical", 0.0)) != 1.0:
+            errors.append(
+                f"{SERVING_CELL}/{e.get('name')}: latency_identical "
+                f"{e.get('latency_identical')} != 1.0 (latency-tier streams "
+                "must be bit-identical under adaptive overload)"
+            )
     return errors
 
 

@@ -18,12 +18,16 @@
 #             workloads must stream identically across padded / ragged /
 #             speculative engines; hard wall-clock bound so a wedged
 #             engine fails instead of hanging CI
+#   faults    seeded fault-matrix soak (tests/test_faults.py): injected
+#             NaN/Inf logits, page exhaustion, stragglers and preemption
+#             storms must fail only the targeted request while pool and
+#             scheduler invariants hold; hard wall-clock bound
 #   perf      scripts/check_perf.py gate over committed BENCH_*.json
 #   docs      markdown link check + quickstart as an executable smoke test
 #
 #   scripts/ci.sh            # all stages
-#   scripts/ci.sh --fast     # unit+backends+spmd+soak only (no perf/docs);
-#                            # needs no network and no BENCH snapshots
+#   scripts/ci.sh --fast     # unit+backends+spmd+soak+faults only (no
+#                            # perf/docs); needs no network, no BENCH files
 #
 # Extra args after the flags are passed to the unit-stage pytest.
 set -euo pipefail
@@ -61,7 +65,8 @@ if [[ "$HAVE_COV" == 1 ]]; then
 fi
 
 stage unit
-python -m pytest -x -q $COV_ARGS --ignore=tests/test_serve_soak.py "$@"
+python -m pytest -x -q $COV_ARGS --ignore=tests/test_serve_soak.py \
+  --ignore=tests/test_faults.py "$@"
 stage_done unit $((SECONDS - STAGE_T0))
 
 stage backends
@@ -87,6 +92,15 @@ stage soak
 # hung engine (scheduler livelock, device deadlock) into a failure
 timeout 600 python -m pytest -x -q tests/test_serve_soak.py
 stage_done soak $((SECONDS - STAGE_T0))
+
+stage faults
+# seeded fault matrix threaded through live engines (padded / ragged /
+# speculative): every injected fault must terminate only its targeted
+# request with the right finish_reason while the pool stays balanced;
+# `timeout` keeps an engine wedged by its own fault handling from
+# hanging CI
+timeout 300 python -m pytest -x -q tests/test_faults.py
+stage_done faults $((SECONDS - STAGE_T0))
 
 if [[ "$FAST" == "1" ]]; then
   echo "=== [ci] --fast: skipping perf+docs stages ==="

@@ -279,6 +279,43 @@ def batch_capacity_k(cfg: ModelConfig, batch: int, data_shards: int = 1) -> int:
     return max(1, int(round(cfg.mod.capacity_ratio * batch)))
 
 
+def capacity_ladder(cfg: ModelConfig, scales) -> Tuple[ModelConfig, ...]:
+    """Discrete degraded-capacity configs for the serving engine's
+    :class:`~repro.serve.overload.CapacityController`.
+
+    ``scales`` is a descending ladder of multipliers on
+    ``cfg.mod.capacity_ratio`` starting at full capacity (level 0 = 1.0).
+    Each returned config differs from ``cfg`` only in the ratio, which is
+    shape-free at decode time — ``batch_capacity`` caches are sized by the
+    *pool's* config, the per-level config only shrinks ``kb``
+    (:func:`batch_capacity_k`) — so each level is exactly one extra
+    compiled decode step and the jit cache stays bounded by the ladder
+    length. MoD-less configs get an all-identical ladder: the ladder then
+    degrades only host-side budgets (prefill segments / admissions), never
+    the model.
+    """
+    import dataclasses
+
+    scales = tuple(float(s) for s in scales)
+    if not scales or scales[0] != 1.0:
+        raise ValueError(f"capacity ladder must start at 1.0, got {scales!r}")
+    if any(not (0.0 < s <= 1.0) for s in scales):
+        raise ValueError(f"capacity scales must lie in (0, 1], got {scales!r}")
+    if any(b >= a for a, b in zip(scales, scales[1:])):
+        raise ValueError(f"capacity scales must strictly descend, got {scales!r}")
+    if not cfg.mod.enabled:
+        return (cfg,) * len(scales)
+    return tuple(
+        dataclasses.replace(
+            cfg,
+            mod=dataclasses.replace(
+                cfg.mod, capacity_ratio=cfg.mod.capacity_ratio * s
+            ),
+        )
+        for s in scales
+    )
+
+
 def decide_batch(
     params: Params,
     x: jax.Array,  # (B, 1, D) — one decode token per sequence

@@ -87,6 +87,26 @@ def main() -> None:
                     help="verify-token budget per speculative round: "
                          "admission stops while active slots x "
                          "(speculate+1) would exceed it (0 = uncapped)")
+    ap.add_argument("--priority", default="batch",
+                    choices=["batch", "latency"],
+                    help="priority class for the submitted requests: "
+                         "latency-tier is admitted first and keeps full "
+                         "MoD capacity under overload (DESIGN.md "
+                         "§Overload control)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request deadline in seconds from submit; "
+                         "expired requests finish as 'expired' instead of "
+                         "occupying slots (0 = no deadline)")
+    ap.add_argument("--adaptive-capacity", action="store_true",
+                    help="enable the overload capacity controller: under "
+                         "queue/latency pressure it walks MoD capacity "
+                         "ratio and the batch-tier admission budget down "
+                         "a discrete ladder (latency-tier is exempt)")
+    ap.add_argument("--inject-faults", type=int, default=-1,
+                    help="thread a seeded FaultInjector through the "
+                         "engine (NaN/Inf logits, page exhaustion, "
+                         "stragglers, preemption storms) with this seed; "
+                         "-1 = off")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -118,6 +138,11 @@ def main() -> None:
     prompts = np.asarray(data.batch(0, n_requests)["tokens"])[:, : args.prompt_len]
 
     ctx = args.prompt_len + args.gen
+    injector = None
+    if args.inject_faults >= 0:
+        from repro.serve import FaultInjector
+
+        injector = FaultInjector.seeded(args.inject_faults)
     engine = ServingEngine(
         params, cfg, batch_size=args.batch, ctx=ctx, policy=args.policy, mesh=mesh,
         page_size=args.page_size or None,
@@ -129,10 +154,15 @@ def main() -> None:
         speculate=args.speculate or None,
         draft_ratio=args.draft_ratio,
         spec_verify_budget=args.verify_budget or None,
+        adaptive_capacity=args.adaptive_capacity,
+        fault_injector=injector,
     )
 
     outputs = engine.run_stream(
-        [Request(tokens=prompts[i], max_new_tokens=args.gen) for i in range(n_requests)],
+        [Request(tokens=prompts[i], max_new_tokens=args.gen,
+                 priority=args.priority,
+                 deadline_s=args.deadline or None)
+         for i in range(n_requests)],
         args.arrival_every,
     )
 
@@ -176,6 +206,20 @@ def main() -> None:
               f"accept_rate={s['speculative_accept_rate']:.3f} "
               f"tokens_per_round={s['speculative_tokens_per_round']:.2f} "
               f"rounds={s['speculative_rounds']:.0f}")
+    if args.deadline or args.adaptive_capacity or injector is not None:
+        ok = sum(1 for o in outputs if o.ok)
+        print(f"[serve] lifecycle: ok={ok}/{len(outputs)} "
+              f"shed={s['shed']:.0f} expired={s['expired']:.0f} "
+              f"cancelled={s['cancelled']:.0f} failed={s['failed']:.0f}")
+    if args.adaptive_capacity:
+        print(f"[serve] capacity controller: "
+              f"level_max={s.get('capacity_level_max', 0.0):.0f} "
+              f"level_changes={s.get('capacity_level_changes', 0.0):.0f} "
+              f"degraded_decode_steps="
+              f"{s.get('degraded_decode_steps', 0.0):.0f}")
+    if injector is not None:
+        fired = ", ".join(f"{f['kind']}@{f['step']}" for f in injector.fired)
+        print(f"[serve] faults fired: {fired or 'none'}")
     first = min(outputs, key=lambda o: o.uid)
     print(f"[serve] sample continuation: {first.tokens[-10:].tolist()}")
 

@@ -4,20 +4,40 @@ Public surface:
 
 - :class:`~repro.serve.engine.ServingEngine` — fixed-shape (B, ctx)
   continuous-batching decode with MoD-aware admission.
-- :class:`~repro.serve.request.Request` / ``RequestOutput`` — job in / out.
-- :class:`~repro.serve.scheduler.Scheduler` — slot admission policies.
+- :class:`~repro.serve.request.Request` / ``RequestOutput`` — job in / out,
+  with priority classes (``latency`` / ``batch``), relative deadlines, and
+  client cancellation; terminal reasons cover failure paths
+  (``FINISH_ERROR`` / ``FINISH_EXPIRED`` / ``FINISH_CANCELLED``).
+- :class:`~repro.serve.scheduler.Scheduler` — slot admission policies
+  (priority-aware, FCFS within class, bounded queue).
 - :class:`~repro.serve.cache.CachePool` — pooled, capacity-sized KV cache.
 - :class:`~repro.serve.cache.PagedCachePool` — block-paged KV pool with
   refcounted pages, lazy growth, and a hash-chained prompt-prefix cache
   (``ServingEngine(page_size=...)``).
+- :class:`~repro.serve.overload.CapacityController` /
+  :class:`~repro.serve.overload.EngineOverloaded` — load-adaptive MoD
+  capacity ladder + bounded backpressure
+  (``ServingEngine(adaptive_capacity=True, max_queue=...)``).
+- :class:`~repro.serve.faults.FaultInjector` / ``Fault`` — scheduled fault
+  matrix for robustness soaks (``ServingEngine(fault_injector=...)``).
 
-See DESIGN.md §Serving engine for the architecture.
+See DESIGN.md §Serving engine and §Overload control for the architecture.
 """
 from repro.serve.cache import CachePool, PagedCachePool  # noqa: F401
 from repro.serve.engine import ServingEngine, routed_capacity  # noqa: F401
+from repro.serve.faults import Fault, FaultInjector  # noqa: F401
+from repro.serve.overload import (  # noqa: F401
+    CapacityController,
+    EngineOverloaded,
+)
 from repro.serve.request import (  # noqa: F401
+    FINISH_CANCELLED,
     FINISH_EOS,
+    FINISH_ERROR,
+    FINISH_EXPIRED,
     FINISH_LENGTH,
+    PRIORITY_BATCH,
+    PRIORITY_LATENCY,
     Request,
     RequestOutput,
     pad_outputs,

@@ -565,6 +565,9 @@ class PagedCachePool:
         self.ref = np.zeros((self.n_pages,), np.int64)
         self.cache_cnt = np.zeros((self.n_pages,), np.int64)  # prefix entries per page
         self.free: deque = deque(range(_RESERVED, self.n_pages))
+        # pages taken out of circulation by hold_pages() — fault injection
+        # and maintenance; neither free nor owned by any slot/prefix entry
+        self.held: List[int] = []
         self.prefix: "OrderedDict[bytes, PrefixEntry]" = OrderedDict()
         # telemetry
         self.prefix_hit_tokens = 0
@@ -726,6 +729,33 @@ class PagedCachePool:
     def pages_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    def hold_pages(self, n: int) -> int:
+        """Take up to ``n`` allocatable pages out of circulation (fault
+        injection / maintenance): popped off the free list — evicting
+        prefix entries under pressure like any allocation — into ``held``,
+        where neither slots nor the prefix cache can reach them until
+        :meth:`release_held`. Returns how many were actually taken (the
+        pool may have fewer obtainable). Held pages are a transient
+        condition, so ``allocatable_pages`` (the submit-time capacity
+        check) is unaffected while ``available_pages`` shrinks — the
+        admission gate closes and lazy growth hits the preemption path,
+        which is exactly the overload behaviour the fault exercises."""
+        taken = 0
+        while taken < n:
+            pid = self._pop_free()
+            if pid is None:
+                break
+            self.held.append(pid)
+            taken += 1
+        return taken
+
+    def release_held(self) -> int:
+        """Return every held page to the free list; returns the count."""
+        n = len(self.held)
+        self.free.extend(self.held)
+        self.held.clear()
+        return n
+
     def alloc_pages(self, slot: int, upto_tokens: int) -> bool:
         """Map (and scrub) owned pages so the slot covers ``upto_tokens``
         logical positions. False = pool exhausted (caller preempts)."""
@@ -736,6 +766,11 @@ class PagedCachePool:
             if pid is None:
                 if new_ids:
                     self.pages = self._scrub_fn(self.pages, self._pad_ids(new_ids))
+                    # partial maps still raise in_use: peak must see them
+                    self.peak_pages_in_use = max(
+                        self.peak_pages_in_use,
+                        int(np.sum(self.ref[_RESERVED:] > 0)),
+                    )
                 return False
             j = int(self.n_mapped[slot])
             self.table_np[slot, j] = pid
@@ -861,6 +896,7 @@ class PagedCachePool:
             "pages_in_use": float(in_use),
             "pages_cached_only": float(cached_only),
             "pages_free": float(len(self.free)),
+            "pages_held": float(len(self.held)),
             "page_utilization": in_use / alloc if alloc else 0.0,
             "page_utilization_peak": (
                 self.peak_pages_in_use / alloc if alloc else 0.0

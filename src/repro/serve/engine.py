@@ -75,8 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.core.routing import batch_capacity_k
-from repro.models import api
+from repro.core.routing import batch_capacity_k, capacity_ladder
 from repro.serve.cache import (
     CachePool,
     PagedCachePool,
@@ -88,9 +87,16 @@ from repro.serve.cache import (
     slot_slice,
     slot_update,
 )
+from repro.models import api
+from repro.serve.faults import FaultInjector
+from repro.serve.overload import CapacityController, EngineOverloaded, default_levels
 from repro.serve.request import (
+    FINISH_CANCELLED,
     FINISH_EOS,
+    FINISH_ERROR,
+    FINISH_EXPIRED,
     FINISH_LENGTH,
+    PRIORITY_LATENCY,
     Request,
     RequestOutput,
     pad_outputs,
@@ -166,6 +172,12 @@ class ServingEngine:
         speculate: Optional[int] = None,  # self-speculative: draft n tokens/round
         draft_ratio: float = 0.0,  # drafter's MoD capacity ratio (0 = pure skip)
         spec_verify_budget: Optional[int] = None,  # verify-token budget per round
+        adaptive_capacity: bool = False,  # load-adaptive MoD capacity ladder
+        capacity_levels: Optional[tuple] = None,  # ladder scales (default 1, ½, ¼)
+        capacity_controller: Optional[CapacityController] = None,
+        max_queue: Optional[int] = None,  # bounded backpressure: reject at depth
+        fault_injector: Optional[FaultInjector] = None,
+        clock: Optional[Callable[[], float]] = None,  # deadline clock (monotonic)
     ):
         """``mesh`` makes the engine multi-device: params are placed per the
         sharding rules, the cache pool is batch-sharded over the mesh's data
@@ -216,7 +228,23 @@ class ServingEngine:
         ``speculate=None`` under upfront submission
         (tests/test_speculative.py). ``spec_verify_budget`` caps
         admissions so active slots × (n+1) verify positions never exceed
-        it. DESIGN.md §Self-speculative decoding."""
+        it. DESIGN.md §Self-speculative decoding.
+
+        ``adaptive_capacity=True`` arms the overload controller
+        (:class:`repro.serve.overload.CapacityController`): under sustained
+        queue/latency pressure the engine walks down a discrete, bounded
+        ladder of MoD capacity levels (``capacity_levels`` scales, default
+        full/half/quarter) — each level exactly one lazily-compiled decode
+        step — and shrinks the batch-tier admission budget by the same
+        factor. ``latency``-priority requests are exempt: any step with a
+        latency-tier slot active decodes at level 0 and their admissions
+        bypass the degraded budget. ``max_queue`` bounds the queue
+        (``submit`` raises :class:`EngineOverloaded` instead of queueing
+        unboundedly); ``fault_injector`` threads a scheduled fault matrix
+        through the step (detection/containment are always on, injector or
+        not); ``clock`` overrides the deadline clock (``time.monotonic``)
+        — benchmarks pass a step-counting clock for determinism.
+        DESIGN.md §Overload control."""
         if prefill not in ("auto", "batch", "step"):
             raise ValueError(f"unknown prefill mode {prefill!r}")
         from repro.distributed.sharding import shard_ctx
@@ -330,6 +358,7 @@ class ServingEngine:
         self.scheduler = Scheduler(
             batch_size, policy, routed_capacity(cfg, batch_size, shards),
             verify_token_budget=spec_verify_budget,
+            max_queue=max_queue,
         )
         self.slots = [Slot(i) for i in range(batch_size)]
         self.finished: List[RequestOutput] = []
@@ -357,150 +386,57 @@ class ServingEngine:
         self._used_uids: set = set()
         self._wall_s = 0.0
 
-        # The one decode step every slot shares; jax caches one executable
-        # per shape, and shapes are fixed, so this compiles exactly once
-        # (and is shared by every engine with the same config + shard ctx).
-        spmd = self.spmd
-        if self._ragged:
-            spec = self.pool.step_spec()
-            C = self._prefill_chunk
-            S = self._ragged_segments
-
-            def _make_ragged_step():
-                # One fixed-shape mixed step. Inputs beyond the decode
-                # triple: a flat (S·C,) prefill token stream plus per-segment
-                # (slot, start, len, flat-offset) descriptors; dead segments
-                # carry len 0 and are exact no-ops on the caches (masked
-                # chunk positions never write — tests/test_serve_ragged.py).
-                def step(p, pages, resid, table, dec_t, dec_pos, dec_act,
-                         pf_tokens, seg_slot, seg_start, seg_len, seg_off):
-                    caches = paged_materialize(spec, pages, resid, table)
-                    T = pf_tokens.shape[0]
-                    # logits aval of one chunk call — the dead branch of the
-                    # per-segment cond must return the exact shape/dtype
-                    lg_aval = jax.eval_shape(
-                        lambda c: api.model_prefill_chunk(
-                            p, cfg, slot_slice(spec, c, jnp.int32(0)),
-                            jnp.zeros((1, C), jnp.int32),
-                            jnp.int32(0), jnp.int32(0),
-                        )[0],
-                        caches,
-                    )
-
-                    def seg_body(carry, xs):
-                        slot, start, ln, off = xs
-                        j = jnp.arange(C, dtype=jnp.int32)
-                        chunk = jnp.where(
-                            j < ln, jnp.take(pf_tokens, jnp.clip(off + j, 0, T - 1)), 0
-                        )[None]
-
-                        def live(c):
-                            sub = slot_slice(spec, c, slot)
-                            lg, new_sub = api.model_prefill_chunk(
-                                p, cfg, sub, chunk, start, ln
-                            )
-                            # per-segment residual snapshot: prefix
-                            # boundaries land mid-scan, so the host can't
-                            # slice them from the pool after the step
-                            # (later segments of the same slot have
-                            # already advanced it)
-                            res = tuple(
-                                jax.tree_util.tree_leaves(new_sub)[i]
-                                for i in spec.resid_ids
-                            )
-                            return slot_update(spec, c, new_sub, slot), lg[0], res
-
-                        def dead(c):
-                            # a real runtime skip (cond, not select): decode-
-                            # heavy steps don't pay for idle segment slots
-                            leaves = jax.tree_util.tree_leaves(c)
-                            res = tuple(
-                                jax.lax.dynamic_slice_in_dim(
-                                    leaves[i], 0, 1, axis=spec.axes[i]
-                                )
-                                for i in spec.resid_ids
-                            )
-                            return c, jnp.zeros(lg_aval.shape[1:], lg_aval.dtype), res
-
-                        new_carry, lg, res = jax.lax.cond(ln > 0, live, dead, carry)
-                        return new_carry, (lg, res)
-
-                    caches, (seg_logits, seg_resid) = jax.lax.scan(
-                        seg_body, caches, (seg_slot, seg_start, seg_len, seg_off)
-                    )
-                    dlogits, dec_caches, aux = api.model_decode(
-                        p, caches, cfg, dec_t, dec_pos, dec_act, spmd=None
-                    )
-                    # decode ran over every row; keep its cache writes only
-                    # where a row actually decoded, so slots mid-prefill
-                    # never absorb the garbage decode row
-                    dl = jax.tree_util.tree_leaves(dec_caches)
-                    pl = jax.tree_util.tree_leaves(caches)
-                    merged = jax.tree_util.tree_unflatten(
-                        spec.treedef,
-                        [
-                            jnp.where(
-                                dec_act.reshape(
-                                    (1,) * ax + (-1,) + (1,) * (d.ndim - ax - 1)
-                                ),
-                                d, c,
-                            )
-                            for d, c, ax in zip(dl, pl, spec.axes)
-                        ],
-                    )
-                    B = dec_pos.shape[0]
-                    arC = jnp.arange(C, dtype=jnp.int32)
-                    w_slot = jnp.concatenate(
-                        [jnp.arange(B, dtype=jnp.int32), jnp.repeat(seg_slot, C)]
-                    )
-                    w_pos = jnp.concatenate(
-                        [dec_pos.astype(jnp.int32),
-                         (seg_start[:, None] + arC[None]).reshape(-1)]
-                    )
-                    w_valid = jnp.concatenate(
-                        [dec_act, (arC[None] < seg_len[:, None]).reshape(-1)]
-                    )
-                    new_pages, new_resid = paged_writeback_tokens(
-                        spec, merged, pages, table, w_slot, w_pos, w_valid
-                    )
-                    return dlogits, seg_logits, seg_resid, new_pages, new_resid, aux
-
-                return step
-
-            self._step_fn = _cached_jit(
-                "ragged_step",
-                (cfg, ctx, page_size, self.pool.n_pages, paged_backend, C, S),
-                _make_ragged_step,
+        # -- overload control / robustness ------------------------------
+        self._clock = clock if clock is not None else time.monotonic
+        self._faults = fault_injector
+        adaptive = adaptive_capacity or capacity_controller is not None
+        if capacity_levels is not None and not adaptive:
+            raise ValueError("capacity_levels requires adaptive_capacity")
+        if adaptive and self._speculate is not None:
+            raise NotImplementedError(
+                "adaptive_capacity + speculate: a speculative round already "
+                "runs two capacity ratios; composing the ladder with the "
+                "rollback machinery is future work"
             )
-            self._ragged_spec = spec
-        elif self._paged:
-            spec = self.pool.step_spec()
-
-            def _make_paged_step():
-                def step(p, pages, resid, table, t, pos, act):
-                    caches = paged_materialize(spec, pages, resid, table)
-                    logits, new_caches, aux = api.model_decode(
-                        p, caches, cfg, t, pos, act, spmd=spmd
-                    )
-                    new_pages, new_resid = paged_writeback(
-                        spec, new_caches, pages, table, pos
-                    )
-                    return logits, new_pages, new_resid, aux
-
-                return step
-
-            self._step_fn = _cached_jit(
-                "paged_step",
-                (cfg, spmd, ctx, page_size, self.pool.n_pages, paged_backend),
-                _make_paged_step,
+        if adaptive and (mesh is not None or data_shards):
+            raise NotImplementedError("adaptive_capacity + SPMD mesh/data_shards")
+        scales = (
+            tuple(float(x) for x in capacity_levels)
+            if capacity_levels is not None
+            else default_levels()
+        )
+        # validates the ladder shape even when MoD is off (dense engines
+        # still degrade their host-side admission budgets by the scales)
+        self._level_cfgs = capacity_ladder(cfg, scales) if adaptive else (cfg,)
+        self._capacity_scales = scales if adaptive else (1.0,)
+        if adaptive:
+            self._controller = capacity_controller or CapacityController(
+                n_levels=len(scales),
+                queue_high=2 * batch_size,
+                queue_low=max(1, batch_size // 2),
             )
         else:
-            self._step_fn = _cached_jit(
-                "step", (cfg, spmd),
-                lambda: lambda p, c, t, pos, act: api.model_decode(
-                    p, c, cfg, t, pos, act, spmd=spmd
-                ),
-            )
+            self._controller = None
+        # monotone robustness counters (stats() — always present)
+        self._degraded_decode_steps = 0
+        self.last_step_level = 0  # ladder level of the most recent decode step
+        self._n_shed = 0
+        self._n_expired = 0
+        self._n_cancelled = 0
+        self._n_failed = 0
+
+        # The decode step every slot shares lives in _build_step_fn so the
+        # capacity ladder can mint one compiled step per level; level 0
+        # (the full config) is built eagerly here.
+        self._paged_backend = paged_backend
+        if self._ragged:
+            self._ragged_spec = self.pool.step_spec()
+        self._step_fn = self._build_step_fn(cfg)
+        # capacity ladder: one compiled step per level, minted lazily on
+        # first degraded step; level cfgs only shrink the router's kb (no
+        # decode shape depends on capacity_ratio), so pool state built
+        # under the full cfg stays valid at every level
+        self._level_fns: Dict[int, Callable] = {0: self._step_fn}
         self._spec_fn = None
         if self._speculate is not None:
             pspec = self.pool.step_spec()
@@ -612,6 +548,206 @@ class ServingEngine:
         self._step_signatures0 = self._step_signatures()
 
     # ------------------------------------------------------------------
+    # Step-function construction (per capacity-ladder level)
+    # ------------------------------------------------------------------
+
+    def _build_step_fn(self, cfg: ModelConfig) -> Callable:
+        """Build (or fetch from the shared jit cache) the decode step for
+        one ``cfg``. Called once at construction with the full config, and
+        lazily per capacity-ladder level with that level's reduced
+        ``capacity_ratio`` cfg (``core/routing.capacity_ladder``) — levels
+        change only the router's kb, never a shape, so every level drives
+        the same pool state and jax compiles each exactly once. In the
+        ragged mixed step only the *decode* rows degrade: prefill segments
+        always run the full config (``self.cfg``), because chunk
+        boundaries become cached/restorable state — ingesting a prompt at
+        reduced capacity would poison it non-restorably."""
+        spmd = self.spmd
+        if self._ragged:
+            spec = self._ragged_spec
+            pf_cfg = self.cfg  # prefill segments never degrade
+            C = self._prefill_chunk
+            S = self._ragged_segments
+
+            def _make_ragged_step():
+                # One fixed-shape mixed step. Inputs beyond the decode
+                # triple: a flat (S·C,) prefill token stream plus per-segment
+                # (slot, start, len, flat-offset) descriptors; dead segments
+                # carry len 0 and are exact no-ops on the caches (masked
+                # chunk positions never write — tests/test_serve_ragged.py).
+                def step(p, pages, resid, table, dec_t, dec_pos, dec_act,
+                         pf_tokens, seg_slot, seg_start, seg_len, seg_off):
+                    caches = paged_materialize(spec, pages, resid, table)
+                    T = pf_tokens.shape[0]
+                    # logits aval of one chunk call — the dead branch of the
+                    # per-segment cond must return the exact shape/dtype
+                    lg_aval = jax.eval_shape(
+                        lambda c: api.model_prefill_chunk(
+                            p, pf_cfg, slot_slice(spec, c, jnp.int32(0)),
+                            jnp.zeros((1, C), jnp.int32),
+                            jnp.int32(0), jnp.int32(0),
+                        )[0],
+                        caches,
+                    )
+
+                    def seg_body(carry, xs):
+                        slot, start, ln, off = xs
+                        j = jnp.arange(C, dtype=jnp.int32)
+                        chunk = jnp.where(
+                            j < ln, jnp.take(pf_tokens, jnp.clip(off + j, 0, T - 1)), 0
+                        )[None]
+
+                        def live(c):
+                            sub = slot_slice(spec, c, slot)
+                            lg, new_sub = api.model_prefill_chunk(
+                                p, pf_cfg, sub, chunk, start, ln
+                            )
+                            # per-segment residual snapshot: prefix
+                            # boundaries land mid-scan, so the host can't
+                            # slice them from the pool after the step
+                            # (later segments of the same slot have
+                            # already advanced it)
+                            res = tuple(
+                                jax.tree_util.tree_leaves(new_sub)[i]
+                                for i in spec.resid_ids
+                            )
+                            return slot_update(spec, c, new_sub, slot), lg[0], res
+
+                        def dead(c):
+                            # a real runtime skip (cond, not select): decode-
+                            # heavy steps don't pay for idle segment slots
+                            leaves = jax.tree_util.tree_leaves(c)
+                            res = tuple(
+                                jax.lax.dynamic_slice_in_dim(
+                                    leaves[i], 0, 1, axis=spec.axes[i]
+                                )
+                                for i in spec.resid_ids
+                            )
+                            return c, jnp.zeros(lg_aval.shape[1:], lg_aval.dtype), res
+
+                        new_carry, lg, res = jax.lax.cond(ln > 0, live, dead, carry)
+                        return new_carry, (lg, res)
+
+                    caches, (seg_logits, seg_resid) = jax.lax.scan(
+                        seg_body, caches, (seg_slot, seg_start, seg_len, seg_off)
+                    )
+                    dlogits, dec_caches, aux = api.model_decode(
+                        p, caches, cfg, dec_t, dec_pos, dec_act, spmd=None
+                    )
+                    # decode ran over every row; keep its cache writes only
+                    # where a row actually decoded, so slots mid-prefill
+                    # never absorb the garbage decode row
+                    dl = jax.tree_util.tree_leaves(dec_caches)
+                    pl = jax.tree_util.tree_leaves(caches)
+                    merged = jax.tree_util.tree_unflatten(
+                        spec.treedef,
+                        [
+                            jnp.where(
+                                dec_act.reshape(
+                                    (1,) * ax + (-1,) + (1,) * (d.ndim - ax - 1)
+                                ),
+                                d, c,
+                            )
+                            for d, c, ax in zip(dl, pl, spec.axes)
+                        ],
+                    )
+                    B = dec_pos.shape[0]
+                    arC = jnp.arange(C, dtype=jnp.int32)
+                    w_slot = jnp.concatenate(
+                        [jnp.arange(B, dtype=jnp.int32), jnp.repeat(seg_slot, C)]
+                    )
+                    w_pos = jnp.concatenate(
+                        [dec_pos.astype(jnp.int32),
+                         (seg_start[:, None] + arC[None]).reshape(-1)]
+                    )
+                    w_valid = jnp.concatenate(
+                        [dec_act, (arC[None] < seg_len[:, None]).reshape(-1)]
+                    )
+                    new_pages, new_resid = paged_writeback_tokens(
+                        spec, merged, pages, table, w_slot, w_pos, w_valid
+                    )
+                    return dlogits, seg_logits, seg_resid, new_pages, new_resid, aux
+
+                return step
+
+            return _cached_jit(
+                "ragged_step",
+                (cfg, pf_cfg, self.ctx, self.pool.page_size,
+                 self.pool.n_pages, self._paged_backend, C, S),
+                _make_ragged_step,
+            )
+        if self._paged:
+            spec = self.pool.step_spec()
+
+            def _make_paged_step():
+                def step(p, pages, resid, table, t, pos, act):
+                    caches = paged_materialize(spec, pages, resid, table)
+                    logits, new_caches, aux = api.model_decode(
+                        p, caches, cfg, t, pos, act, spmd=spmd
+                    )
+                    new_pages, new_resid = paged_writeback(
+                        spec, new_caches, pages, table, pos
+                    )
+                    return logits, new_pages, new_resid, aux
+
+                return step
+
+            return _cached_jit(
+                "paged_step",
+                (cfg, spmd, self.ctx, self.pool.page_size,
+                 self.pool.n_pages, self._paged_backend),
+                _make_paged_step,
+            )
+        return _cached_jit(
+            "step", (cfg, spmd),
+            lambda: lambda p, c, t, pos, act: api.model_decode(
+                p, c, cfg, t, pos, act, spmd=spmd
+            ),
+        )
+
+    def _level_fn(self, level: int) -> Callable:
+        """The compiled step for one capacity-ladder level, minted lazily
+        on first use (the ladder is discrete and bounded, so the jit cache
+        grows by at most ``len(capacity_levels) - 1`` extra entries)."""
+        if level not in self._level_fns:
+            self._level_fns[level] = self._build_step_fn(self._level_cfgs[level])
+        return self._level_fns[level]
+
+    def _capacity_level(self) -> int:
+        """Ladder level for this step's decode. Level 0 (full capacity)
+        unless the controller is degraded AND no latency-tier request is
+        active — latency-priority work always decodes at full capacity, so
+        a mixed batch runs level 0 and only pure batch-tier steps degrade.
+        Dense families always step at level 0 (the ladder only scales
+        MoD's capacity_ratio); their degradation is the host-side
+        admission-budget scaling in :meth:`_batch_admission_cap`."""
+        if self._controller is None or self._controller.level == 0:
+            return 0
+        if not self.cfg.mod.enabled:
+            return 0
+        if any(
+            s.active and s.req.priority == PRIORITY_LATENCY for s in self.slots
+        ):
+            return 0
+        return min(self._controller.level, len(self._level_cfgs) - 1)
+
+    def _batch_admission_cap(self) -> Optional[int]:
+        """Degraded per-wave admission budget for *batch-tier* requests
+        (None = uncapped): the prefill-chunk-budget half of a capacity
+        level. Admission waves shrink by the level's scale so prompt
+        ingestion drains at the degraded rate; latency-tier admissions
+        bypass the cap in the scheduler. Deliberately a per-wave budget,
+        not a concurrency cap: throttling in-flight batch work below the
+        pool's own admission gate just trades tail latency for idle
+        slots — the ladder's job is cheaper steps, not fewer of them."""
+        if self._controller is None or self._controller.level == 0:
+            return None
+        lvl = min(self._controller.level, len(self._capacity_scales) - 1)
+        scale = self._capacity_scales[lvl]
+        base = self._ragged_segments if self._ragged else self.batch_size
+        return max(1, int(round(base * scale)))
+
+    # ------------------------------------------------------------------
     # Submission
     # ------------------------------------------------------------------
 
@@ -629,6 +765,21 @@ class ServingEngine:
                 f"request needs {self.pool.pages_needed(req.total_len)} pages "
                 f"worst-case but the pool has {self.pool.allocatable_pages}"
             )
+        if req.deadline_s is not None and req.deadline_s <= 0.0:
+            # never-servable, like the pages check above: the first
+            # lifecycle sweep would shed it before it could run at all
+            raise ValueError(
+                f"deadline_s must be positive, got {req.deadline_s}: the "
+                "deadline has already elapsed at submit"
+            )
+        if self.scheduler.queue_full:
+            # bounded backpressure: reject-with-reason instead of letting
+            # the queue (and every queued request's wait) grow unboundedly
+            self._n_shed += 1
+            raise EngineOverloaded(
+                f"queue depth {len(self.scheduler.queue)} is at max_queue="
+                f"{self.scheduler.max_queue}; request rejected, retry later"
+            )
         if req.uid is None:
             req.uid = self._uid
         elif req.uid in self._used_uids:
@@ -636,8 +787,30 @@ class ServingEngine:
         self._used_uids.add(req.uid)
         self._uid = max(self._uid, req.uid) + 1
         req._submitted_step = self.step_count  # type: ignore[attr-defined]
+        if req.deadline_s is not None:
+            # absolute deadline on the engine clock, armed at submit —
+            # queue wait counts against it (that's the shedding signal)
+            req._deadline_t = self._clock() + req.deadline_s  # type: ignore[attr-defined]
         self.scheduler.submit(req)
         return req.uid
+
+    def cancel(self, uid: int) -> bool:
+        """Client cancellation by uid. Marks the request; the next step's
+        lifecycle sweep finishes it with ``FINISH_CANCELLED`` — queued
+        requests shed without ever prefilling, running ones release their
+        pages/snapshots through the normal finish path and report their
+        partial output. Returns False for an unknown or already-finished
+        uid (cancellation racing completion is benign: the client gets
+        the completed output it was sent)."""
+        for r in self.scheduler.queue:
+            if r.uid == uid:
+                r.cancel()
+                return True
+        for s in self.slots:
+            if s.active and s.req.uid == uid:
+                s.req.cancel()
+                return True
+        return False
 
     # ------------------------------------------------------------------
     # Admission
@@ -684,6 +857,7 @@ class ServingEngine:
             stepped_prefill=False,
             page_gate=self._page_gate(),
             max_admissions=cap,
+            batch_cap=self._batch_admission_cap(),
         )
         for slot, req in plans:
             self.pool.acquire(slot.idx)
@@ -712,6 +886,7 @@ class ServingEngine:
             stepped_prefill=not self._batch_prefill,
             page_gate=self._page_gate(),
             max_admissions=max_admissions,
+            batch_cap=self._batch_admission_cap(),
         )
         for slot, req in plans:
             if self._paged:
@@ -747,6 +922,15 @@ class ServingEngine:
                         self._positions_computed += req.prompt_len
                 except _PoolExhausted:
                     self._abort_admission(slot, req)
+                    continue
+                if not np.isfinite(logits_row).all():
+                    # finiteness police at admission: a numerically
+                    # poisoned prompt fails its own request right here,
+                    # before the slot ever enters the decode batch
+                    self._finish(
+                        slot, FINISH_ERROR,
+                        error="non-finite prefill logits",
+                    )
                     continue
                 slot.pos = req.prompt_len
                 slot.prompt_idx = req.prompt_len
@@ -875,7 +1059,12 @@ class ServingEngine:
         elif len(slot.generated) >= req.max_new_tokens:
             self._finish(slot, FINISH_LENGTH)
 
-    def _finish(self, slot: Slot, reason: str) -> None:
+    def _finish(self, slot: Slot, reason: str, error: Optional[str] = None) -> None:
+        """Terminal transition for a running slot: build the output (with
+        whatever tokens were generated — expiry/cancellation/error deliver
+        the partial stream), free the slot, release its pages. The one
+        path every terminal reason goes through, so pool bookkeeping can't
+        diverge between success and failure."""
         req = slot.req
         self.finished.append(
             RequestOutput(
@@ -900,13 +1089,103 @@ class ServingEngine:
                     if slot.score_steps
                     else float("nan")
                 ),
+                error=error,
             )
         )
+        self._tally(reason)
         slot.req = None
         slot.state = FREE
         slot.generated = []
         if self._paged:
             self.pool.release(slot.idx)
+
+    def _tally(self, reason: str) -> None:
+        if reason == FINISH_EXPIRED:
+            self._n_expired += 1
+        elif reason == FINISH_CANCELLED:
+            self._n_cancelled += 1
+        elif reason == FINISH_ERROR:
+            self._n_failed += 1
+
+    def _finish_queued(self, req: Request, reason: str,
+                       error: Optional[str]) -> None:
+        """Terminal output for a request shed straight from the queue:
+        never admitted, no slot, no prefill, no tokens —
+        ``admitted_step == finished_step`` and ``first_token_step == -1``
+        mark the never-ran lifecycle (request.py docstring)."""
+        self.scheduler.drop(req)
+        self.finished.append(
+            RequestOutput(
+                uid=req.uid,
+                prompt=np.asarray(req.tokens),
+                tokens=np.asarray([], np.int32),
+                finish_reason=reason,
+                submitted_step=getattr(req, "_submitted_step", 0),
+                admitted_step=self.step_count,
+                first_token_step=-1,
+                finished_step=self.step_count,
+                routed_frac=float("nan"),
+                mean_score=float("nan"),
+                error=error,
+            )
+        )
+        self._n_shed += 1
+        self._tally(reason)
+
+    def _police(self) -> None:
+        """Terminal-lifecycle sweep at the top of every step: cancelled /
+        deadline-expired requests leave *now*. Queued ones are shed
+        without ever prefilling (the overload-control half: prefilling
+        work that is already past its deadline is pure waste), running
+        ones finish with their partial output and release pages/prefix
+        snapshots through the normal :meth:`_finish` path. The clock is
+        read at most once per sweep, and only when some request actually
+        carries a deadline."""
+        now = None
+
+        def expired(r: Request) -> bool:
+            nonlocal now
+            t = getattr(r, "_deadline_t", None)
+            if t is None:
+                return False
+            if now is None:
+                now = self._clock()
+            return now >= t
+
+        for r in [r for r in self.scheduler.queue if r.cancelled or expired(r)]:
+            if r.cancelled:
+                self._finish_queued(r, FINISH_CANCELLED, None)
+            else:
+                self._finish_queued(
+                    r, FINISH_EXPIRED, "deadline expired while queued"
+                )
+        for s in self.slots:
+            if not s.active:
+                continue
+            if s.req.cancelled:
+                self._finish(s, FINISH_CANCELLED)
+            elif expired(s.req):
+                self._finish(
+                    s, FINISH_EXPIRED,
+                    error=f"deadline expired at step {self.step_count}",
+                )
+
+    def _step_prologue(self) -> None:
+        """Shared head of every step path: the lifecycle sweep, then
+        scheduled fault injection — faults fire against the post-sweep
+        state, so an injected storm can't mask a pending expiry."""
+        self._police()
+        if self._faults is not None:
+            self._faults.on_step_start(self)
+
+    def _step_epilogue(self, t0: float) -> None:
+        """Shared tail of every step path: wall-clock accounting plus one
+        controller observation (queue depth + this step's latency) per
+        engine step."""
+        dt = time.time() - t0
+        self._wall_s += dt
+        if self._controller is not None:
+            self._controller.observe(len(self.scheduler.queue), dt)
 
     def _preempt(self, slot: Slot) -> None:
         """Page-pool OOM backstop: evict the youngest-admitted slot back to
@@ -1019,13 +1298,16 @@ class ServingEngine:
             return self._step_ragged()
         done_before = len(self.finished)
         t0 = time.time()
+        self._step_prologue()
         self._admit()
         if self._paged:
             self._grow_pages()  # may preempt; must precede the active scan
         active_slots = [s for s in self.slots if s.active]
         if not active_slots:
+            self.last_step_level = 0  # no decode ran: nothing was degraded
             self.step_count += 1
-            self._wall_s += time.time() - t0
+            self._step_epilogue(t0)
+            self.scheduler.check_invariants(self.slots, len(self.finished))
             return self.finished[done_before:]
 
         B = self.batch_size
@@ -1037,18 +1319,25 @@ class ServingEngine:
             pos[s.idx] = s.pos
             active[s.idx] = True
 
+        lvl = self._capacity_level()
+        self.last_step_level = lvl  # which ladder level priced this step
+        step_fn = self._level_fn(lvl) if lvl else self._step_fn
+        if lvl:
+            self._degraded_decode_steps += 1
         if self._paged:
-            logits, self.pool.pages, self.pool.resid, aux = self._step_fn(
+            logits, self.pool.pages, self.pool.resid, aux = step_fn(
                 self.params, self.pool.pages, self.pool.resid,
                 self.pool.device_table(), jnp.asarray(tokens),
                 jnp.asarray(pos), jnp.asarray(active),
             )
         else:
-            logits, self.pool.caches, aux = self._step_fn(
+            logits, self.pool.caches, aux = step_fn(
                 self.params, self.pool.caches, self._place(tokens),
                 self._place(pos), self._place(active),
             )
         logits_np = np.asarray(logits)
+        if self._faults is not None:
+            logits_np = self._faults.corrupt_logits(self, logits_np)
         self._positions_computed += B
         self._positions_wasted += B - len(active_slots)
 
@@ -1062,6 +1351,16 @@ class ServingEngine:
         self._occupancy_sum += len(active_slots)
 
         for s in active_slots:
+            if not np.isfinite(logits_np[s.idx]).all():
+                # finiteness police: a poisoned row fails only its own
+                # request — rows are independent (per-row attention; MoD
+                # routing couples rows only through *selection*), so no
+                # other slot's cache absorbed the corruption
+                self._finish(
+                    s, FINISH_ERROR,
+                    error=f"non-finite logits at step {self.step_count}",
+                )
+                continue
             if routed_np is not None:
                 s.routed_sum += float(routed_np[s.idx])
                 s.routed_steps += 1
@@ -1089,7 +1388,7 @@ class ServingEngine:
                     s.next_token = tok
 
         self.step_count += 1
-        self._wall_s += time.time() - t0
+        self._step_epilogue(t0)
         self.scheduler.check_invariants(self.slots, len(self.finished))
         return self.finished[done_before:]
 
@@ -1105,12 +1404,17 @@ class ServingEngine:
         done_before = len(self.finished)
         t0 = time.time()
         if admit:
+            # admit=False means the speculative path already ran the
+            # prologue (police + faults) and admission for this step
+            self._step_prologue()
             self._admit_ragged()
         segs = self._plan_segments()  # maps pages; may preempt mid-prefill
         active_slots = [s for s in self.slots if s.active]
         if not active_slots:
+            self.last_step_level = 0  # no decode ran: nothing was degraded
             self.step_count += 1
-            self._wall_s += time.time() - t0
+            self._step_epilogue(t0)
+            self.scheduler.check_invariants(self.slots, len(self.finished))
             return self.finished[done_before:]
 
         B = self.batch_size
@@ -1140,8 +1444,13 @@ class ServingEngine:
                 s.req.tokens[start : start + nv]
             )
 
+        lvl = self._capacity_level()
+        self.last_step_level = lvl  # which ladder level priced this step
+        step_fn = self._level_fn(lvl) if lvl else self._step_fn
+        if lvl:
+            self._degraded_decode_steps += 1
         (logits, seg_logits, seg_resid, self.pool.pages, self.pool.resid,
-         aux) = self._step_fn(
+         aux) = step_fn(
             self.params, self.pool.pages, self.pool.resid,
             self.pool.device_table(),
             jnp.asarray(dec_tokens), jnp.asarray(dec_pos), jnp.asarray(dec_act),
@@ -1150,6 +1459,8 @@ class ServingEngine:
         )
         logits_np = np.asarray(logits)
         seg_logits_np = np.asarray(seg_logits)
+        if self._faults is not None:
+            logits_np = self._faults.corrupt_logits(self, logits_np)
 
         n_pf = sum(nv for _, _, nv in segs)
         self._prefill_tokens_computed += n_pf
@@ -1191,13 +1502,29 @@ class ServingEngine:
             if s.idx not in last_seg:
                 continue  # over budget this step; waits for the next
             if s.prompt_idx >= s.req.prompt_len:
-                tok = self._sample(s.req, seg_logits_np[last_seg[s.idx]], 0)
+                row = seg_logits_np[last_seg[s.idx]]
+                if not np.isfinite(row).all():
+                    self._finish(
+                        s, FINISH_ERROR,
+                        error="non-finite prefill-segment logits at step "
+                              f"{self.step_count}",
+                    )
+                    continue
+                tok = self._sample(s.req, row, 0)
                 self._push_token(s, tok)
                 if s.req is not None:
                     s.state = GENERATE
                     s.next_token = tok
 
         for s in decode_slots:
+            if not np.isfinite(logits_np[s.idx]).all():
+                # poisoned decode row: fail only this request (rows are
+                # independent — see step())
+                self._finish(
+                    s, FINISH_ERROR,
+                    error=f"non-finite logits at step {self.step_count}",
+                )
+                continue
             if routed_np is not None:
                 s.routed_sum += float(routed_np[s.idx])
                 s.routed_steps += 1
@@ -1212,7 +1539,7 @@ class ServingEngine:
                 s.next_token = tok
 
         self.step_count += 1
-        self._wall_s += time.time() - t0
+        self._step_epilogue(t0)
         self.scheduler.check_invariants(self.slots, len(self.finished))
         return self.finished[done_before:]
 
@@ -1237,6 +1564,7 @@ class ServingEngine:
         draining; speculation only covers pure-decode steps."""
         done_before = len(self.finished)
         t0 = time.time()
+        self._step_prologue()
         n = self._speculate
         cap = self.scheduler.speculative_admission_cap(
             sum(1 for s in self.slots if s.active), n + 1
@@ -1253,8 +1581,10 @@ class ServingEngine:
         self._grow_pages(lookahead=n + 1)
         active_slots = [s for s in self.slots if s.active]
         if not active_slots:
+            self.last_step_level = 0  # no decode ran: nothing was degraded
             self.step_count += 1
-            self._wall_s += time.time() - t0
+            self._step_epilogue(t0)
+            self.scheduler.check_invariants(self.slots, len(self.finished))
             return self.finished[done_before:]
 
         B = self.batch_size
@@ -1275,6 +1605,30 @@ class ServingEngine:
         )
         drafts_np = np.asarray(drafts)  # (n, B)
         logits_np = np.asarray(logits)  # (n+1, B, V)
+        if self._faults is not None:
+            logits_np = self._faults.corrupt_logits(self, logits_np)
+        # finiteness police over the whole verify window: a poisoned row
+        # fails only its own request, and leaves the accept loop before it
+        # can drag the batch-global acceptance down with it
+        ok_slots = []
+        for s in active_slots:
+            if np.isfinite(logits_np[:, s.idx]).all():
+                ok_slots.append(s)
+            else:
+                self._finish(
+                    s, FINISH_ERROR,
+                    error=f"non-finite verify logits at step {self.step_count}",
+                )
+        active_slots = ok_slots
+        if not active_slots:
+            # every active row failed: nothing was accepted, so there is
+            # nothing to roll back — the failed slots' pages (including
+            # the window's scattered lookahead rows) were released by
+            # _finish, and pool.resid still holds the pre-round state
+            self.step_count += 1
+            self._step_epilogue(t0)
+            self.scheduler.check_invariants(self.slots, len(self.finished))
+            return self.finished[done_before:]
 
         # Per-slot acceptance: emitted token k+1 samples from the verify
         # logits L_k, which are valid iff every earlier emitted token
@@ -1351,7 +1705,7 @@ class ServingEngine:
         self._spec_accepted_drafts += (a - 1) * len(active_slots)
         self._spec_emitted += a
         self.step_count += a
-        self._wall_s += time.time() - t0
+        self._step_epilogue(t0)
         self.scheduler.check_invariants(self.slots, len(self.finished))
         return self.finished[done_before:]
 
@@ -1436,7 +1790,9 @@ class ServingEngine:
 
     def _step_signatures(self) -> Optional[int]:
         total = 0
-        fns = [self._step_fn]
+        # dict.fromkeys dedups: dense ladder levels share one callable
+        # (identical cfg -> identical jit-cache key)
+        fns = list(dict.fromkeys(self._level_fns.values()))
         if self._spec_fn is not None:
             fns.append(self._spec_fn)
         for fn in fns:
@@ -1452,8 +1808,9 @@ class ServingEngine:
         at most 1 (static shapes; 0 when another engine with the same
         config and batch size already compiled it). A speculative ragged
         engine has two entry points (mixed step for prompt drain +
-        speculative round), so its bound is 2. None if jax doesn't
-        expose cache sizes."""
+        speculative round), so its bound is 2; an adaptive-capacity MoD
+        engine adds at most one per *visited* ladder level. None if jax
+        doesn't expose cache sizes."""
         now = self._step_signatures()
         if now is None or self._step_signatures0 is None:
             return None
@@ -1485,11 +1842,24 @@ class ServingEngine:
             # latest per-slot batch_capacity scores (NaN = free / MoD off):
             # what the router is currently ranking live slots by
             "slot_scores": [s.score for s in self.slots],
+            # robustness counters (monotone; always present): shed counts
+            # requests that left without ever occupying a slot (queue
+            # drops + backpressure rejections); the other three count
+            # terminal outputs by finish_reason
+            "shed": float(self._n_shed),
+            "expired": float(self._n_expired),
+            "cancelled": float(self._n_cancelled),
+            "failed": float(self._n_failed),
         }
         if self._paged:
             out["preemptions"] = float(self.preemptions)
             out["admission_aborts"] = float(self.admission_aborts)
             out.update(self.pool.page_stats())
+        if self._controller is not None:
+            # steps that actually decoded degraded (latency-tier exemption
+            # and dense families keep this below the controller's count)
+            out["degraded_decode_steps"] = float(self._degraded_decode_steps)
+            out.update(self._controller.stats())
         if self._speculate is not None:
             out["speculative_rounds"] = float(self._spec_rounds)
             # fraction of drafted tokens the verifier accepted — the

@@ -1,0 +1,206 @@
+"""Fault injection for the serving engine.
+
+A :class:`FaultInjector` is threaded through the engine step
+(``ServingEngine(fault_injector=...)``) and fires a scheduled matrix of
+faults at chosen engine steps. The contract (DESIGN.md §Overload control):
+
+- The injector only *creates* adverse conditions; it never touches the
+  engine's failure handling. Detection and containment are engine-side
+  and always on, injector or not.
+- Every fault terminates **only** the affected request(s) — with
+  ``FINISH_ERROR`` for detected corruption — or no request at all for the
+  recoverable kinds (page exhaustion and preemption storms unwind through
+  the engine's normal preempt/requeue backstops). The engine keeps
+  serving, pool accounting invariants keep balancing, and every other
+  request's tokens are unchanged.
+
+Fault kinds
+-----------
+- ``nan_logits`` / ``inf_logits``: overwrite one active slot's logits row
+  with non-finite values right after the jitted step, *before* sampling —
+  modelling a numerically-poisoned sequence. The engine's finiteness
+  police fails that request; decode rows are independent (per-row
+  attention; MoD routing couples rows only through *selection*), so a
+  poisoned row can perturb which rows win routed capacity but never
+  corrupts another row's cache.
+- ``page_exhaustion``: hold ``pages`` pages out of the pool's free list
+  for ``duration`` steps (``PagedCachePool.hold_pages``), forcing the
+  admission gate shut and the lazy-growth path into preemption.
+- ``slow_step``: sleep ``sleep_s`` before the step — a straggler step that
+  spikes the p99 signal (and, under wall-clock deadlines, expires
+  requests).
+- ``preempt_storm``: forcibly preempt every mid-prefill slot (plus the
+  youngest decoding slot when none is prefilling) back to the queue — a
+  burst of the engine's own preemption path at the worst possible time.
+
+``FaultInjector.seeded(seed)`` builds a reproducible random matrix over
+all kinds — the seeded fault-matrix soak (tests/test_faults.py, the timed
+``faults`` CI stage) drives it against a live engine and asserts the
+contract above after every step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.scheduler import GENERATE, PREFILL
+
+KINDS = (
+    "nan_logits",
+    "inf_logits",
+    "page_exhaustion",
+    "slow_step",
+    "preempt_storm",
+)
+
+
+@dataclasses.dataclass
+class Fault:
+    """One scheduled fault.
+
+    kind:     one of :data:`KINDS`.
+    step:     fires at the first engine step whose ``step_count`` reaches
+              this (speculative rounds advance several steps at once).
+    slot:     nan/inf target slot; None (or an inactive slot) targets the
+              lowest-index active decoding slot at fire time.
+    pages:    page_exhaustion — pages to hold.
+    duration: page_exhaustion — steps to keep them held.
+    sleep_s:  slow_step — seconds to stall.
+    """
+
+    kind: str
+    step: int
+    slot: Optional[int] = None
+    pages: int = 4
+    duration: int = 2
+    sleep_s: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; know {KINDS}")
+
+
+class FaultInjector:
+    """Fires a fault schedule against a live engine; records what fired.
+
+    ``fired`` is the audit log — a list of dicts ``{step, kind, ...}`` the
+    fault-matrix soak asserts against (every fired fault must map to the
+    right per-request outcome)."""
+
+    def __init__(self, faults=()):
+        self.faults: List[Fault] = sorted(faults, key=lambda f: f.step)
+        self.fired: List[dict] = []
+        self._done: set = set()
+        self._release_at: Optional[int] = None
+
+    @classmethod
+    def seeded(
+        cls,
+        seed: int,
+        n_faults: int = 6,
+        horizon: int = 48,
+        kinds=KINDS,
+        sleep_s: float = 0.0,
+    ) -> "FaultInjector":
+        """Reproducible random fault matrix: ``n_faults`` faults of random
+        kinds spread over the first ``horizon`` engine steps."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        for _ in range(n_faults):
+            kind = str(rng.choice(kinds))
+            faults.append(
+                Fault(
+                    kind=kind,
+                    step=int(rng.integers(1, horizon)),
+                    slot=None,
+                    pages=int(rng.integers(2, 8)),
+                    duration=int(rng.integers(1, 4)),
+                    sleep_s=sleep_s if kind == "slow_step" else 0.0,
+                )
+            )
+        return cls(faults)
+
+    # -- engine hooks ----------------------------------------------------
+
+    def _due(self, step_count: int, kinds) -> List[Fault]:
+        out = []
+        for i, f in enumerate(self.faults):
+            if i in self._done or f.step > step_count or f.kind not in kinds:
+                continue
+            out.append((i, f))
+        return out
+
+    def on_step_start(self, engine) -> None:
+        """Time-domain faults: stalls, page holds (+ their release), and
+        preemption storms. Called at the top of every engine step."""
+        step = engine.step_count
+        if self._release_at is not None and step >= self._release_at:
+            released = engine.pool.release_held()
+            self._release_at = None
+            self.fired.append({"step": step, "kind": "release_held",
+                               "pages": released})
+        for i, f in self._due(step, ("slow_step", "page_exhaustion",
+                                     "preempt_storm")):
+            if f.kind == "slow_step":
+                if f.sleep_s > 0:
+                    time.sleep(f.sleep_s)
+                self._done.add(i)
+                self.fired.append({"step": step, "kind": f.kind,
+                                   "sleep_s": f.sleep_s})
+            elif f.kind == "page_exhaustion":
+                if not getattr(engine, "_paged", False):
+                    self._done.add(i)  # nothing to exhaust on CachePool
+                    continue
+                held = engine.pool.hold_pages(f.pages)
+                until = step + f.duration
+                self._release_at = (
+                    until if self._release_at is None
+                    else max(self._release_at, until)
+                )
+                self._done.add(i)
+                self.fired.append({"step": step, "kind": f.kind,
+                                   "pages": held, "until": until})
+            elif f.kind == "preempt_storm":
+                victims = [s for s in engine.slots if s.state == PREFILL]
+                if not victims:
+                    gen = [s for s in engine.slots if s.active]
+                    if gen:
+                        victims = [max(gen, key=lambda s: (s.admitted_step,
+                                                           s.idx))]
+                if not victims:
+                    continue  # defer until someone is running
+                for s in victims:
+                    engine._preempt(s)
+                self._done.add(i)
+                self.fired.append({"step": step, "kind": f.kind,
+                                   "preempted": len(victims)})
+
+    def corrupt_logits(self, engine, logits_np: np.ndarray) -> np.ndarray:
+        """Value-domain faults: overwrite a target row with NaN/Inf and
+        return the (copied-on-write — device arrays view as read-only)
+        logits. ``logits_np`` is (B, V) for plain/ragged decode steps or
+        (n+1, B, V) for a speculative round — the slot axis is the
+        second-to-last either way."""
+        step = engine.step_count
+        for i, f in self._due(step, ("nan_logits", "inf_logits")):
+            target = f.slot
+            decoding = [s.idx for s in engine.slots if s.state == GENERATE]
+            if target is None or target not in decoding:
+                if not decoding:
+                    continue  # defer until a decode row exists
+                target = min(decoding)
+            bad = np.nan if f.kind == "nan_logits" else np.inf
+            if not logits_np.flags.writeable:
+                logits_np = logits_np.copy()
+            logits_np[..., target, :] = bad
+            self._done.add(i)
+            self.fired.append({"step": step, "kind": f.kind, "slot": target})
+        return logits_np
+
+    @property
+    def exhausted(self) -> bool:
+        """True when every scheduled fault has fired and holds released."""
+        return len(self._done) == len(self.faults) and self._release_at is None

@@ -5,6 +5,28 @@ termination/sampling settings. The engine assigns it a slot in the fixed
 ``(B, ctx)`` decode batch, streams tokens as they are sampled, and returns
 a :class:`RequestOutput` with the generated tokens plus scheduling/latency
 telemetry (admission wait, time-to-first-token, steps resident).
+
+Terminal lifecycle
+------------------
+Every submitted request ends in exactly one :class:`RequestOutput`, even
+when it never produced a token. The success reasons (``eos`` / ``length``)
+are joined by three failure reasons so one bad request can never wedge or
+poison a batch (DESIGN.md §Overload control):
+
+- ``FINISH_EXPIRED``: the request's ``deadline_s`` elapsed — while queued
+  (shed before any prefill compute) or mid-decode (partial output).
+- ``FINISH_CANCELLED``: the client called :meth:`Request.cancel` (or
+  ``ServingEngine.cancel(uid)``); pages and slot are released at the next
+  engine step.
+- ``FINISH_ERROR``: the engine detected a fault on this request (e.g.
+  non-finite logits) and terminated it; ``RequestOutput.error`` carries
+  the reason. Other requests in the batch keep serving.
+
+``priority`` selects the SLO class: ``"latency"`` requests are admitted
+ahead of ``"batch"`` requests (FCFS within each class) and always run at
+full MoD capacity; ``"batch"`` requests absorb capacity degradation when
+the engine's :class:`~repro.serve.overload.CapacityController` walks the
+capacity ladder down under load.
 """
 from __future__ import annotations
 
@@ -17,6 +39,13 @@ import numpy as np
 # Why a request finished.
 FINISH_EOS = "eos"  # sampled the request's eos_id
 FINISH_LENGTH = "length"  # hit max_new_tokens
+FINISH_ERROR = "error"  # engine-detected fault (RequestOutput.error says what)
+FINISH_EXPIRED = "expired"  # deadline_s elapsed (queued or mid-decode)
+FINISH_CANCELLED = "cancelled"  # client cancellation
+
+# Priority classes (Request.priority).
+PRIORITY_LATENCY = "latency"  # admitted first; always full MoD capacity
+PRIORITY_BATCH = "batch"  # absorbs capacity degradation under overload
 
 
 @dataclasses.dataclass
@@ -35,6 +64,14 @@ class Request:
                     embeddings (S_enc, D) for this request's cross-KV.
     stream:         optional per-token callback ``(uid, token_id)`` invoked
                     as each token is sampled.
+    priority:       SLO class: ``"latency"`` (admitted first, never
+                    capacity-degraded) or ``"batch"`` (default; absorbs
+                    degradation under overload).
+    deadline_s:     optional relative deadline in engine-clock seconds
+                    (wall clock by default, injectable for tests). Counted
+                    from ``submit()``; an expired request terminates with
+                    ``FINISH_EXPIRED`` — shed without prefill if still
+                    queued, partial output if mid-decode.
     """
 
     tokens: np.ndarray
@@ -45,6 +82,9 @@ class Request:
     enc_emb: Optional[np.ndarray] = None
     stream: Optional[Callable[[int, int], None]] = None
     uid: Optional[int] = None  # assigned by the engine at submit()
+    priority: str = PRIORITY_BATCH
+    deadline_s: Optional[float] = None
+    cancelled: bool = False  # set via cancel(); honoured at the next step
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
@@ -52,6 +92,19 @@ class Request:
             raise ValueError("prompt must have at least one token")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.priority not in (PRIORITY_LATENCY, PRIORITY_BATCH):
+            raise ValueError(
+                f"priority must be {PRIORITY_LATENCY!r} or {PRIORITY_BATCH!r}, "
+                f"got {self.priority!r}"
+            )
+
+    def cancel(self) -> None:
+        """Client cancellation: the engine terminates the request with
+        ``FINISH_CANCELLED`` at its next step (queued requests are shed
+        without any prefill compute; running slots release their pages
+        and return a partial output). Idempotent; a no-op once the
+        request has already finished."""
+        self.cancelled = True
 
     @property
     def prompt_len(self) -> int:
@@ -68,13 +121,17 @@ class RequestOutput:
 
     Step indices count engine steps (one jitted decode step each), so
     ``finished_step - admitted_step`` is the request's residency and
-    ``admitted_step - submitted_step`` its queue wait.
+    ``admitted_step - submitted_step`` its queue wait. Requests shed from
+    the queue (expired/cancelled before admission) report
+    ``admitted_step == finished_step`` and ``first_token_step == -1`` with
+    an empty ``tokens`` array.
     """
 
     uid: int
     prompt: np.ndarray
     tokens: np.ndarray  # generated tokens (includes eos if sampled)
-    finish_reason: str  # FINISH_EOS | FINISH_LENGTH
+    finish_reason: str  # FINISH_EOS | FINISH_LENGTH | FINISH_ERROR |
+                        # FINISH_EXPIRED | FINISH_CANCELLED
     submitted_step: int
     admitted_step: int
     first_token_step: int
@@ -84,6 +141,14 @@ class RequestOutput:
     mean_score: float = float("nan")  # mean MoD predictor/router score over
                                       # the request's steps (the causal
                                       # signal batch_capacity ranks by)
+    error: Optional[str] = None  # human-readable failure detail for the
+                                 # three failure finish reasons; None on
+                                 # success
+
+    @property
+    def ok(self) -> bool:
+        """True iff the request ran to a normal termination."""
+        return self.finish_reason in (FINISH_EOS, FINISH_LENGTH)
 
     @property
     def full_sequence(self) -> np.ndarray:

@@ -9,9 +9,9 @@ Policies
 --------
 - ``"fcfs"``: admit the longest-waiting requests into every free slot.
   Requests submitted at the same engine step (equal arrival times) are
-  admitted in submission order — the queue is a FIFO deque, so the
-  tie-break is stable by construction (regression-tested in
-  tests/test_serve.py).
+  admitted in submission order — every request carries a monotone
+  submission sequence number (``_seq``), so the tie-break is stable by
+  construction (regression-tested in tests/test_serve.py).
 - ``"mod_aware"`` (default): FCFS order, but admission is co-ranked with
   the MoD ``batch_capacity`` router instead of fighting it. Each decode
   step routes exactly ``kb`` batch rows through every routed block, and a
@@ -36,6 +36,21 @@ Policies
   against a per-shard budget would starve admission whenever the queue's
   arrivals happened to land on one shard's slots.
 
+Priority classes
+----------------
+Both policies plan admissions over the queue sorted by
+``(priority class, _seq)``: every ``latency``-tier request is considered
+before any ``batch``-tier request, and *within* a class strict FCFS
+seniority holds (``_seq`` is assigned once at submit and survives
+preemption, so a requeued request automatically re-enters ahead of
+everything its class submitted after it — a preempted latency-tier
+request overtakes queued batch-tier work without disturbing batch-tier
+FCFS order; regression-tested in tests/test_serve.py). ``max_queue``
+bounds the queue for backpressure (the engine rejects-with-reason instead
+of queueing unboundedly), and :meth:`drop` sheds a queued request
+straight to finished (deadline expiry / cancellation before admission)
+while keeping the invariants balanced.
+
 The scheduler is pure bookkeeping — no jax. Slot state lives here so the
 engine's invariants ("every request is in exactly one of queue / slot /
 finished", "slot count is constant") are checkable in one place.
@@ -48,7 +63,7 @@ from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.request import Request
+from repro.serve.request import PRIORITY_LATENCY, Request
 
 FREE = "free"
 PREFILL = "prefill"  # slot is ingesting prompt tokens through the decode step
@@ -86,7 +101,8 @@ class Scheduler:
 
     def __init__(self, n_slots: int, policy: str = "mod_aware",
                  routed_capacity: Optional[int] = None,
-                 verify_token_budget: Optional[int] = None):
+                 verify_token_budget: Optional[int] = None,
+                 max_queue: Optional[int] = None):
         if policy not in ("fcfs", "mod_aware"):
             raise ValueError(f"unknown scheduling policy {policy!r}")
         self.policy = policy
@@ -96,9 +112,13 @@ class Scheduler:
         # speculative rounds: every active slot burns (speculate+1) verify
         # positions per round; None = uncapped (the engine's default)
         self.verify_token_budget = verify_token_budget
+        # bounded backpressure: queue depth at which submission rejects
+        # (None = unbounded, the pre-overload-control behaviour)
+        self.max_queue = max_queue
         self.queue: Deque[Request] = deque()
         self.submitted = 0
         self.admitted = 0
+        self._seq = 0  # monotone submission counter (FCFS seniority key)
 
     def speculative_admission_cap(
         self, n_active: int, verify_cost: int
@@ -115,9 +135,26 @@ class Scheduler:
             raise ValueError(f"verify_cost must be positive, got {verify_cost}")
         return max(0, self.verify_token_budget // verify_cost - n_active)
 
+    @property
+    def queue_full(self) -> bool:
+        return self.max_queue is not None and len(self.queue) >= self.max_queue
+
     def submit(self, req: Request) -> None:
+        req._seq = self._seq  # type: ignore[attr-defined]
+        self._seq += 1
         self.queue.append(req)
         self.submitted += 1
+
+    @staticmethod
+    def _plan_key(req: Request) -> Tuple[int, int]:
+        """Admission order: latency class first, then FCFS seniority.
+        ``_seq`` is assigned once at submit and kept across preemption, so
+        a requeued request sorts ahead of every same-class request that
+        arrived after it."""
+        return (
+            0 if req.priority == PRIORITY_LATENCY else 1,
+            getattr(req, "_seq", 0),
+        )
 
     def plan_admissions(
         self,
@@ -125,6 +162,7 @@ class Scheduler:
         stepped_prefill: bool,
         page_gate: Optional[Callable[[Request], bool]] = None,
         max_admissions: Optional[int] = None,
+        batch_cap: Optional[int] = None,
     ) -> List[Tuple[Slot, Request]]:
         """Pick (slot, request) pairs to admit this step.
 
@@ -148,6 +186,12 @@ class Scheduler:
 
         ``max_admissions`` additionally caps this wave (the ragged engine
         budgets admissions by free prefill-segment tokens, not free slots).
+
+        ``batch_cap`` caps only the *batch-tier* admissions in this wave —
+        the capacity controller's degraded prefill budget. Latency-tier
+        requests always bypass it (they keep full capacity under overload);
+        capped batch-tier requests are skipped in place, keeping their
+        FCFS seniority for the next wave.
         """
         free = [s for s in slots if s.state == FREE]
         plans: List[Tuple[Slot, Request]] = []
@@ -164,21 +208,31 @@ class Scheduler:
             budget = len(free)
         if max_admissions is not None:
             budget = min(budget, max_admissions)
+        budget = min(budget, len(free))
+        # class-then-seniority order: every latency-tier request is
+        # considered before any batch-tier one; within a class, _seq keeps
+        # strict FCFS (requeued requests resume their original seniority)
+        order = sorted(
+            range(len(self.queue)), key=lambda i: self._plan_key(self.queue[i])
+        )
         taken: set = set()
-        qi = 0
-        for slot in free:
+        batch_taken = 0
+        for i in order:
             if budget <= 0:
                 break
-            while qi < len(self.queue):
-                req = self.queue[qi]
-                qi += 1
-                if page_gate is None or page_gate(req):
-                    plans.append((slot, req))
-                    taken.add(qi - 1)
-                    budget -= 1
-                    break
-            else:
-                break
+            req = self.queue[i]
+            if (
+                batch_cap is not None
+                and req.priority != PRIORITY_LATENCY
+                and batch_taken >= batch_cap
+            ):
+                continue
+            if page_gate is None or page_gate(req):
+                plans.append((free[len(plans)], req))
+                taken.add(i)
+                budget -= 1
+                if req.priority != PRIORITY_LATENCY:
+                    batch_taken += 1
         if taken:
             self.queue = deque(
                 r for i, r in enumerate(self.queue) if i not in taken
@@ -187,11 +241,32 @@ class Scheduler:
         return plans
 
     def requeue(self, req: Request) -> None:
-        """Preemption path: a running request goes back to the *front* of
-        the queue (it keeps its FCFS seniority) and its admission is
-        unwound so the invariants keep balancing."""
+        """Preemption path: a running request goes back to the queue with
+        its admission unwound so the invariants keep balancing. Its
+        original ``_seq`` (assigned at first submit) is what restores its
+        place in line: admission planning sorts by (class, _seq), so a
+        preempted request re-enters ahead of every same-class request that
+        arrived after it — and a preempted *latency*-tier request ahead of
+        all queued batch-tier work — without resetting batch-tier FCFS
+        order (the deque position itself no longer carries seniority)."""
         self.queue.appendleft(req)
         self.admitted -= 1
+
+    def drop(self, req: Request) -> None:
+        """Shed a queued request straight to finished (deadline expiry or
+        cancellation before admission — no slot, no prefill): it leaves
+        the queue and is counted admitted, because the engine immediately
+        appends its terminal RequestOutput to ``finished`` — both
+        invariants keep balancing. Removal is by identity: dataclass
+        ``==`` would compare token arrays elementwise (and fail on
+        mismatched lengths)."""
+        for i, r in enumerate(self.queue):
+            if r is req:
+                del self.queue[i]
+                break
+        else:
+            raise ValueError(f"request uid={req.uid} is not queued")
+        self.admitted += 1
 
     def check_invariants(self, slots: List[Slot], finished: int) -> None:
         """Every submitted request is in exactly one place; no slot leaks."""

@@ -1,0 +1,188 @@
+"""Seeded fault-matrix soak: the engine's robustness contract under fire.
+
+A :class:`FaultInjector` with a reproducible random fault matrix (NaN/Inf
+logit corruption, page exhaustion, straggler steps, preemption storms) is
+threaded through live engines — padded-paged, ragged, and speculative —
+while a driver keeps submitting work past the fault horizon so every
+scheduled fault actually fires. After every step the full pool
+recomputation from tests/test_paged_properties.py (:func:`_check`) and
+the scheduler invariants must hold. At drain:
+
+- every submitted request terminated exactly once;
+- each fired corruption killed exactly the targeted request
+  (``FINISH_ERROR`` + error text), never a neighbour;
+- recoverable faults (exhaustion, storms) killed nobody — their requests
+  finished normally through the preempt/requeue backstops;
+- no pages are left held, mapped, or leaked, and the engine kept serving.
+
+The dense-config run additionally pins *non-interference*: every
+non-failed request's token stream is bit-identical to a fault-free run
+(per-row attention makes rows independent; MoD configs couple rows
+through routing *selection*, so they get the containment assertions but
+not stream identity — see DESIGN.md §Overload control).
+
+This file is the timed ``faults`` stage in scripts/ci.sh.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import MoDConfig
+from repro.models import api
+from repro.serve import (
+    FINISH_EOS,
+    FINISH_ERROR,
+    FINISH_LENGTH,
+    FaultInjector,
+    Request,
+    ServingEngine,
+)
+from tests.helpers import tiny_cfg
+from tests.test_paged_properties import _check
+
+MAX_STEPS = 400  # hard bound: the soak must converge long before this
+
+
+def _requests(rng, n, vocab=90):
+    return [
+        Request(
+            tokens=rng.integers(1, vocab, size=int(rng.integers(2, 9))),
+            max_new_tokens=int(rng.integers(3, 7)),
+        )
+        for _ in range(n)
+    ]
+
+
+def _soak(cfg, seed, n_requests=10, horizon=30, **engine_kw):
+    """Drive one engine through a seeded fault matrix; return
+    (outputs-by-uid, injector, engine)."""
+    rng = np.random.default_rng(seed)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    inj = FaultInjector.seeded(seed, n_faults=6, horizon=horizon)
+    eng = ServingEngine(
+        params, cfg, batch_size=4, ctx=32, page_size=4, prefill_chunk=4,
+        fault_injector=inj, **engine_kw,
+    )
+    pending = _requests(rng, n_requests)
+    live = []
+    for _ in range(MAX_STEPS):
+        # top up: work must keep flowing past the fault horizon so every
+        # scheduled fault finds a target (corruption defers until a
+        # decode row exists, storms until someone is running) — filler
+        # requests keep the soak alive if the originals drain early
+        while pending and len(eng.scheduler.queue) < 2:
+            r = pending.pop()
+            eng.submit(r)
+            live.append(r)
+        if not pending and not inj.exhausted and not eng.scheduler.queue:
+            filler = _requests(rng, 1)[0]
+            eng.submit(filler)
+            live.append(filler)
+        eng.step()
+        _check(eng.pool)
+        eng.scheduler.check_invariants(eng.slots, len(eng.finished))
+        if not eng.has_work and not pending and inj.exhausted:
+            break
+    assert not eng.has_work and not pending, "soak did not converge"
+    assert inj.exhausted, (
+        f"faults never fired: {[f.kind for f in inj.faults]} vs {inj.fired}"
+    )
+    outs = {o.uid: o for o in eng.finished}
+    assert sorted(outs) == sorted(r.uid for r in live)
+    return outs, inj, eng
+
+
+def _assert_contract(outs, inj, eng):
+    """The per-fault outcome mapping every soak asserts."""
+    corruption_steps = {
+        f["step"] for f in inj.fired if f["kind"].endswith("_logits")
+    }
+    failed = [o for o in outs.values() if o.finish_reason == FINISH_ERROR]
+    # one kill per corruption step: simultaneous nan+inf faults pick the
+    # same (lowest-index decoding) target, distinct steps distinct targets
+    assert len(failed) == len(corruption_steps), (
+        [o.error for o in failed], inj.fired,
+    )
+    for o in failed:
+        assert "non-finite" in o.error
+        assert not o.ok
+    # recoverable kinds terminated nobody: everything else ran to a
+    # success reason, through however many preemptions/exhaustions
+    for o in outs.values():
+        if o.finish_reason != FINISH_ERROR:
+            assert o.finish_reason in (FINISH_EOS, FINISH_LENGTH)
+            assert o.error is None and o.ok
+    # nothing left held or mapped; counters match the audit log
+    assert eng.pool.held == []
+    assert (np.asarray(eng.pool.n_mapped) == 0).all()
+    st = eng.stats()
+    assert st["failed"] == float(len(failed))
+    assert st["shed"] == 0.0 and st["expired"] == 0.0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fault_matrix_soak_padded(seed):
+    outs, inj, eng = _soak(tiny_cfg(), seed)
+    _assert_contract(outs, inj, eng)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fault_matrix_soak_ragged(seed):
+    outs, inj, eng = _soak(tiny_cfg(), seed, ragged=True)
+    _assert_contract(outs, inj, eng)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fault_matrix_soak_speculative(seed):
+    outs, inj, eng = _soak(tiny_cfg(), seed, speculate=3)
+    _assert_contract(outs, inj, eng)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_unaffected_streams_bit_identical_dense(seed):
+    """Non-interference, pinned exactly: with routing off, a request's
+    greedy stream depends only on its own prompt — so whatever storms,
+    stalls, holds, and corruptions the matrix threw at the engine, every
+    request it did *not* kill must decode the very tokens a fault-free
+    engine produces."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    reqs = _requests(rng, 8)
+    clean = ServingEngine(params, cfg, batch_size=4, ctx=32, page_size=4,
+                          prefill_chunk=4)
+    for r in reqs:
+        clean.submit(r)
+    # prompt -> stream is a *function* for dense greedy decode, so keying
+    # by prompt is exact (and immune to uid offsets between the two runs)
+    baseline = {tuple(o.prompt.tolist()): o.tokens.tolist()
+                for o in clean.run()}
+
+    outs, inj, _ = _soak(cfg, seed, n_requests=8)
+    survivors = [o for o in outs.values() if o.finish_reason != FINISH_ERROR]
+    assert survivors, "matrix killed every request; soak proves nothing"
+    compared = 0
+    for o in survivors:
+        want = baseline.get(tuple(o.prompt.tolist()))
+        if want is None:  # a filler request the baseline never saw
+            continue
+        compared += 1
+        assert o.tokens.tolist() == want, (
+            f"uid={o.uid} stream diverged under faults"
+        )
+    assert compared >= len(baseline) - len(
+        [o for o in outs.values() if o.finish_reason == FINISH_ERROR]
+    )
+
+
+def test_fault_validation_and_audit_log():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        from repro.serve import Fault
+
+        Fault(kind="cosmic_ray", step=1)
+    inj = FaultInjector.seeded(7)
+    assert len(inj.faults) == 6
+    assert all(f.step >= 1 for f in inj.faults)
+    assert inj.fired == [] and not inj.exhausted

@@ -1,0 +1,374 @@
+"""Overload control: the CapacityController's hysteretic ladder, the
+capacity_ladder cfg helper, adaptive engine degradation (with the
+latency-tier exemption and its bit-identity guarantee), bounded
+backpressure, deadline/cancellation lifecycle, and the robustness
+counters. The fault-injection soak lives in tests/test_faults.py (its own
+timed CI stage); everything here is fast enough for the unit stage."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import MoDConfig
+from repro.core.routing import capacity_ladder
+from repro.models import api
+from repro.serve import (
+    CapacityController,
+    EngineOverloaded,
+    FINISH_CANCELLED,
+    FINISH_EOS,
+    FINISH_EXPIRED,
+    FINISH_LENGTH,
+    PRIORITY_BATCH,
+    PRIORITY_LATENCY,
+    Request,
+    ServingEngine,
+)
+from repro.serve.overload import default_levels
+from repro.serve.scheduler import FREE, PREFILL, Scheduler, Slot
+from tests.helpers import tiny_cfg
+
+
+def _params(cfg):
+    return api.init_model(jax.random.PRNGKey(0), cfg)
+
+
+def _reqs(n, L=4, new=8, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(tokens=rng.integers(1, 90, size=L), max_new_tokens=new, **kw)
+        for _ in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# capacity_ladder (core/routing)
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_ladder_scales_ratio_only():
+    cfg = tiny_cfg()
+    levels = capacity_ladder(cfg, (1.0, 0.5, 0.25))
+    assert levels[0] == cfg  # level 0 is the full config (frozen, hashable)
+    assert [l.mod.capacity_ratio for l in levels] == pytest.approx(
+        [0.25, 0.125, 0.0625]
+    )
+    # everything except the ratio is untouched (shape-free swap)
+    for l in levels[1:]:
+        assert dataclasses.replace(
+            l, mod=dataclasses.replace(l.mod, capacity_ratio=cfg.mod.capacity_ratio)
+        ) == cfg
+
+
+def test_capacity_ladder_dense_is_identity():
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    levels = capacity_ladder(cfg, default_levels())
+    assert all(l == cfg for l in levels)
+
+
+def test_capacity_ladder_validates_scales():
+    cfg = tiny_cfg()
+    with pytest.raises(ValueError):
+        capacity_ladder(cfg, ())
+    with pytest.raises(ValueError):
+        capacity_ladder(cfg, (0.5, 0.25))  # must start at full capacity
+    with pytest.raises(ValueError):
+        capacity_ladder(cfg, (1.0, 0.5, 0.5))  # strictly descending
+    with pytest.raises(ValueError):
+        capacity_ladder(cfg, (1.0, 0.0))  # scales live in (0, 1]
+
+
+# ---------------------------------------------------------------------------
+# CapacityController (pure host-side unit tests)
+# ---------------------------------------------------------------------------
+
+
+def test_controller_degrades_after_patience_and_is_bounded():
+    c = CapacityController(n_levels=3, queue_high=4, queue_low=1,
+                           degrade_patience=2, restore_patience=4)
+    assert c.observe(10, 0.0) == 0  # one hot observation: not yet
+    assert c.observe(10, 0.0) == 1  # patience reached
+    for _ in range(10):
+        c.observe(10, 0.0)
+    assert c.level == 2  # ladder bottom, never past n_levels - 1
+    assert c.max_level_seen == 2
+    assert c.degraded_steps > 0
+
+
+def test_controller_hysteresis_band_holds_level():
+    c = CapacityController(n_levels=3, queue_high=4, queue_low=1,
+                           degrade_patience=1, restore_patience=2)
+    c.observe(5, 0.0)
+    assert c.level == 1
+    # depth inside (queue_low, queue_high): hold, and reset both streaks
+    for _ in range(20):
+        assert c.observe(2, 0.0) == 1
+    # calm streak must be *consecutive*: calm, band, calm never restores
+    c.observe(0, 0.0)
+    c.observe(2, 0.0)
+    c.observe(0, 0.0)
+    assert c.level == 1
+    c.observe(0, 0.0)  # second consecutive calm
+    assert c.level == 0
+
+
+def test_controller_restore_is_slower_than_degrade():
+    c = CapacityController(n_levels=2, queue_high=4, queue_low=1,
+                           degrade_patience=1, restore_patience=6)
+    c.observe(9, 0.0)
+    assert c.level == 1
+    for i in range(5):
+        c.observe(0, 0.0)
+        assert c.level == 1, i
+    c.observe(0, 0.0)
+    assert c.level == 0
+    assert c.level_changes == 2
+
+
+def test_controller_p99_slo_signal():
+    c = CapacityController(n_levels=2, queue_high=100, queue_low=1,
+                           p99_high_s=0.5, window=8, degrade_patience=1)
+    for _ in range(8):
+        c.observe(0, 1.0)  # queue empty, steps slow: SLO is what trips
+    assert c.level == 1
+    assert c.p99() >= 0.5
+    # calm requires the p99 back under the SLO, not just an empty queue
+    assert c.stats()["step_p99_s"] >= 0.5
+
+
+def test_controller_validates():
+    with pytest.raises(ValueError):
+        CapacityController(n_levels=0, queue_high=2, queue_low=1)
+    with pytest.raises(ValueError):
+        CapacityController(n_levels=2, queue_high=1, queue_low=1)
+    with pytest.raises(ValueError):
+        CapacityController(n_levels=2, queue_high=2, queue_low=1,
+                           degrade_patience=0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: priority classes, bounded queue, shedding
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_priority_class_orders_admission():
+    sched = Scheduler(4, policy="fcfs")
+    batch = _reqs(3, seed=1)
+    lat = _reqs(1, seed=2, priority=PRIORITY_LATENCY)[0]
+    for i, r in enumerate(batch):
+        r.uid = i
+        sched.submit(r)
+    lat.uid = 99
+    sched.submit(lat)  # arrives last, admits first
+    slots = [Slot(i) for i in range(4)]
+    plans = sched.plan_admissions(slots, stepped_prefill=False)
+    assert [r.uid for _, r in plans] == [99, 0, 1, 2]
+
+
+def test_scheduler_batch_cap_spares_latency_tier():
+    sched = Scheduler(4, policy="fcfs")
+    for i, r in enumerate(_reqs(3, seed=1)):
+        r.uid = i
+        sched.submit(r)
+    lat = _reqs(1, seed=2, priority=PRIORITY_LATENCY)[0]
+    lat.uid = 99
+    sched.submit(lat)
+    slots = [Slot(i) for i in range(4)]
+    plans = sched.plan_admissions(slots, stepped_prefill=False, batch_cap=1)
+    # latency bypasses the degraded budget; exactly one batch-tier admits
+    assert [r.uid for _, r in plans] == [99, 0]
+    # the skipped batch requests kept their place (seniority intact)
+    assert [r.uid for r in sched.queue] == [1, 2]
+
+
+def test_scheduler_queue_full_and_drop_balance_invariants():
+    sched = Scheduler(2, max_queue=2)
+    r0, r1 = _reqs(2)
+    sched.submit(r0)
+    sched.submit(r1)
+    assert sched.queue_full
+    sched.drop(r0)  # shed straight to finished: counted admitted
+    slots = [Slot(0), Slot(1)]
+    sched.check_invariants(slots, finished=1)
+    assert not sched.queue_full
+
+
+# ---------------------------------------------------------------------------
+# Engine: backpressure, deadlines, cancellation, counters
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_elapsed_deadline_and_bad_priority():
+    cfg = tiny_cfg()
+    eng = ServingEngine(_params(cfg), cfg, batch_size=2, ctx=16)
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit(_reqs(1, deadline_s=0.0)[0])
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit(_reqs(1, deadline_s=-1.0)[0])
+    with pytest.raises(ValueError, match="priority"):
+        Request(tokens=np.asarray([1, 2]), max_new_tokens=1, priority="vip")
+
+
+def test_submit_backpressure_rejects_with_reason():
+    cfg = tiny_cfg()
+    eng = ServingEngine(_params(cfg), cfg, batch_size=2, ctx=16, max_queue=3)
+    for r in _reqs(3):
+        eng.submit(r)
+    with pytest.raises(EngineOverloaded, match="max_queue"):
+        eng.submit(_reqs(1, seed=9)[0])
+    assert eng.stats()["shed"] == 1.0
+    # the rejected request never entered the books
+    eng.scheduler.check_invariants(eng.slots, len(eng.finished))
+    outs = eng.run()
+    assert len(outs) == 3 and all(o.ok for o in outs)
+
+
+def test_deadline_expiry_queued_vs_mid_decode():
+    """Expiry while queued sheds without prefill (empty tokens,
+    first_token_step == -1); expiry mid-decode delivers the partial
+    stream with FINISH_EXPIRED."""
+    cfg = tiny_cfg()
+    eng = ServingEngine(_params(cfg), cfg, batch_size=1, ctx=32)
+    eng._clock = lambda: float(eng.step_count)  # deterministic step clock
+    # slot-bound request holds the single slot long enough for the queued
+    # one to expire before ever admitting
+    long = _reqs(1, new=12, seed=3)[0]
+    doomed = _reqs(1, new=4, seed=4, deadline_s=4.0)[0]
+    mid = _reqs(1, new=20, seed=5, deadline_s=6.0)[0]
+    eng.submit(long)
+    eng.submit(doomed)
+    outs = {o.uid: o for o in eng.run()}
+    shed = outs[doomed.uid]
+    assert shed.finish_reason == FINISH_EXPIRED
+    assert not shed.ok
+    assert shed.tokens.size == 0
+    assert shed.first_token_step == -1
+    assert shed.admitted_step == shed.finished_step  # never ran
+    assert "queued" in shed.error
+    # fresh engine: a lone request expiring mid-decode keeps its partial
+    eng2 = ServingEngine(_params(cfg), cfg, batch_size=1, ctx=32)
+    eng2._clock = lambda: float(eng2.step_count)
+    eng2.submit(mid)
+    out2 = eng2.run()[0]
+    assert out2.finish_reason == FINISH_EXPIRED
+    assert 0 < out2.tokens.size < mid.max_new_tokens
+    assert eng2.stats()["expired"] == 1.0
+
+
+def test_cancellation_queued_and_running():
+    cfg = tiny_cfg()
+    eng = ServingEngine(_params(cfg), cfg, batch_size=1, ctx=32)
+    running, queued = _reqs(2, new=10, seed=6)
+    eng.submit(running)
+    eng.submit(queued)
+    eng.step()  # running admitted; queued still waiting
+    assert eng.cancel(running.uid) and eng.cancel(queued.uid)
+    assert not eng.cancel(12345)  # unknown uid is a no-op
+    outs = {o.uid: o for o in eng.run()}
+    assert outs[running.uid].finish_reason == FINISH_CANCELLED
+    assert outs[running.uid].tokens.size > 0  # partial stream delivered
+    assert outs[queued.uid].finish_reason == FINISH_CANCELLED
+    assert outs[queued.uid].tokens.size == 0
+    st = eng.stats()
+    assert st["cancelled"] == 2.0 and st["shed"] == 1.0
+
+
+def test_stats_counters_always_present_and_monotone():
+    cfg = tiny_cfg()
+    eng = ServingEngine(_params(cfg), cfg, batch_size=2, ctx=16)
+    st = eng.stats()
+    for k in ("shed", "expired", "cancelled", "failed"):
+        assert st[k] == 0.0
+    for r in _reqs(2, new=2):
+        eng.submit(r)
+    eng.run()
+    st2 = eng.stats()
+    for k in ("shed", "expired", "cancelled", "failed"):
+        assert st2[k] >= st[k]
+
+
+# ---------------------------------------------------------------------------
+# Engine: adaptive capacity ladder
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_engine_degrades_and_restores():
+    cfg = tiny_cfg()
+    ctrl = CapacityController(n_levels=3, queue_high=4, queue_low=1,
+                              degrade_patience=1, restore_patience=3)
+    eng = ServingEngine(_params(cfg), cfg, batch_size=2, ctx=32,
+                        capacity_controller=ctrl)
+    for r in _reqs(12, new=10, seed=7):
+        eng.submit(r)
+    outs = eng.run()
+    assert len(outs) == 12 and all(o.ok for o in outs)
+    st = eng.stats()
+    assert st["capacity_level_max"] >= 1.0
+    assert st["degraded_decode_steps"] >= 1.0
+    # drained queue restores full capacity before the run ends
+    assert st["capacity_level"] == 0.0
+    # the ladder is discrete: at most one compiled step per visited level
+    if eng.decode_compilations is not None:
+        assert eng.decode_compilations <= 1 + int(st["capacity_level_max"])
+
+
+def test_adaptive_latency_tier_streams_bit_identical():
+    """The exemption's contract: a latency-tier request decodes at level 0
+    even while the controller is degraded, so its token stream matches a
+    no-overload engine exactly."""
+    cfg = tiny_cfg()
+    params = _params(cfg)
+    base = ServingEngine(params, cfg, batch_size=2, ctx=32)
+    for r in _reqs(6, new=8, seed=8, priority=PRIORITY_LATENCY):
+        base.submit(r)
+    want = {o.uid: o.tokens.tolist() for o in base.run()}
+    ctrl = CapacityController(n_levels=3, queue_high=2, queue_low=0,
+                              degrade_patience=1, restore_patience=99)
+    eng = ServingEngine(params, cfg, batch_size=2, ctx=32,
+                        capacity_controller=ctrl)
+    for r in _reqs(6, new=8, seed=8, priority=PRIORITY_LATENCY):
+        eng.submit(r)
+    got = {o.uid: o.tokens.tolist() for o in eng.run()}
+    assert got == want
+    st = eng.stats()
+    assert st["capacity_level_max"] >= 1.0  # controller DID degrade...
+    assert st["degraded_decode_steps"] == 0.0  # ...but no step decoded degraded
+
+
+def test_adaptive_ragged_engine_serves_under_pressure():
+    cfg = tiny_cfg()
+    ctrl = CapacityController(n_levels=2, queue_high=3, queue_low=1,
+                              degrade_patience=1, restore_patience=4)
+    eng = ServingEngine(_params(cfg), cfg, batch_size=2, ctx=32,
+                        page_size=4, prefill_chunk=4, ragged=True,
+                        capacity_controller=ctrl)
+    for r in _reqs(10, L=8, new=6, seed=9):
+        eng.submit(r)
+    outs = eng.run()
+    assert len(outs) == 10 and all(o.ok for o in outs)
+    assert eng.stats()["capacity_level_max"] >= 1.0
+
+
+def test_adaptive_rejects_unsupported_combinations():
+    cfg = tiny_cfg()
+    params = _params(cfg)
+    with pytest.raises(NotImplementedError, match="speculate"):
+        ServingEngine(params, cfg, batch_size=2, ctx=32, page_size=4,
+                      prefill_chunk=4, speculate=2, adaptive_capacity=True)
+    with pytest.raises(NotImplementedError, match="SPMD"):
+        ServingEngine(params, cfg, batch_size=2, ctx=32,
+                      data_shards=2, adaptive_capacity=True)
+    with pytest.raises(ValueError, match="adaptive_capacity"):
+        ServingEngine(params, cfg, batch_size=2, ctx=32,
+                      capacity_levels=(1.0, 0.5))
+
+
+def test_request_output_error_surfaces_in_ok():
+    cfg = tiny_cfg()
+    eng = ServingEngine(_params(cfg), cfg, batch_size=1, ctx=16)
+    r = _reqs(1, new=2)[0]
+    eng.submit(r)
+    out = eng.run()[0]
+    assert out.ok and out.error is None
+    assert out.finish_reason in (FINISH_EOS, FINISH_LENGTH)

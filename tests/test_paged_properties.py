@@ -58,13 +58,26 @@ def _check(pool):
             cnt[pid] += 1
     np.testing.assert_array_equal(cnt, pool.cache_cnt)
     assert len(pool.prefix) <= pool.prefix_max_entries
-    # conservation: every allocatable page is free xor referenced/cached
+    # held pages (fault-injection holds) are idle but not free: disjoint
+    # from the free list and never referenced or cached
+    held = list(pool.held)
+    assert all(p >= _RESERVED for p in held), "reserved page held"
+    assert len(held) == len(set(held)), "page held twice"
+    assert not (set(held) & set(free)), "held page still on the free list"
+    assert all(pool.ref[p] == 0 and pool.cache_cnt[p] == 0 for p in held), (
+        "held page is referenced or cached"
+    )
+    # conservation: every allocatable page is free xor held xor
+    # referenced/cached
     idle = {p for p in range(_RESERVED, pool.n_pages)
             if pool.ref[p] == 0 and pool.cache_cnt[p] == 0}
-    assert set(free) == idle, "free list != idle pages (leak or early free)"
+    assert set(free) | set(held) == idle, (
+        "free+held != idle pages (leak or early free)"
+    )
     stats = pool.page_stats()
     assert 0.0 <= stats["page_utilization"] <= 1.0
     assert stats["page_utilization_peak"] >= stats["page_utilization"] - 1e-9
+    assert stats["pages_held"] == float(len(held))
 
 
 def _drive(seed, n_ops, n_pages=None):
@@ -77,7 +90,8 @@ def _drive(seed, n_ops, n_pages=None):
                 for L in (3, CHUNK)]
     live = [False] * SLOTS  # acquired slots (what the scheduler would track)
     for _ in range(n_ops):
-        op = rng.choice(["acquire", "alloc", "truncate", "release", "prefix"])
+        op = rng.choice(["acquire", "alloc", "truncate", "release", "prefix",
+                         "hold"])
         slot = int(rng.integers(SLOTS))
         if op == "acquire":
             pool.acquire(slot)
@@ -104,6 +118,17 @@ def _drive(seed, n_ops, n_pages=None):
             live[slot] = False
             assert int(pool.n_mapped[slot]) == 0
             assert (pool.table_np[slot] == SCRATCH_PAGE).all()
+        elif op == "hold":
+            # fault-injection page holds: take some, sometimes give back
+            if pool.held and rng.random() < 0.5:
+                got = len(pool.held)
+                assert pool.release_held() == got
+                assert pool.held == []
+            else:
+                want = int(rng.integers(1, 5))
+                avail = pool.available_pages()
+                taken = pool.hold_pages(want)
+                assert taken <= min(want, avail)
         elif op == "prefix":
             tokens = prompts[int(rng.integers(len(prompts)))]
             pool.acquire(slot)
@@ -212,6 +237,101 @@ def test_truncate_mid_page_keeps_the_partial_page():
     assert pool.truncate(0, PAGE) == 1
     assert int(pool.n_mapped[0]) == 1
     _check(pool)
+
+
+# -- engine-level lifecycle driver: cancel/expire racing live decode ----
+
+
+def _drive_engine(seed, speculate):
+    """Random submit / cancel / expire ops against a live paged engine,
+    with the full pool recomputation (:func:`_check`) after every step.
+    One request cancels *itself* from its stream callback mid-round — with
+    ``speculate`` that lands inside a verify round's accept loop, so the
+    cancellation races the round and must still release pages + residual
+    snapshots cleanly at the next sweep."""
+    import jax
+
+    from repro.models import api
+    from repro.serve import (
+        FINISH_CANCELLED,
+        FINISH_EXPIRED,
+        Request,
+        ServingEngine,
+    )
+
+    cfg = tiny_cfg()
+    eng = ServingEngine(
+        api.init_model(jax.random.PRNGKey(0), cfg), cfg,
+        batch_size=SLOTS, ctx=CTX, page_size=PAGE, prefill_chunk=PAGE,
+        speculate=speculate,
+    )
+    eng._clock = lambda: float(eng.step_count)
+    rng = np.random.default_rng(seed)
+    live = []
+
+    def submit(max_new=None, **kw):
+        r = Request(
+            tokens=rng.integers(1, 90, size=int(rng.integers(2, 9))),
+            max_new_tokens=max_new or int(rng.integers(2, 8)), **kw,
+        )
+        eng.submit(r)
+        live.append(r)
+        return r
+
+    # the racer: cancels itself from inside the accept loop / update loop.
+    # Budget > one verify window so the round can't legitimately finish it
+    # by length first — the cancellation must win at the next sweep.
+    racer = submit(max_new=16)
+    racer.stream = lambda uid, tok: racer.cancel()
+    for _ in range(3):
+        submit()
+    submit(deadline_s=float(rng.integers(2, 6)))
+    for _ in range(40):
+        if not eng.has_work:
+            break
+        op = rng.choice(["step", "submit", "cancel", "expire_submit"])
+        if op == "submit" and len(live) < 12:
+            submit()
+        elif op == "expire_submit" and len(live) < 12:
+            submit(deadline_s=float(rng.integers(1, 5)))
+        elif op == "cancel" and live:
+            eng.cancel(live[int(rng.integers(len(live)))].uid)
+        eng.step()
+        _check(eng.pool)
+        eng.scheduler.check_invariants(eng.slots, len(eng.finished))
+    outs = eng.run()
+    _check(eng.pool)
+    # every submitted request terminated exactly once, with a known reason
+    assert sorted(o.uid for o in outs) == sorted(r.uid for r in live)
+    assert {o.finish_reason for o in outs} <= {
+        "eos", "length", FINISH_CANCELLED, FINISH_EXPIRED,
+    }
+    by_uid = {o.uid: o for o in outs}
+    assert by_uid[racer.uid].finish_reason == FINISH_CANCELLED
+    # drained engine: no slot holds pages, no holds outstanding — every
+    # page is free or pinned only by prefix entries
+    assert (np.asarray(eng.pool.n_mapped) == 0).all()
+    assert eng.pool.held == []
+    st = eng.stats()
+    assert st["cancelled"] >= 1.0
+
+
+_engine_sequences = property_cases(
+    "seed",
+    [(s,) for s in range(3)],
+    lambda st: dict(seed=st.integers(0, 2**31 - 1)),
+    max_examples=6,
+)
+
+
+@_engine_sequences
+def test_engine_cancel_expire_ops_keep_books_balanced(seed):
+    _drive_engine(seed, speculate=None)
+
+
+@_engine_sequences
+def test_engine_cancel_racing_speculative_verify_round(seed):
+    _drive_engine(seed, speculate=3)
 
 
 def test_prefix_registry_lru_bound_evicts_oldest():

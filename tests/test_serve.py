@@ -385,3 +385,31 @@ def test_engine_sharded_semantics_routed_telemetry():
     s = eng.stats()
     # full batch, 2 of 4 rows routed every step
     assert abs(s["mean_routed_frac"] - 0.5) < 1e-6
+
+
+def test_requeue_preempted_batch_does_not_outrank_latency():
+    """Regression: ``requeue`` restores a preempted request via
+    ``appendleft``, but deque position must not carry priority — admission
+    planning sorts by (priority class, original _seq). A preempted
+    batch-tier request therefore yields to queued latency-tier work, while
+    keeping its FCFS seniority over every later batch-tier arrival."""
+    sched = Scheduler(1, policy="fcfs")
+    b0, b1 = [
+        Request(tokens=np.asarray([1, 2]), max_new_tokens=2, uid=i)
+        for i in (0, 1)
+    ]
+    sched.submit(b0)
+    sched.submit(b1)
+    plans = sched.plan_admissions([Slot(0)], stepped_prefill=False)
+    assert [r.uid for _, r in plans] == [0]
+    lat = Request(tokens=np.asarray([1, 2]), max_new_tokens=2, uid=2,
+                  priority="latency")
+    sched.submit(lat)
+    sched.requeue(b0)  # preemption: b0 lands at the deque *head*
+    plans = sched.plan_admissions([Slot(0)], stepped_prefill=False)
+    assert [r.uid for _, r in plans] == [2], "deque head outranked latency"
+    plans = sched.plan_admissions([Slot(0)], stepped_prefill=False)
+    assert [r.uid for _, r in plans] == [0], "preemption cost b0 seniority"
+    plans = sched.plan_admissions([Slot(0)], stepped_prefill=False)
+    assert [r.uid for _, r in plans] == [1]
+    assert not sched.queue

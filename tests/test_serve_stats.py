@@ -143,3 +143,53 @@ def test_fraction_is_monotone_bookkeeping_not_a_rate(ragged):
         if len(eng.finished) == 3:
             break
     assert len(eng.finished) == 3
+
+
+def test_lifecycle_counters_present_and_monotone():
+    """shed / expired / cancelled / failed are always in stats() (zero on
+    a healthy engine), and only ever count up as requests leave through
+    the failure paths."""
+    eng = _engine()
+    st = eng.stats()
+    for k in ("shed", "expired", "cancelled", "failed"):
+        assert st[k] == 0.0
+    cfg = eng.cfg
+    a, b, c = _reqs(cfg, [4, 5, 6])
+    eng._clock = lambda: float(eng.step_count)
+    for r in (a, b, c):
+        eng.submit(r)
+    b.cancel()
+    eng.step()
+    st1 = eng.stats()
+    assert st1["cancelled"] == 1.0
+    # a queued cancellation is also a shed (left without a slot) when it
+    # never ran; b was cancelled pre-admission or post — either way the
+    # counter moved and nothing else did
+    assert st1["failed"] == 0.0 and st1["expired"] == 0.0
+    eng.run()
+    st2 = eng.stats()
+    for k in ("shed", "expired", "cancelled", "failed"):
+        assert st2[k] >= st1[k], f"{k} went backwards"
+    outs = {o.uid: o for o in eng.finished}
+    assert outs[b.uid].finish_reason == "cancelled"
+    assert outs[a.uid].ok and outs[c.uid].ok
+
+
+def test_expired_counter_and_failed_output_delivery():
+    """run() delivers expired requests' outputs like any other, with the
+    error surfaced on the RequestOutput."""
+    eng = _engine()
+    eng._clock = lambda: float(eng.step_count)
+    cfg = eng.cfg
+    ok_req, doomed = _reqs(cfg, [4, 5], max_new=6)
+    doomed = Request(tokens=doomed.tokens, max_new_tokens=6, deadline_s=2.0)
+    eng.submit(ok_req)
+    eng.submit(doomed)
+    outs = {o.uid: o for o in eng.run()}
+    assert outs[doomed.uid].finish_reason == "expired"
+    assert not outs[doomed.uid].ok
+    assert "deadline" in outs[doomed.uid].error
+    assert outs[ok_req.uid].ok
+    st = eng.stats()
+    assert st["expired"] == 1.0
+    assert st["shed"] == 0.0 or st["shed"] == 1.0  # queued vs mid-decode
