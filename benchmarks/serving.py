@@ -36,9 +36,15 @@ import jax
 import numpy as np
 
 from benchmarks.common import flops_per_token_fwd, tiny_config
-from repro.config import with_mod_backend
+from repro.config import MoEConfig, with_mod_backend
 from repro.models import api
-from repro.serve import Request, ServingEngine
+from repro.serve import (
+    EngineConfig,
+    QuantConfig,
+    Request,
+    ServingEngine,
+    add_engine_args,
+)
 from repro.train.serve import greedy_generate
 
 SMOKE = dict(slots=4, prompt_len=8, gen=8, requests=6, arrivals=(0, 2))
@@ -68,6 +74,13 @@ OVERLOAD_SMOKE = dict(slots=4, prompt_len=8, gen=6, requests=28,
                       loads=(0.3, 2.0))
 OVERLOAD_FULL = dict(slots=8, prompt_len=8, gen=8, requests=64,
                      loads=(0.25, 0.75, 2.0))
+# Quantized-KV sweep (PR 9): a closed greedy batch (requests == slots, all
+# admitted upfront, so decode steps align row-for-row with the fp32 twin)
+# measured for KV-memory ratio and accuracy drift. Drift is measured via
+# EngineConfig.logit_tap — the engine hands every decode step's (B, V)
+# logits to the probe, no sampling-path changes.
+QUANT_SMOKE = dict(slots=4, prompt_len=8, gen=12)
+QUANT_FULL = dict(slots=8, prompt_len=16, gen=16)
 
 
 def _prompts(n: int, s0: int, vocab: int, seed: int = 7) -> np.ndarray:
@@ -511,8 +524,78 @@ def overload_latency_identity(cfg, params, slots, prompt_len, gen, page_size,
     }
 
 
+def quant_sweep(cfg, params, slots, prompt_len, gen, page_size,
+                quant_kv, quant_scale) -> Dict[str, float]:
+    """One quantized-KV point vs its fp32 twin on the same closed batch.
+
+    Reports the tentpole's acceptance numbers: ``kv_bytes_ratio`` (fp32
+    pool KV bytes over quantized — narrow pages + f32 scales), drift as
+    ``logit_mad`` (mean |Δlogit| over decode steps where the greedy
+    streams still agree — once a token flips the inputs differ and the
+    comparison stops being about quantization) and ``token_flip_rate``
+    (per request, the fraction of generated tokens past the first
+    divergence), plus ``quant_identity``: the quantized xla and pallas
+    paged backends must produce bit-identical streams (the fused-dequant
+    kernels against the dequantize-then-reference path).
+    """
+    prompts = _prompts(slots, prompt_len, cfg.vocab, seed=3)
+    ctx = prompt_len + gen
+
+    def go(quant, tap=None, paged_backend="xla"):
+        eng = ServingEngine(params, cfg, engine=EngineConfig(
+            batch_size=slots, ctx=ctx, page_size=page_size,
+            prefill_chunk=page_size, paged_backend=paged_backend,
+            quant=quant, logit_tap=tap,
+        ))
+        outs = eng.run_stream(
+            [Request(tokens=prompts[i], max_new_tokens=gen)
+             for i in range(slots)], 0)
+        return eng, {o.uid: list(o.tokens) for o in outs}, outs
+
+    taps_f: List[np.ndarray] = []
+    taps_q: List[np.ndarray] = []
+    eng_f, gen_f, _ = go(QuantConfig(), tap=lambda l: taps_f.append(l.copy()))
+    qc = QuantConfig(kv=quant_kv, granularity=quant_scale)
+    eng_q, gen_q, outs_q = go(qc, tap=lambda l: taps_q.append(l.copy()))
+    _, gen_p, _ = go(qc, paged_backend="pallas")
+
+    # drift: common greedy prefix per request; logit MAD only over
+    # (step, row) pairs whose token history still matches the fp32 twin
+    prefix = {u: 0 for u in gen_f}
+    for u in gen_f:
+        a, b = gen_f[u], gen_q[u]
+        n = 0
+        while n < min(len(a), len(b)) and a[n] == b[n]:
+            n += 1
+        prefix[u] = n
+    flip = float(np.mean([1.0 - prefix[u] / max(1, len(gen_f[u]))
+                          for u in gen_f]))
+    mad_sum = mad_n = 0.0
+    for t in range(min(len(taps_f), len(taps_q))):
+        for u in gen_f:  # closed batch: uid u sits in slot u every step
+            if prefix[u] > t:  # tokens 0..t matched; tap t emits token t+1
+                mad_sum += float(np.abs(taps_f[t][u] - taps_q[t][u]).mean())
+                mad_n += 1
+    sf, sq = eng_f.stats(), eng_q.stats()
+    m = _measure(eng_q, outs_q)
+    m.update(
+        quant_kv=quant_kv,
+        quant_scale=quant_scale,
+        kv_bytes=sq["kv_bytes"],
+        resid_bytes=sq["resid_bytes"],
+        kv_bytes_per_token=sq["kv_bytes"] / float(slots * ctx),
+        kv_bytes_ratio=sf["kv_bytes"] / sq["kv_bytes"],
+        logit_mad=mad_sum / mad_n if mad_n else 0.0,
+        token_flip_rate=flip,
+        quant_identity=float(gen_q == gen_p),
+    )
+    assert gen_q == gen_p, "quantized xla and pallas streams differ"
+    return m
+
+
 def run(smoke: bool = False, backend: str = "xla", page_size: int = 4,
-        prefix_cache: bool = True, ragged: bool = True) -> List[Dict]:
+        prefix_cache: bool = True, ragged: bool = True,
+        quant_kv: str = "int8", quant_scale: str = "page") -> List[Dict]:
     p = dict(SMOKE if smoke else FULL)
     arrivals = p.pop("arrivals")
     models = {
@@ -607,6 +690,23 @@ def run(smoke: bool = False, backend: str = "xla", page_size: int = 4,
                 rows.append({"model": f"{name}-overload-latency-identity",
                              "backend": backend, "arrival_every": 0,
                              "page_size": page_size, **m})
+    if page_size and quant_kv != "none":
+        # quantized paged KV (ROADMAP item 3): narrow pages + pow2 scales,
+        # dequantized in-kernel. One cell per family — dense, MoE, and MoD
+        # (whose full-attention KV rings quantize; its routed rings are
+        # already capacity-sized and stay fp32)
+        qp = dict(QUANT_SMOKE if smoke else QUANT_FULL)
+        moe_cfg = tiny_config(mod=True, moe=MoEConfig(
+            enabled=True, n_experts=4, top_k=2, d_ff_expert=128))
+        qfams = {"mod": models["mod"], "dense": models["dense"],
+                 "moe": moe_cfg}
+        for name, qcfg in qfams.items():
+            qparams = api.init_model(jax.random.PRNGKey(0), qcfg)
+            m = quant_sweep(qcfg, qparams, page_size=page_size,
+                            quant_kv=quant_kv, quant_scale=quant_scale, **qp)
+            rows.append({"model": f"{name}-quant-{quant_kv}",
+                         "backend": backend, "arrival_every": 0,
+                         "page_size": page_size, **qp, **m})
     return rows
 
 
@@ -631,7 +731,10 @@ def log_perf(rows: List[Dict], out: str) -> None:
                   "p99_latency_cost", "p50_latency_cost",
                   "completed", "offered", "rejected", "shed", "expired",
                   "failed", "degraded_decode_steps", "capacity_level_max",
-                  "capacity_level_changes", "latency_identical")
+                  "capacity_level_changes", "latency_identical",
+                  "quant_kv", "quant_scale", "kv_bytes", "resid_bytes",
+                  "kv_bytes_per_token", "kv_bytes_ratio", "logit_mad",
+                  "token_flip_rate", "quant_identity")
     for r in rows:
         if "offered_load" in r:
             load = f"load{r['offered_load']:g}"
@@ -642,11 +745,19 @@ def log_perf(rows: List[Dict], out: str) -> None:
         mixed = "-mixed-" in model
         spec = "-spec-" in model
         over = "-overload-" in model
+        quant = "-quant-" in model
         log.append({
             "cell": "S:serving",
             "name": f"{r['model']}-{load}",
             "backend": r.get("backend", "xla"),
             "hypothesis": (
+                "quantized paged KV: int8/fp8 pages with per-row pow2 "
+                "scales, dequantized inside the paged gather/attention "
+                "kernels (never round-tripped through HBM at full width), "
+                "cut pool KV bytes >= 1.7x vs the fp32 twin at bounded "
+                "greedy drift (logit MAD, token-flip rate), with the "
+                "quantized xla and pallas backends bit-identical."
+                if quant else
                 "overload control: bounded queue + deadlines + an adaptive "
                 "MoD capacity/admission ladder keep tail latency flat as "
                 "offered load passes capacity — the adaptive curve's p99 "
@@ -692,9 +803,11 @@ def log_perf(rows: List[Dict], out: str) -> None:
 def main(
     smoke: bool = False, out: str = "results/perf_log.json", backend: str = "xla",
     page_size: int = 4, prefix_cache: bool = True, ragged: bool = True,
+    quant_kv: str = "int8", quant_scale: str = "page",
 ) -> List[str]:
     rows = run(smoke=smoke, backend=backend, page_size=page_size,
-               prefix_cache=prefix_cache, ragged=ragged)
+               prefix_cache=prefix_cache, ragged=ragged,
+               quant_kv=quant_kv, quant_scale=quant_scale)
     log_perf(rows, out)
     lines = []
     for r in rows:
@@ -742,6 +855,12 @@ def main(
                 f"serving/{r['model']}_identical,{r['latency_identical']:.0f},"
                 f"latency tier bit-identical under adaptive overload"
             )
+        if "kv_bytes_ratio" in r:
+            lines.append(
+                f"serving/{r['model']}_kv_ratio,{r['kv_bytes_ratio']:.2f},"
+                f"flip={r['token_flip_rate']:.3f} mad={r['logit_mad']:.4f} "
+                f"xla==pallas={r['quant_identity']:.0f}"
+            )
     mod = [r for r in rows if r["model"] == "mod" and r["arrival_every"] == 0]
     den = [r for r in rows if r["model"] == "dense" and r["arrival_every"] == 0]
     if mod and den and den[0]["tokens_per_s"]:
@@ -760,16 +879,16 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "pallas_fused"],
                     help="MoD dispatch backend for the mod model's sweeps")
-    ap.add_argument("--page-size", type=int, default=4,
-                    help="KV-page size for the paged-pool sweep (0 disables)")
-    ap.add_argument("--prefix-cache", dest="prefix_cache", action="store_true",
-                    default=True, help="prefix cache in the paged sweep (default on)")
+    # engine flags (--page-size/--prefix-cache/--ragged/--quant-kv...) come
+    # from the shared repro.serve.add_engine_args group — the same surface
+    # launch/serve.py exposes — with benchmark-appropriate defaults
+    add_engine_args(ap)
+    ap.set_defaults(page_size=4, prefix_cache=True, ragged=True,
+                    quant_kv="int8")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache", action="store_false")
-    ap.add_argument("--ragged", dest="ragged", action="store_true", default=True,
-                    help="mixed prefill+decode sweep: ragged vs padded engine "
-                         "rows (default on; needs --page-size > 0)")
     ap.add_argument("--no-ragged", dest="ragged", action="store_false")
     a = ap.parse_args()
     print("\n".join(main(smoke=a.smoke, out=a.out, backend=a.backend,
                          page_size=a.page_size, prefix_cache=a.prefix_cache,
-                         ragged=a.ragged)))
+                         ragged=a.ragged, quant_kv=a.quant_kv,
+                         quant_scale=a.quant_scale)))

@@ -157,6 +157,12 @@ def check_structure(cells: List[Dict]) -> List[str]:
     # with a +2-step allowance: the degraded per-wave admission budget
     # may delay a batch-tier admission by a step when slots free together.
     errors += check_overload_claim(cells)
+    # quantized-KV cells (PR 9+): the int8/fp8 paged-KV sweep must exist
+    # for all three model families, and the tentpole acceptance criteria
+    # hold per cell: pool KV bytes shrink >= 1.7x vs the fp32 twin, greedy
+    # drift stays bounded, and the quantized xla and pallas backends are
+    # bit-identical (the fused-dequant kernels against the reference path).
+    errors += check_quant_claim(cells)
     return errors
 
 
@@ -239,6 +245,67 @@ def check_overload_claim(cells: List[Dict],
     return errors
 
 
+def check_quant_claim(cells: List[Dict],
+                      min_kv_ratio: float = 1.7,
+                      max_flip_rate: float = 0.25) -> List[str]:
+    """The quantized-paged-KV acceptance criteria, gated structurally.
+
+    ``min_kv_ratio`` is the tentpole's memory bound: fp32 pool KV bytes
+    over quantized (narrow pages + f32 scales; int8 measures ~3.9x at
+    page_size 4). ``max_flip_rate`` bounds greedy drift — the measured
+    smoke/full rates are 0.0, so 0.25 is a loose cap that still catches a
+    broken quantizer (random logits flip ~every token). Identity and the
+    once-compiled contract are exact.
+    """
+    errors = []
+    quant = [e for e in cells
+             if str(e.get("cell")) == SERVING_CELL
+             and "-quant-" in str(e.get("name", ""))]
+    if not quant:
+        return [f"no quantized {SERVING_CELL} cells in snapshot "
+                "(benchmarks/serving.py quant_sweep)"]
+    for fam in ("mod", "dense", "moe"):
+        if not any(str(e.get("name", "")).startswith(f"{fam}-quant-")
+                   for e in quant):
+            errors.append(f"no {fam}-quant-* {SERVING_CELL} cell in snapshot")
+    for e in quant:
+        name = e.get("name")
+        missing = [k for k in ("quant_kv", "quant_scale", "kv_bytes",
+                               "resid_bytes", "kv_bytes_per_token",
+                               "kv_bytes_ratio", "logit_mad",
+                               "token_flip_rate", "quant_identity")
+                   if k not in e]
+        for k in missing:
+            errors.append(f"{SERVING_CELL}/{name}: missing {k}")
+        if missing:
+            continue
+        ratio = float(e["kv_bytes_ratio"])
+        if ratio < min_kv_ratio:
+            errors.append(
+                f"{SERVING_CELL}/{name}: kv_bytes_ratio {ratio:.3f} < "
+                f"{min_kv_ratio:g} (quantized pool must cut KV bytes)"
+            )
+        flip = float(e["token_flip_rate"])
+        if flip > max_flip_rate:
+            errors.append(
+                f"{SERVING_CELL}/{name}: token_flip_rate {flip:.3f} > "
+                f"{max_flip_rate:g} (quantization drift out of bounds)"
+            )
+        if float(e["quant_identity"]) != 1.0:
+            errors.append(
+                f"{SERVING_CELL}/{name}: quant_identity "
+                f"{e['quant_identity']} != 1.0 (quantized xla and pallas "
+                "streams must be bit-identical)"
+            )
+        dc = e.get("decode_compilations")
+        if dc is not None and float(dc) > 1:
+            errors.append(
+                f"{SERVING_CELL}/{name}: decode_compilations {dc} > 1 "
+                "(the quantized decode step must trace at most once)"
+            )
+    return errors
+
+
 def check_fused_claim(cells: List[Dict]) -> List[str]:
     """The dispatch-fusion acceptance criterion, gated structurally."""
     errors = []
@@ -304,6 +371,10 @@ def check_regression(
                 continue
             if metric not in base:
                 report.append(f" new  {label}  {metric} (not in baseline)")
+                continue
+            # a null metric (e.g. p95 latency on a cell with no finished
+            # latency-tier requests) is "not measured", not a regression
+            if e[metric] is None or base[metric] is None:
                 continue
             now, then = float(e[metric]), float(base[metric])
             if then <= 0:

@@ -77,6 +77,11 @@ python -m pytest -x -q tests/test_routing_backends.py -k "fused"
 python -m pytest -x -q tests/test_paged.py -k "kernels"
 # ragged flat-token kernels (interpret=True) vs their dense oracles
 python -m pytest -x -q tests/test_ragged.py
+# quantized-KV layer: pow2 scale math + fused-dequant kernel oracles, and
+# the engine's quantized xla==pallas identity smoke (the fused in-kernel
+# dequant against the reference dequant path must stream identical bits)
+python -m pytest -x -q tests/test_quant.py \
+  -k "pow2 or idempotent or kernels or oracle or xla_pallas"
 stage_done backends $((SECONDS - STAGE_T0))
 
 stage spmd

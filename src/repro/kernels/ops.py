@@ -117,31 +117,75 @@ def _uncanon(out, rest, page_axis, merged_axes=2):
     return o.transpose(perm)
 
 
+def _canon_rows(rows, page_axis):
+    """lead + (B,) + tail -> (B, F), matching _canon_pages' fold order."""
+    nlead = page_axis
+    rperm = (page_axis,) + tuple(range(nlead)) + tuple(range(page_axis + 1, rows.ndim))
+    return rows.transpose(rperm).reshape(rows.shape[page_axis], -1)
+
+
 def paged_gather_op(
-    pages, table, *, page_axis=0, backend="xla", interpret=None
+    pages, table, *, page_axis=0, backend="xla", interpret=None,
+    scales=None, out_dtype=None,
 ):
-    """Materialize logical (B, ctx) views from a paged leaf + page table."""
-    if backend == "xla":
-        return _pg.paged_gather_xla(pages, table, page_axis)
-    interp = on_cpu() if interpret is None else interpret
+    """Materialize logical (B, ctx) views from a paged leaf + page table.
+
+    With ``scales`` (canonical ``(N, p, G)`` f32, quantized leaf) the
+    gather dequantizes: the pallas path fuses the widen into the kernel
+    (VMEM), the xla path gathers narrow + scales and applies the same
+    block multiply — bit-identical outputs, cast to ``out_dtype``.
+    """
+    if scales is None:
+        if backend == "xla":
+            return _pg.paged_gather_xla(pages, table, page_axis)
+        interp = on_cpu() if interpret is None else interpret
+        canon, rest = _canon_pages(pages, page_axis)
+        out = _pg.paged_gather_pallas(canon, table, interpret=interp)  # (B, P*p, F)
+        return _uncanon(out, rest, page_axis)
     canon, rest = _canon_pages(pages, page_axis)
-    out = _pg.paged_gather_pallas(canon, table, interpret=interp)  # (B, P*p, F)
+    if backend == "xla":
+        out = _pg.paged_gather_dequant_xla(canon, scales, table)
+    else:
+        interp = on_cpu() if interpret is None else interpret
+        out = _pg.paged_gather_dequant_pallas(canon, scales, table, interpret=interp)
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
     return _uncanon(out, rest, page_axis)
 
 
 def paged_scatter_rows_op(
-    pages, table, rows, pos, *, page_axis=0, backend="xla", interpret=None
+    pages, table, rows, pos, *, page_axis=0, backend="xla", interpret=None,
+    scales=None, quant=None,
 ):
-    """Scatter one decode row per slot into its tail page."""
-    if backend == "xla":
-        return _pg.paged_scatter_rows_xla(pages, table, rows, pos, page_axis)
-    interp = on_cpu() if interpret is None else interpret
+    """Scatter one decode row per slot into its tail page.
+
+    With ``scales``/``quant`` the incoming (full-width) rows are
+    quantized against fresh per-row pow2 scales and both the narrow rows
+    and their scales are scattered to the same page targets; returns
+    ``(new_pages, new_scales)``. The scales array is just another
+    canonical pages array (F = G), so both backends reuse the plain
+    scatter kernels.
+    """
+    if scales is None:
+        if backend == "xla":
+            return _pg.paged_scatter_rows_xla(pages, table, rows, pos, page_axis)
+        interp = on_cpu() if interpret is None else interpret
+        canon, rest = _canon_pages(pages, page_axis)
+        rcanon = _canon_rows(rows, page_axis)  # (B, F)
+        out = _pg.paged_scatter_rows_pallas(canon, table, rcanon, pos, interpret=interp)
+        return _uncanon(out, rest, page_axis)
+    from repro.serve.quant import quantize_rows
+
     canon, rest = _canon_pages(pages, page_axis)
-    nlead = page_axis
-    rperm = (page_axis,) + tuple(range(nlead)) + tuple(range(page_axis + 1, rows.ndim))
-    rcanon = rows.transpose(rperm).reshape(rows.shape[page_axis], -1)  # (B, F)
-    out = _pg.paged_scatter_rows_pallas(canon, table, rcanon, pos, interpret=interp)
-    return _uncanon(out, rest, page_axis)
+    qrows, rscales = quantize_rows(_canon_rows(rows, page_axis), scales.shape[-1], quant)
+    if backend == "xla":
+        new_p = _pg.paged_scatter_rows_xla(canon, table, qrows, pos)
+        new_s = _pg.paged_scatter_rows_xla(scales, table, rscales, pos)
+    else:
+        interp = on_cpu() if interpret is None else interpret
+        new_p = _pg.paged_scatter_rows_pallas(canon, table, qrows, pos, interpret=interp)
+        new_s = _pg.paged_scatter_rows_pallas(scales, table, rscales, pos, interpret=interp)
+    return _uncanon(new_p, rest, page_axis), new_s
 
 
 # ---------------------------------------------------------------------------
@@ -158,14 +202,17 @@ def paged_scatter_rows_op(
 def ragged_attention_op(
     q, k_pages, v_pages, pos_pages, table, row_offsets, seg_slot, q_pos, *,
     seg_cap, causal=True, window=0, scale=None, interpret=None,
+    k_scales=None, v_scales=None,
 ):
     """Ragged paged flash attention: flat query stream, K/V straight out of
-    the block-paged pool via per-slot page tables (scalar-prefetch grid)."""
+    the block-paged pool via per-slot page tables (scalar-prefetch grid).
+    With ``k_scales``/``v_scales`` ((N, p, nkv) f32) the pages are narrow
+    (int8/fp8) and dequantization is fused into the kernel."""
     interp = on_cpu() if interpret is None else interpret
     return _rg.ragged_paged_flash_attention(
         q, k_pages, v_pages, pos_pages, table, row_offsets, seg_slot, q_pos,
         seg_cap=seg_cap, causal=causal, window=window, scale=scale,
-        interpret=interp,
+        interpret=interp, k_scales=k_scales, v_scales=v_scales,
     )
 
 
@@ -184,20 +231,35 @@ def ragged_scatter_add_rows_op(x, idx, delta, gate, *, interpret=None):
 def ragged_paged_scatter_rows_op(
     pages, table, rows, slot, pos, valid, *,
     page_axis=0, backend="xla", dump_page=1, interpret=None,
+    scales=None, quant=None,
 ):
     """Mixed-step write-back: W token rows (decode + prefill) into their
-    slots' pages in one pass; invalid rows land on ``dump_page``."""
+    slots' pages in one pass; invalid rows land on ``dump_page``. With
+    ``scales``/``quant`` the rows are quantized and the per-row scales
+    scattered to the same (pid, off) targets; returns
+    ``(new_pages, new_scales)``."""
     p = pages.shape[page_axis + 1]
     pid, off = _rg.ragged_page_targets(table, slot, pos, valid, p, dump_page)
-    if backend == "xla":
-        return _rg.ragged_paged_scatter_rows_xla(pages, pid, off, rows, page_axis)
-    interp = on_cpu() if interpret is None else interpret
+    if scales is None:
+        if backend == "xla":
+            return _rg.ragged_paged_scatter_rows_xla(pages, pid, off, rows, page_axis)
+        interp = on_cpu() if interpret is None else interpret
+        canon, rest = _canon_pages(pages, page_axis)
+        rcanon = _canon_rows(rows, page_axis)  # (W, F)
+        out = _rg.ragged_paged_scatter_rows_pallas(canon, pid, off, rcanon, interpret=interp)
+        return _uncanon(out, rest, page_axis)
+    from repro.serve.quant import quantize_rows
+
     canon, rest = _canon_pages(pages, page_axis)
-    nlead = page_axis
-    rperm = (page_axis,) + tuple(range(nlead)) + tuple(range(page_axis + 1, rows.ndim))
-    rcanon = rows.transpose(rperm).reshape(rows.shape[page_axis], -1)  # (W, F)
-    out = _rg.ragged_paged_scatter_rows_pallas(canon, pid, off, rcanon, interpret=interp)
-    return _uncanon(out, rest, page_axis)
+    qrows, rscales = quantize_rows(_canon_rows(rows, page_axis), scales.shape[-1], quant)
+    if backend == "xla":
+        new_p = _rg.ragged_paged_scatter_rows_xla(canon, pid, off, qrows)
+        new_s = _rg.ragged_paged_scatter_rows_xla(scales, pid, off, rscales)
+    else:
+        interp = on_cpu() if interpret is None else interpret
+        new_p = _rg.ragged_paged_scatter_rows_pallas(canon, pid, off, qrows, interpret=interp)
+        new_s = _rg.ragged_paged_scatter_rows_pallas(scales, pid, off, rscales, interpret=interp)
+    return _uncanon(new_p, rest, page_axis), new_s
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))

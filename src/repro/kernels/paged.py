@@ -106,6 +106,58 @@ def paged_gather_pallas(
     return out.reshape(B, P * p, F)
 
 
+def _gather_dequant_kernel(tbl_ref, page_ref, scale_ref, o_ref):
+    # fused dequant: the narrow page is widened in VMEM right after the DMA
+    # — quantized KV never crosses HBM at full width. The block multiply is
+    # the same expression the xla reference uses (serve/quant.dequant_rows),
+    # so both backends produce identical bits.
+    from repro.serve.quant import dequant_rows
+
+    o_ref[0, 0] = dequant_rows(page_ref[0], scale_ref[0])
+
+
+def paged_gather_dequant_pallas(
+    pages: jax.Array,  # (N, p, F) narrow (int8 | fp8)
+    scales: jax.Array,  # (N, p, G) f32 per-row(-block) scales
+    table: jax.Array,  # (B, P) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:  # (B, P*p, F) f32
+    N, p, F = pages.shape
+    G = scales.shape[-1]
+    B, P = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, p, F), lambda b, i, tbl: (tbl[b, i], 0, 0)),
+            pl.BlockSpec((1, p, G), lambda b, i, tbl: (tbl[b, i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, p, F), lambda b, i, tbl: (b, i, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, P, p, F), jnp.float32),
+        interpret=interpret,
+    )(table, pages, scales)
+    return out.reshape(B, P * p, F)
+
+
+def paged_gather_dequant_xla(
+    pages: jax.Array,  # (N, p, F) narrow
+    scales: jax.Array,  # (N, p, G) f32
+    table: jax.Array,  # (B, P) int32
+) -> jax.Array:  # (B, P*p, F) f32
+    """XLA reference of the fused-dequant gather: gather narrow pages and
+    their scales, widen with the shared block multiply."""
+    from repro.serve.quant import dequant_rows
+
+    return dequant_rows(
+        paged_gather_xla(pages, table), paged_gather_xla(scales, table)
+    )
+
+
 def _scatter_kernel(pid_ref, off_ref, rows_ref, page_ref, o_ref, *, n_slots: int):
     n = pl.program_id(0)
     o_ref[...] = page_ref[...]

@@ -123,6 +123,80 @@ def _ragged_flash_kernel(
         o_ref[0, 0, :, :] = (acc_ref[...] / l_fin[:, None]).astype(o_ref.dtype)
 
 
+def _ragged_flash_quant_kernel(
+    offs_ref,  # (n_seg+1,) scalar-prefetch
+    slot_ref,  # (n_seg,)   scalar-prefetch
+    tbl_ref,  # (B, P)      scalar-prefetch
+    qpos_ref,  # (1, T+C)
+    q_ref,  # (1, T+C, 1, hd)
+    kpos_ref,  # (1, p)
+    k_ref,  # (1, p, 1, hd) narrow (int8 | fp8)
+    ks_ref,  # (1, p, 1) f32 per-(page-row, kv-head) scales
+    v_ref,  # (1, p, 1, hd) narrow
+    vs_ref,  # (1, p, 1) f32
+    o_ref,  # (1, 1, C, hd)
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    n_pages: int,
+    seg_cap: int,
+):
+    """`_ragged_flash_kernel` with fused dequantization: the narrow K/V
+    page is widened in VMEM right after the DMA (one f32 scale per page
+    row per kv head — the same multiply the quantized oracle uses), so
+    quantized KV never crosses HBM at full width."""
+    s_id = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    start = offs_ref[s_id]
+    seg_len = offs_ref[s_id + 1] - start
+    q = q_ref[0, pl.dslice(start, seg_cap), 0, :].astype(jnp.float32)  # (C, hd)
+    qp = qpos_ref[0, pl.dslice(start, seg_cap)]  # (C,)
+    kp = kpos_ref[0]  # (p,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, :, 0][:, None]  # (p, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (C, p)
+    in_seg = jax.lax.broadcasted_iota(jnp.int32, (seg_cap, k.shape[0]), 0) < seg_len
+    valid = in_seg & (kp[None, :] >= 0) & (qp[:, None] >= 0)
+    if causal:
+        valid &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        valid &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_safe = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_safe), 0.0)
+    l_new = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+
+    @pl.when(i == n_pages - 1)
+    def _finish():
+        l_fin = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l_fin[:, None]).astype(o_ref.dtype)
+
+
 def flat_segment_ids(row_offsets: jax.Array, total: int) -> jax.Array:
     """seg_id[t] for every flat row: the segment owning token t (rows past
     ``row_offsets[-1]`` map to the last segment; callers mask them)."""
@@ -148,12 +222,16 @@ def ragged_paged_flash_attention(
     window: int = 0,
     scale: Optional[float] = None,
     interpret: bool = False,
+    k_scales: Optional[jax.Array] = None,  # (N, p, nkv) f32 — quantized KV
+    v_scales: Optional[jax.Array] = None,
 ) -> jax.Array:  # (T, nq, hd); rows past row_offsets[-1] are zero
     T, nq, hd = q.shape
     N, p, nkv, _ = k_pages.shape
     B, P = table.shape
     n_seg = row_offsets.shape[0] - 1
     assert nq % nkv == 0
+    assert (k_scales is None) == (v_scales is None)
+    quant = k_scales is not None
     scale = scale if scale is not None else 1.0 / (hd**0.5)
     C = int(seg_cap)
 
@@ -162,28 +240,40 @@ def ragged_paged_flash_attention(
     qp2 = jnp.pad(q_pos.astype(jnp.int32), (0, C), constant_values=-1)[None]
     qf = jnp.pad(q, ((0, C), (0, 0), (0, 0)))[None]  # (1, T+C, nq, hd)
 
+    kv_spec = pl.BlockSpec(
+        (1, p, 1, hd),
+        lambda s, h, i, offs, slot, tbl, _nkv=nkv, _nq=nq: (
+            tbl[slot[s], i], 0, h * _nkv // _nq, 0,
+        ),
+    )
+    sc_spec = pl.BlockSpec(
+        (1, p, 1),
+        lambda s, h, i, offs, slot, tbl, _nkv=nkv, _nq=nq: (
+            tbl[slot[s], i], 0, h * _nkv // _nq,
+        ),
+    )
+    in_specs = [
+        pl.BlockSpec((1, T + C), lambda s, h, i, offs, slot, tbl: (0, 0)),
+        pl.BlockSpec((1, T + C, 1, hd), lambda s, h, i, offs, slot, tbl: (0, 0, h, 0)),
+        pl.BlockSpec(
+            (1, p), lambda s, h, i, offs, slot, tbl: (tbl[slot[s], i], 0)
+        ),
+        kv_spec,
+        *([sc_spec] if quant else []),
+        kv_spec,
+        *([sc_spec] if quant else []),
+    ]
+    operands = [pos_pages, k_pages]
+    if quant:
+        operands.append(k_scales.astype(jnp.float32))
+    operands.append(v_pages)
+    if quant:
+        operands.append(v_scales.astype(jnp.float32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(n_seg, nq, P),
-        in_specs=[
-            pl.BlockSpec((1, T + C), lambda s, h, i, offs, slot, tbl: (0, 0)),
-            pl.BlockSpec((1, T + C, 1, hd), lambda s, h, i, offs, slot, tbl: (0, 0, h, 0)),
-            pl.BlockSpec(
-                (1, p), lambda s, h, i, offs, slot, tbl: (tbl[slot[s], i], 0)
-            ),
-            pl.BlockSpec(
-                (1, p, 1, hd),
-                lambda s, h, i, offs, slot, tbl, _nkv=nkv, _nq=nq: (
-                    tbl[slot[s], i], 0, h * _nkv // _nq, 0,
-                ),
-            ),
-            pl.BlockSpec(
-                (1, p, 1, hd),
-                lambda s, h, i, offs, slot, tbl, _nkv=nkv, _nq=nq: (
-                    tbl[slot[s], i], 0, h * _nkv // _nq, 0,
-                ),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, C, hd), lambda s, h, i, offs, slot, tbl: (s, h, 0, 0)),
         scratch_shapes=[
             _vmem((C, hd), jnp.float32),
@@ -192,7 +282,7 @@ def ragged_paged_flash_attention(
         ],
     )
     kernel = functools.partial(
-        _ragged_flash_kernel,
+        _ragged_flash_quant_kernel if quant else _ragged_flash_kernel,
         scale=float(scale), causal=bool(causal), window=int(window),
         n_pages=P, seg_cap=C,
     )
@@ -203,7 +293,7 @@ def ragged_paged_flash_attention(
         out_shape=jax.ShapeDtypeStruct((n_seg, nq, C, hd), q.dtype),
         interpret=interpret,
     )(row_offsets.astype(jnp.int32), seg_slot.astype(jnp.int32),
-      table.astype(jnp.int32), qp2, qf, pos_pages, k_pages, v_pages)
+      table.astype(jnp.int32), qp2, qf, *operands)
 
     # scatter the (n_seg, C) segment rows back onto the flat stream
     seg_id = flat_segment_ids(row_offsets, T)

@@ -136,6 +136,88 @@ def paged_scatter_rows_ref(
 
 
 # ---------------------------------------------------------------------------
+# Quantized-KV oracles (serve/quant.py + the fused-dequant kernels):
+# numpy re-derivations of the pow2 scale scheme and the widen-on-gather
+# path, independent of the jnp/bitcast formulation they validate.
+# ---------------------------------------------------------------------------
+
+
+def pow2_scale_ref(absmax, qmax: float):
+    """Smallest normal power of two >= absmax/qmax (numpy mirror of
+    serve/quant.pow2_scale's exponent-field arithmetic)."""
+    import numpy as np
+
+    r = np.atleast_1d(np.asarray(absmax, np.float32) / np.float32(qmax))
+    bits = r.view(np.uint32)
+    exp = ((bits >> 23) & 0xFF).astype(np.int32) - 127
+    frac = (bits & 0x7FFFFF) != 0
+    e = np.clip(exp + frac.astype(np.int32), -126, 127)
+    s = (((e + 127).astype(np.uint32)) << 23).view(np.float32)
+    s = np.where(r > 0, s, np.float32(1.0))
+    return s.reshape(np.shape(absmax))
+
+
+def quantize_rows_ref(x, n_groups: int, kind: str):
+    """(q, scales) for canonical rows (..., F) with per-block pow2 scales."""
+    import numpy as np
+
+    qmax = 127.0 if kind == "int8" else 448.0
+    xf = np.asarray(x, np.float32)
+    xb = xf.reshape(xf.shape[:-1] + (n_groups, -1))
+    s = pow2_scale_ref(np.max(np.abs(xb), axis=-1), qmax)
+    y = xb / s[..., None]
+    if kind == "int8":
+        q = np.clip(np.rint(y), -qmax, qmax).astype(np.int8).reshape(xf.shape)
+        return jnp.asarray(q), jnp.asarray(s)
+    q = jnp.asarray(np.clip(y, -qmax, qmax).reshape(xf.shape))
+    return q.astype(jnp.float8_e4m3fn), jnp.asarray(s)
+
+
+def dequantize_rows_ref(q, scales):
+    """Widen canonical rows (..., F) narrow + (..., G) scales -> f32."""
+    import numpy as np
+
+    qf = np.asarray(jnp.asarray(q).astype(jnp.float32))
+    s = np.asarray(scales, np.float32)
+    yb = qf.reshape(qf.shape[:-1] + (s.shape[-1], -1)) * s[..., None]
+    return jnp.asarray(yb.reshape(qf.shape))
+
+
+def paged_gather_dequant_ref(pages: jax.Array, scales: jax.Array,
+                             table: jax.Array) -> jax.Array:
+    """Fused-dequant gather oracle: gather narrow pages (N,p,F) and their
+    scales (N,p,G) page by page, then widen block-wise."""
+    return dequantize_rows_ref(
+        paged_gather_ref(pages, table), paged_gather_ref(scales, table)
+    )
+
+
+def ragged_attention_quant_ref(
+    q: jax.Array,  # (T, nq, hd) flat query stream
+    k_pages: jax.Array,  # (N, p, nkv, hd) narrow
+    k_scales: jax.Array,  # (N, p, nkv) f32
+    v_pages: jax.Array,
+    v_scales: jax.Array,
+    pos_pages: jax.Array,
+    table: jax.Array,
+    row_offsets: jax.Array,
+    seg_slot: jax.Array,
+    q_pos: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Quantized ragged-attention oracle: widen every KV page with its
+    per-(page, row, kv-head) scale, then delegate to the fp32 oracle."""
+    kf = k_pages.astype(jnp.float32) * k_scales[..., None]
+    vf = v_pages.astype(jnp.float32) * v_scales[..., None]
+    return ragged_attention_ref(
+        q, kf, vf, pos_pages, table, row_offsets, seg_slot, q_pos,
+        causal=causal, window=window, scale=scale,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Ragged flat-token oracles (kernels/ragged.py): literal per-segment /
 # per-row loops over the flat stream, independent of the blocked kernels
 # and of the one-hot / scalar-prefetch formulations they validate.

@@ -9,6 +9,10 @@ token budget. Reports decode throughput, per-request latency percentiles,
 MoD routed fraction, and the pool's KV footprint. The decode step is the
 exact function the ``decode_*`` dry-run cells lower at 512 chips.
 
+Engine flags (``--page-size``/``--ragged``/``--speculate``/``--quant-kv``
+...) come from the shared :func:`repro.serve.add_engine_args` group, so
+this driver and ``benchmarks/serving.py`` expose the same surface.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mod-paper-60m \
       --smoke --batch 8 --prompt-len 32 --gen 32 --requests 16
 """
@@ -25,7 +29,7 @@ from repro.checkpoint import CheckpointManager
 from repro.config import get_config, smoke_config
 from repro.data.synthetic import SyntheticLM
 from repro.models import api
-from repro.serve import Request, ServingEngine
+from repro.serve import EngineConfig, Request, ServingEngine, add_engine_args
 
 
 def main() -> None:
@@ -40,7 +44,6 @@ def main() -> None:
                     help="total requests (default: 2x batch)")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="submit one request every N engine steps (0 = all upfront)")
-    ap.add_argument("--policy", default="mod_aware", choices=["fcfs", "mod_aware"])
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--backend", default=None,
                     choices=["xla", "pallas", "pallas_fused"],
@@ -53,40 +56,6 @@ def main() -> None:
                          "device_count=8)")
     ap.add_argument("--model-axis", type=int, default=1,
                     help="tensor-parallel degree of the --spmd mesh")
-    ap.add_argument("--page-size", type=int, default=0,
-                    help="block-paged KV pool with this page size (0 = "
-                         "contiguous pool); memory scales with live pages, "
-                         "admission is page-aware, OOM preempts")
-    ap.add_argument("--n-pages", type=int, default=0,
-                    help="physical page count (default: batch*ctx/page-size)")
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="reuse chunk-aligned shared prompt prefixes across "
-                         "requests (requires --page-size)")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="chunked batched prefill piece size (dense/MoE; "
-                         "0 = whole prompt in one jitted call)")
-    ap.add_argument("--ragged", action="store_true",
-                    help="ragged flat-token batching: one jitted step "
-                         "carries decode rows AND a flat prefill-segment "
-                         "stream over the paged pool (requires --page-size; "
-                         "admission is budgeted by free segments)")
-    ap.add_argument("--ragged-segments", type=int, default=4,
-                    help="prefill segments per mixed step (--ragged)")
-    ap.add_argument("--speculate", type=int, default=0,
-                    help="self-speculative decoding: draft N tokens per "
-                         "round with the model at --draft-ratio capacity, "
-                         "verify the window at full capacity in the same "
-                         "jitted call, roll back rejected tails via paged "
-                         "truncation (requires --page-size; greedy streams "
-                         "stay bit-identical to N=0)")
-    ap.add_argument("--draft-ratio", type=float, default=0.0,
-                    help="MoD capacity ratio of the drafter (0.0 = pure "
-                         "residual-skip path; only meaningful with "
-                         "--speculate)")
-    ap.add_argument("--verify-budget", type=int, default=0,
-                    help="verify-token budget per speculative round: "
-                         "admission stops while active slots x "
-                         "(speculate+1) would exceed it (0 = uncapped)")
     ap.add_argument("--priority", default="batch",
                     choices=["batch", "latency"],
                     help="priority class for the submitted requests: "
@@ -97,16 +66,12 @@ def main() -> None:
                     help="per-request deadline in seconds from submit; "
                          "expired requests finish as 'expired' instead of "
                          "occupying slots (0 = no deadline)")
-    ap.add_argument("--adaptive-capacity", action="store_true",
-                    help="enable the overload capacity controller: under "
-                         "queue/latency pressure it walks MoD capacity "
-                         "ratio and the batch-tier admission budget down "
-                         "a discrete ladder (latency-tier is exempt)")
     ap.add_argument("--inject-faults", type=int, default=-1,
                     help="thread a seeded FaultInjector through the "
                          "engine (NaN/Inf logits, page exhaustion, "
                          "stragglers, preemption storms) with this seed; "
                          "-1 = off")
+    add_engine_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -143,20 +108,10 @@ def main() -> None:
         from repro.serve import FaultInjector
 
         injector = FaultInjector.seeded(args.inject_faults)
-    engine = ServingEngine(
-        params, cfg, batch_size=args.batch, ctx=ctx, policy=args.policy, mesh=mesh,
-        page_size=args.page_size or None,
-        n_pages=args.n_pages or None,
-        prefix_cache=args.prefix_cache,
-        prefill_chunk=args.prefill_chunk or None,
-        ragged=args.ragged,
-        ragged_segments=args.ragged_segments,
-        speculate=args.speculate or None,
-        draft_ratio=args.draft_ratio,
-        spec_verify_budget=args.verify_budget or None,
-        adaptive_capacity=args.adaptive_capacity,
-        fault_injector=injector,
+    ecfg = EngineConfig.from_args(
+        args, batch_size=args.batch, ctx=ctx, mesh=mesh, fault_injector=injector
     )
+    engine = ServingEngine(params, cfg, engine=ecfg)
 
     outputs = engine.run_stream(
         [Request(tokens=prompts[i], max_new_tokens=args.gen,
@@ -196,6 +151,11 @@ def main() -> None:
               f"prefix_hit_rate={s['prefix_hit_rate']:.2f} "
               f"preemptions={s['preemptions']:.0f} "
               f"prefill_tokens_computed={s['prefill_tokens_computed']:.0f}")
+    if args.quant_kv != "none":
+        print(f"[serve] quantized KV: kv={args.quant_kv} "
+              f"scales={args.quant_scale} "
+              f"kv_bytes={s['kv_bytes']/2**20:.2f} MiB "
+              f"(+ resid {s['resid_bytes']/2**20:.2f} MiB full-precision)")
     if args.ragged:
         print(f"[serve] ragged mixed step: segments={args.ragged_segments} "
               f"padded_token_fraction={s['padded_token_fraction']:.3f} "

@@ -254,6 +254,7 @@ def model_verify_window(
     pos: jax.Array,  # (B,) — position of feed[0]
     active: Optional[jax.Array],
     collect=None,  # per-step hook: (caches_after_step, positions) -> pytree
+    post_step=None,  # per-step carry rewrite: (caches, positions) -> caches
 ) -> Tuple[jax.Array, Aux, Any]:
     """Full-capacity verify pass over a speculative token window.
 
@@ -268,11 +269,18 @@ def model_verify_window(
     (the serving engine collects each step's paged KV rows — before a
     later in-window write could wrap the ring — plus the residual-leaf
     snapshots its rollback restores from).
+
+    ``post_step`` rewrites the carried caches after each step, *before*
+    ``collect`` sees them — the quantized-KV engine round-trips the step's
+    written row here, so later in-window steps attend to exactly what a
+    non-speculative engine would have read back from its narrow pages.
     """
 
     def body(c, xs):
         t, j = xs
         logits, c2, aux = model_decode(params, c, cfg, t[:, None], pos + j, active, spmd=None)
+        if post_step is not None:
+            c2 = post_step(c2, pos + j)
         extra = collect(c2, pos + j) if collect is not None else ()
         return c2, (logits, aux, extra)
 
@@ -290,6 +298,7 @@ def model_fused_window(
     active: Optional[jax.Array],
     n: int,
     collect=None,  # per-step hook: (caches_after_step, positions) -> pytree
+    post_step=None,  # per-step carry rewrite: (caches, positions) -> caches
 ) -> Tuple[jax.Array, jax.Array, Aux, Any]:
     """Draft + verify in ONE autoregressive scan, for the degenerate
     self-speculative case where the drafter *is* the verifier (dense
@@ -308,6 +317,8 @@ def model_fused_window(
     def body(carry, j):
         c, t = carry
         logits, c2, aux = model_decode(params, c, cfg, t, pos + j, active, spmd=None)
+        if post_step is not None:
+            c2 = post_step(c2, pos + j)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         extra = collect(c2, pos + j) if collect is not None else ()
         return (c2, nxt[:, None]), (logits, nxt, aux, extra)

@@ -20,11 +20,20 @@ Public surface:
   (``ServingEngine(adaptive_capacity=True, max_queue=...)``).
 - :class:`~repro.serve.faults.FaultInjector` / ``Fault`` — scheduled fault
   matrix for robustness soaks (``ServingEngine(fault_injector=...)``).
+- :class:`~repro.serve.config.EngineConfig` — the first-class engine
+  configuration: ``ServingEngine(params, cfg, engine=EngineConfig(...))``.
+  Legacy keyword construction still works behind a deprecation shim.
+- :class:`~repro.serve.quant.QuantConfig` — KV / weight quantization
+  policy (``EngineConfig(quant=QuantConfig(kv="int8"))``): int8/fp8 paged
+  KV with per-page-row pow2 scales, dequantized in-kernel.
 
-See DESIGN.md §Serving engine and §Overload control for the architecture.
+See DESIGN.md §Serving engine, §Overload control and §Quantized paged KV
+for the architecture.
 """
 from repro.serve.cache import CachePool, PagedCachePool  # noqa: F401
+from repro.serve.config import EngineConfig, add_engine_args  # noqa: F401
 from repro.serve.engine import ServingEngine, routed_capacity  # noqa: F401
+from repro.serve.quant import QuantConfig  # noqa: F401
 from repro.serve.faults import Fault, FaultInjector  # noqa: F401
 from repro.serve.overload import (  # noqa: F401
     CapacityController,

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import api
+from repro.serve.quant import QuantConfig, leaf_groups, quantize_rows
 
 
 def _batch_axes(cfg: ModelConfig, batch: int, ctx: int):
@@ -113,12 +114,19 @@ class CachePool:
         ``mod_vs_full_ratio`` makes the paper's KV saving legible: MoD-block
         caches hold capacity(ctx) entries against the full blocks' ctx.
         """
-        sizes = {"total": 0.0, "mod": 0.0, "full": 0.0}
-        for path, leaf in jax.tree_util.tree_flatten_with_path(self.caches)[0]:
+        sizes = {"total": 0.0, "mod": 0.0, "full": 0.0, "kv_bytes": 0.0,
+                 "resid_bytes": 0.0}
+        pageable = set(_paged_leaf_axes(self.cfg, self.batch_size, self.ctx))
+        for i, (path, leaf) in enumerate(
+            jax.tree_util.tree_flatten_with_path(self.caches)[0]
+        ):
             b = float(leaf.size * leaf.dtype.itemsize)
             sizes["total"] += b
             keys = [getattr(p, "key", None) for p in path]
             sizes["mod" if "mod" in keys else "full"] += b
+            # same kv/resid split the paged pool reports (kv = the leaves a
+            # paged pool would page), so the two pools' stats are comparable
+            sizes["kv_bytes" if i in pageable else "resid_bytes"] += b
         sizes["mod_vs_full_ratio"] = sizes["mod"] / sizes["full"] if sizes["full"] else 0.0
         return sizes
 
@@ -169,6 +177,36 @@ def _paged_leaf_axes(cfg: ModelConfig, batch: int, ctx: int) -> Dict[int, int]:
     return paged
 
 
+def _quant_leaf_plan(
+    cfg: ModelConfig, batch: int, ctx: int, quant: Optional[QuantConfig]
+) -> Tuple[Tuple[int, int, str], ...]:
+    """(j, G, wide-dtype-name) per paged leaf stored narrow under ``quant``.
+
+    ``j`` indexes the pool's paged-leaf order (sorted flat-leaf ids); only
+    the float "k"/"v" rings quantize — the "pos" ring is int32 and stays
+    exact (it is what the attention mask reads). MoD routed rings live in
+    the residual pool and are already capacity-sized, so v1 leaves them at
+    full precision (DESIGN.md §Quantized KV)."""
+    if quant is None or not quant.enabled:
+        return ()
+    specs = jax.tree_util.tree_flatten_with_path(
+        api.make_caches(cfg, batch, ctx, specs=True)
+    )[0]
+    paged_axes = _paged_leaf_axes(cfg, batch, ctx)
+    plan = []
+    for j, i in enumerate(sorted(paged_axes)):
+        path, spec = specs[i]
+        keys = tuple(getattr(p, "key", None) for p in path)
+        if keys[-1] not in ("k", "v"):
+            continue
+        if not jnp.issubdtype(jnp.dtype(spec.dtype), jnp.floating):
+            continue
+        plan.append(
+            (j, leaf_groups(spec.shape, quant, paged_axes[i]), str(spec.dtype))
+        )
+    return tuple(plan)
+
+
 @dataclasses.dataclass(frozen=True)
 class PoolSpec:
     """Static description of a paged pool's leaf layout.
@@ -188,23 +226,106 @@ class PoolSpec:
     # step can slice / update one slot's batch-1 view of the materialized
     # cache pytree — the ragged mixed step's per-segment working state
     axes: Tuple[int, ...] = ()
+    # KV quantization (serve/quant.py): which paged leaves (positions in
+    # ``paged_ids`` order) are stored narrow, their scale-group counts G,
+    # and the wide dtype each dequantizes back to
+    quant: Optional[QuantConfig] = None
+    quant_ids: Tuple[int, ...] = ()
+    quant_groups: Tuple[int, ...] = ()
+    quant_dtypes: Tuple[str, ...] = ()
+
+
+def _qmap(spec: PoolSpec, scales) -> Dict[int, int]:
+    """{paged-leaf position j -> scales-list index m}, empty when the call
+    carries no scales (unquantized pool or legacy caller)."""
+    if not scales:
+        return {}
+    return {j: m for m, j in enumerate(spec.quant_ids)}
+
+
+def paged_materialize_q(
+    spec: PoolSpec,
+    pages: List[jax.Array],
+    scales: List[jax.Array],
+    resid: List[jax.Array],
+    table: jax.Array,
+) -> Any:
+    """Logical (B, ctx) cache pytree from paged + residual storage — pure,
+    called inside the engine's jitted decode step. Quantized leaves widen
+    through the fused-dequant gather (kernels/ops.paged_gather_op with
+    scales) back to their wide dtype."""
+    from repro.kernels.ops import paged_gather_op
+
+    qmap = _qmap(spec, scales)
+    leaves: List[Any] = [None] * (len(spec.paged_ids) + len(spec.resid_ids))
+    for j, (i, ax) in enumerate(zip(spec.paged_ids, spec.paged_axes)):
+        if j in qmap:
+            m = qmap[j]
+            leaves[i] = paged_gather_op(
+                pages[j], table, page_axis=ax, backend=spec.backend,
+                scales=scales[m], out_dtype=spec.quant_dtypes[m],
+            )
+        else:
+            leaves[i] = paged_gather_op(
+                pages[j], table, page_axis=ax, backend=spec.backend
+            )
+    for j, i in enumerate(spec.resid_ids):
+        leaves[i] = resid[j]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
 
 
 def paged_materialize(
     spec: PoolSpec, pages: List[jax.Array], resid: List[jax.Array], table: jax.Array
 ) -> Any:
-    """Logical (B, ctx) cache pytree from paged + residual storage — pure,
-    called inside the engine's jitted decode step."""
-    from repro.kernels.ops import paged_gather_op
+    """Unquantized-pool special case of :func:`paged_materialize_q`."""
+    return paged_materialize_q(spec, pages, [], resid, table)
 
-    leaves: List[Any] = [None] * (len(spec.paged_ids) + len(spec.resid_ids))
+
+def paged_writeback_q(
+    spec: PoolSpec,
+    new_caches: Any,
+    pages: List[jax.Array],
+    scales: List[jax.Array],
+    table: jax.Array,
+    pos: jax.Array,
+) -> Tuple[List[jax.Array], List[jax.Array], List[jax.Array]]:
+    """Split an updated logical cache back into (pages, resid, scales).
+
+    The decode step mutates each paged leaf at exactly one logical position
+    per slot — its absolute ``pos`` (full-capacity rings write at their
+    cursor, and cursor == pos for ctx-capacity leaves; asserted by the
+    paged-vs-contiguous equality tests) — so only that row is scattered
+    into the slot's tail page. Quantized leaves scatter narrow rows plus
+    fresh per-row pow2 scales.
+    """
+    from repro.kernels.ops import paged_scatter_rows_op
+
+    qmap = _qmap(spec, scales)
+    leaves = jax.tree_util.tree_leaves(new_caches)
+    new_pages: List[jax.Array] = []
+    new_scales = list(scales)
     for j, (i, ax) in enumerate(zip(spec.paged_ids, spec.paged_axes)):
-        leaves[i] = paged_gather_op(
-            pages[j], table, page_axis=ax, backend=spec.backend
+        view = leaves[i]  # lead + (B, ctx) + tail
+        idx = pos.reshape((1,) * ax + (-1, 1) + (1,) * (view.ndim - ax - 2))
+        rows = jnp.squeeze(
+            jnp.take_along_axis(view, idx.astype(jnp.int32), axis=ax + 1), ax + 1
         )
-    for j, i in enumerate(spec.resid_ids):
-        leaves[i] = resid[j]
-    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+        if j in qmap:
+            m = qmap[j]
+            new_p, new_s = paged_scatter_rows_op(
+                pages[j], table, rows, pos, page_axis=ax, backend=spec.backend,
+                scales=scales[m], quant=spec.quant,
+            )
+            new_pages.append(new_p)
+            new_scales[m] = new_s
+        else:
+            new_pages.append(
+                paged_scatter_rows_op(
+                    pages[j], table, rows, pos, page_axis=ax, backend=spec.backend
+                )
+            )
+    new_resid = [leaves[i] for i in spec.resid_ids]
+    return new_pages, new_resid, new_scales
 
 
 def paged_writeback(
@@ -214,30 +335,10 @@ def paged_writeback(
     table: jax.Array,
     pos: jax.Array,
 ) -> Tuple[List[jax.Array], List[jax.Array]]:
-    """Split an updated logical cache back into (pages, resid) storage.
-
-    The decode step mutates each paged leaf at exactly one logical position
-    per slot — its absolute ``pos`` (full-capacity rings write at their
-    cursor, and cursor == pos for ctx-capacity leaves; asserted by the
-    paged-vs-contiguous equality tests) — so only that row is scattered
-    into the slot's tail page.
-    """
-    from repro.kernels.ops import paged_scatter_rows_op
-
-    leaves = jax.tree_util.tree_leaves(new_caches)
-    new_pages: List[jax.Array] = []
-    for j, (i, ax) in enumerate(zip(spec.paged_ids, spec.paged_axes)):
-        view = leaves[i]  # lead + (B, ctx) + tail
-        idx = pos.reshape((1,) * ax + (-1, 1) + (1,) * (view.ndim - ax - 2))
-        rows = jnp.squeeze(
-            jnp.take_along_axis(view, idx.astype(jnp.int32), axis=ax + 1), ax + 1
-        )
-        new_pages.append(
-            paged_scatter_rows_op(
-                pages[j], table, rows, pos, page_axis=ax, backend=spec.backend
-            )
-        )
-    new_resid = [leaves[i] for i in spec.resid_ids]
+    """Unquantized-pool special case of :func:`paged_writeback_q`."""
+    new_pages, new_resid, _ = paged_writeback_q(
+        spec, new_caches, pages, [], table, pos
+    )
     return new_pages, new_resid
 
 
@@ -263,29 +364,33 @@ def slot_update(spec: PoolSpec, caches: Any, sub: Any, slot: jax.Array) -> Any:
     return jax.tree_util.tree_unflatten(spec.treedef, out)
 
 
-def paged_writeback_tokens(
+def paged_writeback_tokens_q(
     spec: PoolSpec,
     new_caches: Any,
     pages: List[jax.Array],
+    scales: List[jax.Array],
     table: jax.Array,
     slot: jax.Array,  # (W,) int32 — slot of each written token row
     pos: jax.Array,  # (W,) int32 — absolute position of each row
     valid: jax.Array,  # (W,) bool — invalid rows land on the scratch page
-) -> Tuple[List[jax.Array], List[jax.Array]]:
+) -> Tuple[List[jax.Array], List[jax.Array], List[jax.Array]]:
     """Ragged-step write-back: an arbitrary flat list of (slot, pos) token
     rows — this step's decode rows plus every prefill-segment token — is
     scattered from the updated logical cache into the pool's pages in one
     pass per leaf (kernels ``ragged_paged_scatter_rows_op``). The
-    fixed-one-row-per-slot :func:`paged_writeback` is the decode-only
+    fixed-one-row-per-slot :func:`paged_writeback_q` is the decode-only
     special case. Invalid entries (inactive slots, padded segment tails)
-    write to SCRATCH_PAGE, which is never read."""
+    write to SCRATCH_PAGE, which is never read. Quantized leaves scatter
+    narrow rows and per-row scales to the same (pid, off) targets."""
     from repro.kernels.ops import ragged_paged_scatter_rows_op
 
+    qmap = _qmap(spec, scales)
     leaves = jax.tree_util.tree_leaves(new_caches)
     ctx = table.shape[1] * spec.page_size
     pos_c = jnp.clip(pos, 0, ctx - 1).astype(jnp.int32)
     slot_c = jnp.clip(slot, 0, table.shape[0] - 1).astype(jnp.int32)
     new_pages: List[jax.Array] = []
+    new_scales = list(scales)
     for j, (i, ax) in enumerate(zip(spec.paged_ids, spec.paged_axes)):
         view = leaves[i]  # lead + (B, ctx) + tail
         rows = jnp.take(view, slot_c, axis=ax)  # lead + (W, ctx) + tail
@@ -293,14 +398,65 @@ def paged_writeback_tokens(
         rows = jnp.squeeze(
             jnp.take_along_axis(rows, idx.astype(jnp.int32), axis=ax + 1), ax + 1
         )
-        new_pages.append(
-            ragged_paged_scatter_rows_op(
+        if j in qmap:
+            m = qmap[j]
+            new_p, new_s = ragged_paged_scatter_rows_op(
                 pages[j], table, rows, slot, pos, valid,
                 page_axis=ax, backend=spec.backend, dump_page=SCRATCH_PAGE,
+                scales=scales[m], quant=spec.quant,
             )
-        )
+            new_pages.append(new_p)
+            new_scales[m] = new_s
+        else:
+            new_pages.append(
+                ragged_paged_scatter_rows_op(
+                    pages[j], table, rows, slot, pos, valid,
+                    page_axis=ax, backend=spec.backend, dump_page=SCRATCH_PAGE,
+                )
+            )
     new_resid = [leaves[i] for i in spec.resid_ids]
+    return new_pages, new_resid, new_scales
+
+
+def paged_writeback_tokens(
+    spec: PoolSpec,
+    new_caches: Any,
+    pages: List[jax.Array],
+    table: jax.Array,
+    slot: jax.Array,
+    pos: jax.Array,
+    valid: jax.Array,
+) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """Unquantized-pool special case of :func:`paged_writeback_tokens_q`."""
+    new_pages, new_resid, _ = paged_writeback_tokens_q(
+        spec, new_caches, pages, [], table, slot, pos, valid
+    )
     return new_pages, new_resid
+
+
+def quant_roundtrip(spec: PoolSpec, caches: Any, mask: jax.Array) -> Any:
+    """Round-trip the quantized KV leaves of a logical cache pytree through
+    the pool's narrow dtype (serve/quant.roundtrip_leaf), limited to the
+    ``mask`` (B, ctx) positions. Identity on unquantized pools.
+
+    The engine calls this at every quantization boundary that is *not* a
+    pool write — chunked-prefill chunk ends and speculative in-window
+    steps — so the full-precision working state agrees bit-for-bit with
+    what a pool write/read cycle of the same rows would produce (pow2
+    idempotency then makes the eventual write reproduce these exact
+    values). That agreement is what keeps prefix warm-restores,
+    ragged-vs-padded and speculative-vs-plain streams identical on the
+    quantized path."""
+    if spec.quant is None or not spec.quant_ids:
+        return caches
+    from repro.serve.quant import roundtrip_leaf
+
+    qset = set(spec.quant_ids)
+    leaves = list(jax.tree_util.tree_leaves(caches))
+    for j, (i, ax) in enumerate(zip(spec.paged_ids, spec.paged_axes)):
+        if j in qset:
+            leaves[i] = roundtrip_leaf(leaves[i], ax, spec.quant, mask=mask)
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
 
 
 def paged_collect_rows(spec: "PoolSpec", caches: Any, pos: jax.Array) -> List[jax.Array]:
@@ -323,29 +479,58 @@ def paged_collect_rows(spec: "PoolSpec", caches: Any, pos: jax.Array) -> List[ja
     return rows
 
 
-def paged_scatter_rows(
+def paged_scatter_rows_q(
     spec: "PoolSpec",
     rows: List[jax.Array],  # per paged leaf: lead + (W,) + tail row stacks
     pages: List[jax.Array],
+    scales: List[jax.Array],
     table: jax.Array,
     slot: jax.Array,  # (W,) int32
     pos: jax.Array,  # (W,) int32
     valid: jax.Array,  # (W,) bool — invalid rows land on the scratch page
-) -> List[jax.Array]:
+) -> Tuple[List[jax.Array], List[jax.Array]]:
     """Scatter pre-collected KV rows into the pool's pages — the
-    row-stack half of :func:`paged_writeback_tokens`, for callers (the
+    row-stack half of :func:`paged_writeback_tokens_q`, for callers (the
     speculative step) whose rows come out of a scan instead of a final
-    logical cache."""
+    logical cache. Returns ``(new_pages, new_scales)``."""
     from repro.kernels.ops import ragged_paged_scatter_rows_op
 
+    qmap = _qmap(spec, scales)
     new_pages: List[jax.Array] = []
+    new_scales = list(scales)
     for j, ax in enumerate(spec.paged_axes):
-        new_pages.append(
-            ragged_paged_scatter_rows_op(
+        if j in qmap:
+            m = qmap[j]
+            new_p, new_s = ragged_paged_scatter_rows_op(
                 pages[j], table, rows[j], slot, pos, valid,
                 page_axis=ax, backend=spec.backend, dump_page=SCRATCH_PAGE,
+                scales=scales[m], quant=spec.quant,
             )
-        )
+            new_pages.append(new_p)
+            new_scales[m] = new_s
+        else:
+            new_pages.append(
+                ragged_paged_scatter_rows_op(
+                    pages[j], table, rows[j], slot, pos, valid,
+                    page_axis=ax, backend=spec.backend, dump_page=SCRATCH_PAGE,
+                )
+            )
+    return new_pages, new_scales
+
+
+def paged_scatter_rows(
+    spec: "PoolSpec",
+    rows: List[jax.Array],
+    pages: List[jax.Array],
+    table: jax.Array,
+    slot: jax.Array,
+    pos: jax.Array,
+    valid: jax.Array,
+) -> List[jax.Array]:
+    """Unquantized-pool special case of :func:`paged_scatter_rows_q`."""
+    new_pages, _ = paged_scatter_rows_q(
+        spec, rows, pages, [], table, slot, pos, valid
+    )
     return new_pages
 
 
@@ -373,7 +558,7 @@ _POOL_OPS_MAX = 16
 
 
 def _build_pool_ops(cfg: ModelConfig, batch: int, ctx: int, page_size: int,
-                    backend: str) -> Tuple:
+                    backend: str, quant: Optional[QuantConfig] = None) -> Tuple:
     full = api.make_caches(cfg, batch, ctx, specs=True)
     _, treedef = jax.tree_util.tree_flatten(full)
     axes = jax.tree_util.tree_leaves(_batch_axes(cfg, batch, ctx))
@@ -392,6 +577,8 @@ def _build_pool_ops(cfg: ModelConfig, batch: int, ctx: int, page_size: int,
         for i in paged_ids
     ]
     P = ctx // page_size
+    plan = _quant_leaf_plan(cfg, batch, ctx, quant)
+    qinfo = {j: (m, g, dt) for m, (j, g, dt) in enumerate(plan)}
 
     def reset_resid(resid, slot):
         return [
@@ -399,30 +586,46 @@ def _build_pool_ops(cfg: ModelConfig, batch: int, ctx: int, page_size: int,
             for r, t, ax in zip(resid, tmpl_resid, resid_axes)
         ]
 
-    def write(pages, resid, sub, dest, slot):
+    def write(pages, scales, resid, sub, dest, slot):
         # ``dest`` (P,) routes each logical page to its physical page —
         # entries set to SCRATCH_PAGE (shared prefix pages, unmapped tail)
-        # are dropped into the scratch page
+        # are dropped into the scratch page. Quantized leaves fold each
+        # written page into canonical (P, p, F) rows, quantize with fresh
+        # pow2 scales (exact on rows already round-tripped at a chunk
+        # boundary — quantization is idempotent) and scatter narrow pages
+        # plus their (P, p, G) scales to the same ``dest``.
+        from repro.kernels.ops import _canon_pages, _uncanon
+
         sub_flat = jax.tree_util.tree_leaves(sub)
         new_pages = []
+        new_scales = list(scales)
         for j, i in enumerate(paged_ids):
             ax = paged_axes[i]
             s = jax.lax.index_in_dim(sub_flat[i], 0, ax, keepdims=False)
             s = s.reshape(s.shape[:ax] + (P, page_size) + s.shape[ax + 1 :])
             idx = (slice(None),) * ax + (dest,)
-            new_pages.append(pages[j].at[idx].set(s.astype(pages[j].dtype)))
+            if j in qinfo:
+                m, g, _ = qinfo[j]
+                canon, rest = _canon_pages(s, ax)  # (P, p, F)
+                q, sc = quantize_rows(canon, g, quant)
+                q = _uncanon(q, rest, ax)  # back to leaf page layout
+                new_pages.append(pages[j].at[idx].set(q.astype(pages[j].dtype)))
+                new_scales[m] = scales[m].at[dest].set(sc)
+            else:
+                new_pages.append(pages[j].at[idx].set(s.astype(pages[j].dtype)))
         new_resid = [
             jax.lax.dynamic_update_slice_in_dim(
                 r, sub_flat[i].astype(r.dtype), slot, axis=ax
             )
             for r, i, ax in zip(resid, resid_ids, resid_axes)
         ]
-        return new_pages, new_resid
+        return new_pages, new_scales, new_resid
 
-    def scrub(pages, ids):
+    def scrub(pages, scales, ids):
         # rewrite physical pages ``ids`` (P,; SCRATCH entries harmless) to
         # template content, so a recycled page can't leak a previous
-        # request's KV (or stale valid-looking positions) into a new slot
+        # request's KV (or stale valid-looking positions) into a new slot;
+        # scale rows reset to 1.0 (the template-page scale)
         out = []
         for j, i in enumerate(paged_ids):
             ax = paged_axes[i]
@@ -432,18 +635,29 @@ def _build_pool_ops(cfg: ModelConfig, batch: int, ctx: int, page_size: int,
             )
             idx = (slice(None),) * ax + (ids,)
             out.append(pages[j].at[idx].set(t.astype(pages[j].dtype)))
-        return out
+        new_scales = [s.at[ids].set(1.0) for s in scales]
+        return out, new_scales
 
-    def read(pages, resid, table_row, slot):
+    def read(pages, scales, resid, table_row, slot):
         # batch-1 logical cache for one slot (chunked prefill works on
-        # this view, then write_slot puts it back)
+        # this view, then write_slot puts it back); quantized leaves come
+        # back widened, so the view holds exactly the round-tripped values
+        # a re-quantizing write_slot will preserve
         from repro.kernels.ops import paged_gather_op
 
+        qmap = {j: qinfo[j][0] for j in qinfo} if scales else {}
         leaves: List[Any] = [None] * n_leaves
         for j, i in enumerate(paged_ids):
-            leaves[i] = paged_gather_op(
-                pages[j], table_row[None], page_axis=paged_axes[i], backend=backend
-            )
+            if j in qmap:
+                m, _, dt = qinfo[j]
+                leaves[i] = paged_gather_op(
+                    pages[j], table_row[None], page_axis=paged_axes[i],
+                    backend=backend, scales=scales[m], out_dtype=dt,
+                )
+            else:
+                leaves[i] = paged_gather_op(
+                    pages[j], table_row[None], page_axis=paged_axes[i], backend=backend
+                )
         for j, i in enumerate(resid_ids):
             leaves[i] = jax.lax.dynamic_slice_in_dim(
                 resid[j], slot, 1, axis=resid_axes[j]
@@ -454,11 +668,11 @@ def _build_pool_ops(cfg: ModelConfig, batch: int, ctx: int, page_size: int,
 
 
 def _pool_ops(cfg: ModelConfig, batch: int, ctx: int, page_size: int,
-              backend: str) -> Tuple:
+              backend: str, quant: Optional[QuantConfig] = None) -> Tuple:
     return lru_cached(
         _POOL_OPS_CACHE,
-        (cfg, batch, ctx, page_size, backend),
-        lambda: _build_pool_ops(cfg, batch, ctx, page_size, backend),
+        (cfg, batch, ctx, page_size, backend, quant),
+        lambda: _build_pool_ops(cfg, batch, ctx, page_size, backend, quant),
         _POOL_OPS_MAX,
     )
 
@@ -508,6 +722,7 @@ class PagedCachePool:
         prefix_chunk: Optional[int] = None,
         backend: str = "xla",
         prefix_max_entries: int = 64,
+        quant: Optional[QuantConfig] = None,
     ):
         if page_size < 1 or ctx % page_size:
             raise ValueError(
@@ -536,6 +751,14 @@ class PagedCachePool:
         # evicted, and cache_bytes() reports the snapshot footprint
         self.prefix_max_entries = prefix_max_entries
 
+        # KV quantization: which paged leaves are stored narrow (float k/v
+        # rings), their scale-group counts and wide dtypes
+        self.quant = quant if (quant is not None and quant.enabled) else None
+        plan = _quant_leaf_plan(cfg, batch_size, ctx, self.quant)
+        self._quant_ids = tuple(j for j, _, _ in plan)
+        self._quant_groups = tuple(g for _, g, _ in plan)
+        self._quant_dtypes = tuple(d for _, _, d in plan)
+
         full = api.make_caches(cfg, batch_size, ctx)
         flat, self._treedef = jax.tree_util.tree_flatten(full)
         self._axes = jax.tree_util.tree_leaves(_batch_axes(cfg, batch_size, ctx))
@@ -546,17 +769,32 @@ class PagedCachePool:
         tmpl_flat = jax.tree_util.tree_leaves(self._template)
 
         # physical page storage: one template page broadcast n_pages times
-        # (template content is position-uniform: zeros, pos = -1)
-        def phys(i):
+        # (template content is position-uniform: zeros, pos = -1). Quantized
+        # leaves store the narrow dtype; template zeros quantize exactly
+        # (q = 0, scale = 1.0), so NULL/scrubbed pages dequantize back to
+        # pristine template content.
+        def phys(j, i):
             ax = self._paged_axes[i]
             t = jax.lax.index_in_dim(tmpl_flat[i], 0, ax, keepdims=False)
             page = jax.lax.slice_in_dim(t, 0, page_size, axis=ax)  # lead+(p,)+tail
-            return jnp.broadcast_to(
+            arr = jnp.broadcast_to(
                 jnp.expand_dims(page, ax),
                 page.shape[:ax] + (self.n_pages,) + page.shape[ax:],
             ).copy()
+            if j in self._quant_ids:
+                arr = arr.astype(self.quant.kv_dtype())
+            return arr
 
-        self.pages: List[jax.Array] = [phys(i) for i in self._paged_ids]
+        self.pages: List[jax.Array] = [
+            phys(j, i) for j, i in enumerate(self._paged_ids)
+        ]
+        # canonical (n_pages, page_size, G) f32 scales per quantized leaf,
+        # indexed by physical page id — refcounted prefix sharing, rollback
+        # truncation and scrub-on-recycle carry them with the pages for free
+        self.scales: List[jax.Array] = [
+            jnp.ones((self.n_pages, page_size, g), jnp.float32)
+            for g in self._quant_groups
+        ]
         self.resid: List[jax.Array] = [flat[i] for i in self._resid_ids]
 
         # host-side page accounting
@@ -576,7 +814,8 @@ class PagedCachePool:
         self.peak_pages_in_use = 0
 
         (self._reset_resid_fn, self._write_fn, self._scrub_fn,
-         self._read_fn) = _pool_ops(cfg, batch_size, ctx, page_size, backend)
+         self._read_fn) = _pool_ops(cfg, batch_size, ctx, page_size, backend,
+                                    self.quant)
 
     # -- pure (jitted) cache-movement ops ------------------------------
 
@@ -590,6 +829,10 @@ class PagedCachePool:
             page_size=self.page_size,
             backend=self.backend,
             axes=tuple(self._axes),
+            quant=self.quant,
+            quant_ids=self._quant_ids,
+            quant_groups=self._quant_groups,
+            quant_dtypes=self._quant_dtypes,
         )
 
     def materialize(self, pages, resid, table):
@@ -765,7 +1008,8 @@ class PagedCachePool:
             pid = self._pop_free()
             if pid is None:
                 if new_ids:
-                    self.pages = self._scrub_fn(self.pages, self._pad_ids(new_ids))
+                    self.pages, self.scales = self._scrub_fn(
+                    self.pages, self.scales, self._pad_ids(new_ids))
                     # partial maps still raise in_use: peak must see them
                     self.peak_pages_in_use = max(
                         self.peak_pages_in_use,
@@ -778,7 +1022,8 @@ class PagedCachePool:
             self.n_mapped[slot] += 1
             new_ids.append(pid)
         if new_ids:
-            self.pages = self._scrub_fn(self.pages, self._pad_ids(new_ids))
+            self.pages, self.scales = self._scrub_fn(
+                    self.pages, self.scales, self._pad_ids(new_ids))
         self.peak_pages_in_use = max(
             self.peak_pages_in_use, int(np.sum(self.ref[_RESERVED:] > 0))
         )
@@ -796,13 +1041,14 @@ class PagedCachePool:
         dest = np.full((self.pages_per_slot,), SCRATCH_PAGE, np.int32)
         n = int(self.n_mapped[slot])
         dest[start_page:n] = self.table_np[slot, start_page:n]
-        self.pages, self.resid = self._write_fn(
-            self.pages, self.resid, sub, jnp.asarray(dest), slot
+        self.pages, self.scales, self.resid = self._write_fn(
+            self.pages, self.scales, self.resid, sub, jnp.asarray(dest), slot
         )
 
     def read_slot(self, slot: int) -> Any:
         return self._read_fn(
-            self.pages, self.resid, jnp.asarray(self.table_np[slot]), slot
+            self.pages, self.scales, self.resid,
+            jnp.asarray(self.table_np[slot]), slot
         )
 
     # -- prefix cache ---------------------------------------------------
@@ -939,6 +1185,11 @@ class PagedCachePool:
             sizes["total"] += b
             sizes["full"] += b
             sizes["paged"] += b
+        for s in self.scales:
+            b = float(s.size * s.dtype.itemsize)
+            sizes["total"] += b
+            sizes["full"] += b
+            sizes["paged"] += b
         for j, i in enumerate(self._resid_ids):
             leaf = self.resid[j]
             b = float(leaf.size * leaf.dtype.itemsize)
@@ -946,5 +1197,10 @@ class PagedCachePool:
             sizes["total"] += b
             sizes["mod" if "mod" in keys else "full"] += b
             sizes["resid"] += b
+        # per-leaf-kind totals for the serving benchmark / stats() surface:
+        # kv_bytes is everything page-addressed (narrow pages + scales +
+        # the exact int32 pos ring), resid_bytes the slot-contiguous rest
+        sizes["kv_bytes"] = sizes["paged"]
+        sizes["resid_bytes"] = sizes["resid"]
         sizes["mod_vs_full_ratio"] = sizes["mod"] / sizes["full"] if sizes["full"] else 0.0
         return sizes

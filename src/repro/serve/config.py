@@ -1,0 +1,204 @@
+"""First-class engine configuration (DESIGN.md §Serving engine).
+
+:class:`EngineConfig` consolidates :class:`repro.serve.engine.ServingEngine`'s
+former kwarg sprawl into one frozen dataclass: every model-independent
+setting is validated in ``__post_init__`` (same error messages the engine
+used to raise, so callers' error handling survives the migration), and the
+engine constructor becomes ``ServingEngine(params, cfg, engine=EngineConfig
+(...))``. Legacy keyword construction still works through a one-warning
+deprecation shim that builds the config internally.
+
+Checks that need the *model* config (family gating for batched prefill /
+ragged / speculative, causal attention, SPMD composition) stay in the
+engine — an EngineConfig is model-agnostic and reusable across
+architectures.
+
+The module is also the single home of the serving CLI surface:
+:func:`add_engine_args` installs the engine flag group on an
+``argparse`` parser and :meth:`EngineConfig.from_args` builds the config
+from the parsed namespace. ``launch/serve.py`` and
+``benchmarks/serving.py`` both consume these, so the two front-ends can
+never drift apart flag-by-flag — and quantization (``--quant-kv`` /
+``--quant-scale``) arrives in both through this one path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+from repro.serve.quant import GRANULARITIES, KV_MODES, QuantConfig
+
+__all__ = ["EngineConfig", "QuantConfig", "add_engine_args"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Model-independent serving-engine configuration.
+
+    ``batch_size``/``ctx`` fix the decode batch's static shape; everything
+    else selects an execution path (paged pool, ragged mixed step,
+    speculative rounds, overload ladder) or tunes it. ``quant`` is the KV /
+    weight quantization policy (:class:`repro.serve.quant.QuantConfig`);
+    quantized KV requires the paged pool, where narrow pages + per-row
+    scales live behind the page tables.
+
+    ``logit_tap`` is a telemetry hook: called with the host-side decode
+    logits array ``(B, V)`` after every padded/ragged decode step that had
+    active slots — the serving benchmark uses it to measure quantization
+    drift (logit MAD, greedy token flips) without touching the sampling
+    path.
+    """
+
+    batch_size: int
+    ctx: int
+    policy: str = "mod_aware"
+    prefill: str = "auto"  # "auto" | "batch" | "step"
+    mesh: Any = None  # jax.sharding.Mesh — SPMD decode over a sharded pool
+    data_shards: Optional[int] = None  # partitioned routing semantics
+    page_size: Optional[int] = None  # block-paged KV pool (None = contiguous)
+    n_pages: Optional[int] = None  # physical page count (default: B·ctx/page)
+    prefix_cache: bool = False  # hash-chained prompt-prefix page reuse
+    prefill_chunk: Optional[int] = None  # chunked batched prefill (dense/MoE)
+    paged_backend: str = "xla"  # paged gather/scatter: "xla" | "pallas"
+    ragged: bool = False  # flat-token mixed prefill+decode step
+    ragged_segments: int = 4  # prefill segments per ragged step
+    speculate: Optional[int] = None  # self-speculative: draft n tokens/round
+    draft_ratio: float = 0.0  # drafter's MoD capacity ratio (0 = pure skip)
+    spec_verify_budget: Optional[int] = None  # verify-token budget per round
+    adaptive_capacity: bool = False  # load-adaptive MoD capacity ladder
+    capacity_levels: Optional[Tuple[float, ...]] = None  # ladder scales
+    capacity_controller: Any = None  # overload.CapacityController override
+    max_queue: Optional[int] = None  # bounded backpressure: reject at depth
+    fault_injector: Any = None  # faults.FaultInjector
+    clock: Optional[Callable[[], float]] = None  # deadline clock (monotonic)
+    quant: QuantConfig = QuantConfig()  # KV/weight quantization policy
+    logit_tap: Optional[Callable] = None  # decode-logits telemetry hook
+
+    def __post_init__(self):
+        if not isinstance(self.batch_size, int) or self.batch_size < 1:
+            raise ValueError(f"batch_size must be a positive int, got {self.batch_size!r}")
+        if not isinstance(self.ctx, int) or self.ctx < 1:
+            raise ValueError(f"ctx must be a positive int, got {self.ctx!r}")
+        if self.prefill not in ("auto", "batch", "step"):
+            raise ValueError(f"unknown prefill mode {self.prefill!r}")
+        paged = self.page_size is not None
+        if not paged and (self.n_pages is not None or self.prefix_cache):
+            raise ValueError("n_pages/prefix_cache require page_size")
+        if self.ragged:
+            if not paged:
+                raise ValueError("ragged=True requires the paged pool (page_size)")
+            if int(self.ragged_segments) < 1:
+                raise ValueError("ragged_segments must be >= 1")
+        if self.speculate is not None:
+            if int(self.speculate) < 1:
+                raise ValueError("speculate must be >= 1")
+            if not paged:
+                raise ValueError(
+                    "speculate requires the paged pool (page_size): rollback "
+                    "releases rejected tail pages via PagedCachePool.truncate"
+                )
+            if not (0.0 <= float(self.draft_ratio) <= 1.0):
+                raise ValueError(
+                    f"draft_ratio must be in [0, 1], got {self.draft_ratio}"
+                )
+        elif self.spec_verify_budget is not None:
+            raise ValueError("spec_verify_budget requires speculate")
+        adaptive = self.adaptive_capacity or self.capacity_controller is not None
+        if self.capacity_levels is not None and not adaptive:
+            raise ValueError("capacity_levels requires adaptive_capacity")
+        if not isinstance(self.quant, QuantConfig):
+            raise ValueError(
+                f"quant must be a QuantConfig, got {type(self.quant).__name__}"
+            )
+        if self.quant.enabled and not paged:
+            raise ValueError(
+                "quantized KV requires the paged pool (page_size): narrow "
+                "pages and their scales live behind the page tables"
+            )
+
+    # -- CLI plumbing ---------------------------------------------------
+
+    @classmethod
+    def from_args(cls, ns, *, batch_size: int, ctx: int, **overrides) -> "EngineConfig":
+        """Build a config from an :func:`add_engine_args` namespace.
+
+        ``batch_size``/``ctx`` come from the caller (front-ends derive ctx
+        from prompt/generation lengths); ``overrides`` replace any field
+        (e.g. ``mesh=...``, ``fault_injector=...``) after flag mapping.
+        """
+        quant = QuantConfig(kv=ns.quant_kv, granularity=ns.quant_scale)
+        fields = dict(
+            batch_size=batch_size,
+            ctx=ctx,
+            policy=ns.policy,
+            page_size=ns.page_size or None,
+            n_pages=ns.n_pages or None,
+            prefix_cache=ns.prefix_cache,
+            prefill_chunk=ns.prefill_chunk or None,
+            ragged=ns.ragged,
+            ragged_segments=ns.ragged_segments,
+            speculate=ns.speculate or None,
+            draft_ratio=ns.draft_ratio,
+            spec_verify_budget=ns.verify_budget or None,
+            adaptive_capacity=ns.adaptive_capacity,
+            quant=quant,
+        )
+        fields.update(overrides)
+        return cls(**fields)
+
+
+def add_engine_args(parser) -> None:
+    """Install the shared serving-engine flag group on ``parser``.
+
+    The one flag list behind ``launch/serve.py`` and
+    ``benchmarks/serving.py`` — consumed by :meth:`EngineConfig.from_args`.
+    """
+    g = parser.add_argument_group("serving engine")
+    g.add_argument("--policy", default="mod_aware", choices=["fcfs", "mod_aware"])
+    g.add_argument("--page-size", type=int, default=0,
+                   help="block-paged KV pool with this page size (0 = "
+                        "contiguous pool); memory scales with live pages, "
+                        "admission is page-aware, OOM preempts")
+    g.add_argument("--n-pages", type=int, default=0,
+                   help="physical page count (default: batch*ctx/page-size)")
+    g.add_argument("--prefix-cache", action="store_true",
+                   help="reuse chunk-aligned shared prompt prefixes across "
+                        "requests (requires --page-size)")
+    g.add_argument("--prefill-chunk", type=int, default=0,
+                   help="chunked batched prefill piece size (dense/MoE; "
+                        "0 = whole prompt in one jitted call)")
+    g.add_argument("--ragged", action="store_true",
+                   help="ragged flat-token batching: one jitted step "
+                        "carries decode rows AND a flat prefill-segment "
+                        "stream over the paged pool (requires --page-size; "
+                        "admission is budgeted by free segments)")
+    g.add_argument("--ragged-segments", type=int, default=4,
+                   help="prefill segments per mixed step (--ragged)")
+    g.add_argument("--speculate", type=int, default=0,
+                   help="self-speculative decoding: draft N tokens per "
+                        "round with the model at --draft-ratio capacity, "
+                        "verify the window at full capacity in the same "
+                        "jitted call, roll back rejected tails via paged "
+                        "truncation (requires --page-size; greedy streams "
+                        "stay bit-identical to N=0)")
+    g.add_argument("--draft-ratio", type=float, default=0.0,
+                   help="MoD capacity ratio of the drafter (0.0 = pure "
+                        "residual-skip path; only meaningful with "
+                        "--speculate)")
+    g.add_argument("--verify-budget", type=int, default=0,
+                   help="verify-token budget per speculative round: "
+                        "admission stops while active slots x "
+                        "(speculate+1) would exceed it (0 = uncapped)")
+    g.add_argument("--adaptive-capacity", action="store_true",
+                   help="enable the overload capacity controller: under "
+                        "queue/latency pressure it walks MoD capacity "
+                        "ratio and the batch-tier admission budget down "
+                        "a discrete ladder (latency-tier is exempt)")
+    g.add_argument("--quant-kv", default="none", choices=list(KV_MODES),
+                   help="paged KV page storage dtype: int8 / fp8 (e4m3) "
+                        "with per-page-row pow2 scales, dequantized inside "
+                        "the gather/attention kernels (requires "
+                        "--page-size)")
+    g.add_argument("--quant-scale", default="page", choices=list(GRANULARITIES),
+                   help="quantization scale granularity: one scale per "
+                        "page row, or one per row per kv head")

@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional
 
@@ -80,14 +81,17 @@ from repro.serve.cache import (
     CachePool,
     PagedCachePool,
     paged_collect_rows,
-    paged_materialize,
-    paged_scatter_rows,
-    paged_writeback,
-    paged_writeback_tokens,
+    paged_materialize_q,
+    paged_scatter_rows_q,
+    paged_writeback_q,
+    paged_writeback_tokens_q,
+    quant_roundtrip,
     slot_slice,
     slot_update,
 )
 from repro.models import api
+from repro.serve.config import EngineConfig
+from repro.serve.quant import dequantize_params, quantize_params
 from repro.serve.faults import FaultInjector
 from repro.serve.overload import CapacityController, EngineOverloaded, default_levels
 from repro.serve.request import (
@@ -127,6 +131,25 @@ def _cached_jit(kind: str, key: Any, make: Callable[[], Callable]) -> Callable:
     return lru_cached(_JIT_CACHE, (kind, key), lambda: jax.jit(make()), _JIT_CACHE_MAX)
 
 
+# One process-wide deprecation notice for legacy ServingEngine(**kwargs)
+# construction — every test/benchmark that still uses the old surface would
+# otherwise print it per engine build.
+_WARNED_LEGACY_KWARGS = False
+
+
+def _warn_legacy_kwargs() -> None:
+    global _WARNED_LEGACY_KWARGS
+    if not _WARNED_LEGACY_KWARGS:
+        _WARNED_LEGACY_KWARGS = True
+        warnings.warn(
+            "ServingEngine(batch_size=..., ctx=..., **kwargs) is deprecated; "
+            "pass ServingEngine(params, cfg, engine=EngineConfig(...)) "
+            "(repro.serve.EngineConfig) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
+
 class _PoolExhausted(RuntimeError):
     """Internal: a gate-passed admission lost its pages (e.g. another
     admission in the same wave evicted the prefix entry its page discount
@@ -156,30 +179,21 @@ class ServingEngine:
         self,
         params: Any,
         cfg: ModelConfig,
-        batch_size: int,
-        ctx: int,
-        policy: str = "mod_aware",
-        prefill: str = "auto",  # "auto" | "batch" | "step"
-        mesh=None,  # jax.sharding.Mesh — SPMD decode over a sharded pool
-        data_shards: Optional[int] = None,  # partitioned routing semantics
-        page_size: Optional[int] = None,  # block-paged KV pool (None = contiguous)
-        n_pages: Optional[int] = None,  # physical page count (default: B·ctx/page)
-        prefix_cache: bool = False,  # hash-chained prompt-prefix page reuse
-        prefill_chunk: Optional[int] = None,  # chunked batched prefill (dense/MoE)
-        paged_backend: str = "xla",  # paged gather/scatter: "xla" | "pallas"
-        ragged: bool = False,  # flat-token mixed prefill+decode step
-        ragged_segments: int = 4,  # prefill segments per ragged step
-        speculate: Optional[int] = None,  # self-speculative: draft n tokens/round
-        draft_ratio: float = 0.0,  # drafter's MoD capacity ratio (0 = pure skip)
-        spec_verify_budget: Optional[int] = None,  # verify-token budget per round
-        adaptive_capacity: bool = False,  # load-adaptive MoD capacity ladder
-        capacity_levels: Optional[tuple] = None,  # ladder scales (default 1, ½, ¼)
-        capacity_controller: Optional[CapacityController] = None,
-        max_queue: Optional[int] = None,  # bounded backpressure: reject at depth
-        fault_injector: Optional[FaultInjector] = None,
-        clock: Optional[Callable[[], float]] = None,  # deadline clock (monotonic)
+        batch_size: Optional[int] = None,
+        ctx: Optional[int] = None,
+        *,
+        engine: Optional[EngineConfig] = None,
+        **kwargs: Any,
     ):
-        """``mesh`` makes the engine multi-device: params are placed per the
+        """The canonical surface is ``ServingEngine(params, cfg,
+        engine=EngineConfig(...))`` — every model-independent setting
+        lives on the frozen :class:`repro.serve.config.EngineConfig`
+        (validated at construction). Legacy keyword construction
+        (``batch_size=..., ctx=..., page_size=..., ...``) still works: the
+        kwargs build the same EngineConfig internally, with a one-time
+        DeprecationWarning. Mixing both forms is an error.
+
+        ``mesh`` makes the engine multi-device: params are placed per the
         sharding rules, the cache pool is batch-sharded over the mesh's data
         axes, and the decode step routes ``batch_capacity`` shard-locally
         (DESIGN.md §SPMD routed execution). ``data_shards`` without a mesh
@@ -244,9 +258,41 @@ class ServingEngine:
         through the step (detection/containment are always on, injector or
         not); ``clock`` overrides the deadline clock (``time.monotonic``)
         — benchmarks pass a step-counting clock for determinism.
-        DESIGN.md §Overload control."""
-        if prefill not in ("auto", "batch", "step"):
-            raise ValueError(f"unknown prefill mode {prefill!r}")
+        DESIGN.md §Overload control.
+
+        ``EngineConfig.quant`` (a :class:`repro.serve.quant.QuantConfig`)
+        stores the paged pool's full-attention K/V pages in int8/fp8 with
+        per-page-row pow2 scales, dequantized inside the gather/attention
+        kernels (DESIGN.md §Quantized KV); ``quant.weights="int8"``
+        additionally serves from int8 parameters dequantized at step
+        entry."""
+        if engine is not None:
+            if batch_size is not None or ctx is not None or kwargs:
+                raise ValueError(
+                    "pass either engine=EngineConfig(...) or legacy "
+                    "batch_size/ctx keyword arguments, not both"
+                )
+            ecfg = engine
+        else:
+            _warn_legacy_kwargs()
+            ecfg = EngineConfig(batch_size=batch_size, ctx=ctx, **kwargs)
+        self.engine_config = ecfg
+        batch_size, ctx = ecfg.batch_size, ecfg.ctx
+        policy, prefill = ecfg.policy, ecfg.prefill
+        mesh, data_shards = ecfg.mesh, ecfg.data_shards
+        page_size, n_pages = ecfg.page_size, ecfg.n_pages
+        prefix_cache, prefill_chunk = ecfg.prefix_cache, ecfg.prefill_chunk
+        paged_backend = ecfg.paged_backend
+        ragged, ragged_segments = ecfg.ragged, ecfg.ragged_segments
+        speculate, draft_ratio = ecfg.speculate, ecfg.draft_ratio
+        spec_verify_budget = ecfg.spec_verify_budget
+        adaptive_capacity = ecfg.adaptive_capacity
+        capacity_levels = ecfg.capacity_levels
+        capacity_controller = ecfg.capacity_controller
+        max_queue, fault_injector = ecfg.max_queue, ecfg.fault_injector
+        clock = ecfg.clock
+        self.quant = ecfg.quant if ecfg.quant.enabled else None
+        self._logit_tap = ecfg.logit_tap
         from repro.distributed.sharding import shard_ctx
 
         self.mesh = mesh
@@ -271,6 +317,16 @@ class ServingEngine:
             self._input_shardings = {
                 nd: NamedSharding(mesh, self.spmd.data_spec(nd)) for nd in (1, 2)
             }
+        if ecfg.quant.weights == "int8":
+            if mesh is not None:
+                raise NotImplementedError(
+                    "weight quantization + SPMD mesh: the narrow tree "
+                    "needs its own sharding rules"
+                )
+            # serve from int8 weights: every jitted entry point dequantizes
+            # at trace time (quant.dequantize_params — identity on
+            # unquantized trees), so the fp32 copy is never resident
+            params = quantize_params(params)
         self.params = params
         self.cfg = cfg
         self.batch_size = batch_size
@@ -284,8 +340,6 @@ class ServingEngine:
             raise ValueError(f"family {cfg.family!r} has no batched prefill")
 
         self._paged = page_size is not None
-        if not self._paged and (n_pages is not None or prefix_cache):
-            raise ValueError("n_pages/prefix_cache require page_size")
         if prefill_chunk is not None and not self._batch_prefill:
             raise ValueError(
                 "prefill_chunk applies to batched-prefill families (dense/MoE); "
@@ -301,8 +355,6 @@ class ServingEngine:
         self._ragged = ragged
         self._ragged_segments = int(ragged_segments)
         if ragged:
-            if not self._paged:
-                raise ValueError("ragged=True requires the paged pool (page_size)")
             if not self._batch_prefill:
                 raise ValueError(
                     "ragged=True needs a batched-prefill family (dense/MoE): "
@@ -312,20 +364,11 @@ class ServingEngine:
                 raise NotImplementedError(
                     "ragged mixed step + SPMD mesh/data_shards"
                 )
-            if self._ragged_segments < 1:
-                raise ValueError("ragged_segments must be >= 1")
             if prefill_chunk is None:
                 prefill_chunk = page_size
         self._speculate = None if speculate is None else int(speculate)
         self._draft_ratio = float(draft_ratio)
         if self._speculate is not None:
-            if self._speculate < 1:
-                raise ValueError("speculate must be >= 1")
-            if not self._paged:
-                raise ValueError(
-                    "speculate requires the paged pool (page_size): rollback "
-                    "releases rejected tail pages via PagedCachePool.truncate"
-                )
             if not self._batch_prefill:
                 raise ValueError(
                     "speculate needs a batched-prefill family (dense/MoE): "
@@ -339,10 +382,6 @@ class ServingEngine:
                 )
             if mesh is not None or data_shards:
                 raise NotImplementedError("speculative rounds + SPMD mesh/data_shards")
-            if not (0.0 <= self._draft_ratio <= 1.0):
-                raise ValueError(f"draft_ratio must be in [0, 1], got {draft_ratio}")
-        elif spec_verify_budget is not None:
-            raise ValueError("spec_verify_budget requires speculate")
         self._prefix_cache = prefix_cache
         self._prefill_chunk = prefill_chunk
 
@@ -352,6 +391,7 @@ class ServingEngine:
                 n_pages=n_pages,
                 prefix_chunk=prefill_chunk if prefix_cache else None,
                 backend=paged_backend,
+                quant=self.quant,
             )
         else:
             self.pool = CachePool(cfg, batch_size, ctx, mesh=mesh)
@@ -390,8 +430,6 @@ class ServingEngine:
         self._clock = clock if clock is not None else time.monotonic
         self._faults = fault_injector
         adaptive = adaptive_capacity or capacity_controller is not None
-        if capacity_levels is not None and not adaptive:
-            raise ValueError("capacity_levels requires adaptive_capacity")
         if adaptive and self._speculate is not None:
             raise NotImplementedError(
                 "adaptive_capacity + speculate: a speculative round already "
@@ -466,8 +504,29 @@ class ServingEngine:
                 # mapped lookahead pages as stale-but-causally-masked data;
                 # truncate() releases the tail after the host picks the
                 # acceptance point.
-                def step(p, pages, resid, table, t, pos, act, limit):
-                    caches0 = paged_materialize(pspec, pages, resid, table)
+                def step(p, pages, scales, resid, table, t, pos, act, limit):
+                    p = dequantize_params(p)
+                    caches0 = paged_materialize_q(pspec, pages, scales, resid, table)
+
+                    post_step = None
+                    if pspec.quant is not None:
+                        # quantized pool: after each in-window step's own
+                        # attention (which sees its fresh full-precision
+                        # row, exactly like a plain decode step), the row
+                        # at p_step round-trips through the narrow dtype —
+                        # so step k+1 attends to what a plain engine would
+                        # have re-materialized from its pages. Positions
+                        # past ctx match nothing (no-op), and collect runs
+                        # after this, so the scattered rows re-quantize to
+                        # identical bits (pow2 idempotency).
+                        ctx_len = table.shape[1] * pspec.page_size
+
+                        def post_step(c2, p_step):
+                            m = (
+                                jnp.arange(ctx_len, dtype=jnp.int32)[None, :]
+                                == p_step[:, None].astype(jnp.int32)
+                            )
+                            return quant_roundtrip(pspec, c2, m)
 
                     def collect(c2, p_step):
                         rows = paged_collect_rows(pspec, c2, p_step)
@@ -479,7 +538,7 @@ class ServingEngine:
                         drafts, logits, aux, (rows, resids) = (
                             api.model_fused_window(
                                 p, cfg, caches0, t, pos, act, n_spec,
-                                collect=collect,
+                                collect=collect, post_step=post_step,
                             )
                         )
                     else:
@@ -488,7 +547,8 @@ class ServingEngine:
                         )
                         feed = jnp.concatenate([t[:, 0][None], drafts], axis=0)
                         logits, aux, (rows, resids) = api.model_verify_window(
-                            p, cfg, caches0, feed, pos, act, collect=collect
+                            p, cfg, caches0, feed, pos, act,
+                            collect=collect, post_step=post_step,
                         )
                     B = pos.shape[0]
                     offs = jnp.arange(n_spec + 1, dtype=jnp.int32)
@@ -510,40 +570,68 @@ class ServingEngine:
                         )
                         for r, ax in zip(rows, pspec.paged_axes)
                     ]
-                    new_pages = paged_scatter_rows(
-                        pspec, flat_rows, pages, table, w_slot, w_pos, w_valid
+                    new_pages, new_scales = paged_scatter_rows_q(
+                        pspec, flat_rows, pages, scales, table,
+                        w_slot, w_pos, w_valid
                     )
-                    return drafts, logits, resids, new_pages, aux
+                    return drafts, logits, resids, new_pages, new_scales, aux
 
                 return step
 
             self._spec_fn = _cached_jit(
                 "spec_step",
                 (cfg, self._draft_ratio, n_spec, ctx, page_size,
-                 self.pool.n_pages, paged_backend),
+                 self.pool.n_pages, paged_backend, self.pool.quant),
                 _make_spec_step,
             )
             self._spec_spec = pspec
         # Batch-1 prefill; retraced per distinct prompt length only.
         self._prefill_fn = _cached_jit(
             "prefill", (cfg, ctx),
-            lambda: lambda p, toks: api.model_prefill(p, cfg, {"tokens": toks}, ctx),
+            lambda: lambda p, toks: api.model_prefill(
+                dequantize_params(p), cfg, {"tokens": toks}, ctx
+            ),
         )
         if prefill_chunk is not None:
             # fixed (1, chunk) shape + traced start/length scalars: exactly
             # one trace per (cfg, ctx, chunk) no matter the prompt mix
+            qspec = (
+                self.pool.step_spec()
+                if self._paged and self.pool.quant is not None
+                else None
+            )
+
+            def _make_chunk():
+                def chunk(p, c, toks, start, nv):
+                    p = dequantize_params(p)
+                    lg, new_c = api.model_prefill_chunk(p, cfg, c, toks, start, nv)
+                    if qspec is not None:
+                        # chunk-boundary round trip: the rows this chunk
+                        # wrote go through the narrow dtype now, so the
+                        # next chunk attends to exactly what a prefix-cache
+                        # warm restore would read back from the pool's
+                        # quantized pages (cache.quant_roundtrip docstring)
+                        j = jnp.arange(ctx, dtype=jnp.int32)
+                        m = ((j >= start) & (j < start + nv))[None, :]
+                        new_c = quant_roundtrip(qspec, new_c, m)
+                    return lg, new_c
+
+                return chunk
+
             self._chunk_fn = _cached_jit(
-                "prefill_chunk", (cfg, ctx, prefill_chunk),
-                lambda: lambda p, c, toks, start, nv: api.model_prefill_chunk(
-                    p, cfg, c, toks, start, nv
-                ),
+                "prefill_chunk",
+                (cfg, ctx, prefill_chunk,
+                 self.pool.quant if self._paged else None),
+                _make_chunk,
             )
         if cfg.family == "encdec":
             from repro.models import encdec as ED
 
             self._cross_fn = _cached_jit(
                 "cross", (cfg, ctx),
-                lambda: lambda p, c, e: ED.prefill_cross(p, c, e, cfg),
+                lambda: lambda p, c, e: ED.prefill_cross(
+                    dequantize_params(p), c, e, cfg
+                ),
             )
         self._step_signatures0 = self._step_signatures()
 
@@ -568,6 +656,7 @@ class ServingEngine:
             pf_cfg = self.cfg  # prefill segments never degrade
             C = self._prefill_chunk
             S = self._ragged_segments
+            ctx_len = self.ctx
 
             def _make_ragged_step():
                 # One fixed-shape mixed step. Inputs beyond the decode
@@ -575,9 +664,11 @@ class ServingEngine:
                 # (slot, start, len, flat-offset) descriptors; dead segments
                 # carry len 0 and are exact no-ops on the caches (masked
                 # chunk positions never write — tests/test_serve_ragged.py).
-                def step(p, pages, resid, table, dec_t, dec_pos, dec_act,
-                         pf_tokens, seg_slot, seg_start, seg_len, seg_off):
-                    caches = paged_materialize(spec, pages, resid, table)
+                def step(p, pages, scales, resid, table, dec_t, dec_pos,
+                         dec_act, pf_tokens, seg_slot, seg_start, seg_len,
+                         seg_off):
+                    p = dequantize_params(p)
+                    caches = paged_materialize_q(spec, pages, scales, resid, table)
                     T = pf_tokens.shape[0]
                     # logits aval of one chunk call — the dead branch of the
                     # per-segment cond must return the exact shape/dtype
@@ -602,6 +693,16 @@ class ServingEngine:
                             lg, new_sub = api.model_prefill_chunk(
                                 p, pf_cfg, sub, chunk, start, ln
                             )
+                            if spec.quant is not None:
+                                # quantization boundary: each ingested chunk
+                                # round-trips through the narrow dtype, so a
+                                # ragged prefill is bit-identical to the
+                                # padded chunked path (and to a prefix-cache
+                                # warm restore, which reads back quantized
+                                # pages)
+                                jq = jnp.arange(ctx_len, dtype=jnp.int32)
+                                m = ((jq >= start) & (jq < start + ln))[None]
+                                new_sub = quant_roundtrip(spec, new_sub, m)
                             # per-segment residual snapshot: prefix
                             # boundaries land mid-scan, so the host can't
                             # slice them from the pool after the step
@@ -663,45 +764,48 @@ class ServingEngine:
                     w_valid = jnp.concatenate(
                         [dec_act, (arC[None] < seg_len[:, None]).reshape(-1)]
                     )
-                    new_pages, new_resid = paged_writeback_tokens(
-                        spec, merged, pages, table, w_slot, w_pos, w_valid
+                    new_pages, new_resid, new_scales = paged_writeback_tokens_q(
+                        spec, merged, pages, scales, table, w_slot, w_pos, w_valid
                     )
-                    return dlogits, seg_logits, seg_resid, new_pages, new_resid, aux
+                    return (dlogits, seg_logits, seg_resid, new_pages,
+                            new_resid, new_scales, aux)
 
                 return step
 
             return _cached_jit(
                 "ragged_step",
                 (cfg, pf_cfg, self.ctx, self.pool.page_size,
-                 self.pool.n_pages, self._paged_backend, C, S),
+                 self.pool.n_pages, self._paged_backend, C, S,
+                 self.pool.quant),
                 _make_ragged_step,
             )
         if self._paged:
             spec = self.pool.step_spec()
 
             def _make_paged_step():
-                def step(p, pages, resid, table, t, pos, act):
-                    caches = paged_materialize(spec, pages, resid, table)
+                def step(p, pages, scales, resid, table, t, pos, act):
+                    p = dequantize_params(p)
+                    caches = paged_materialize_q(spec, pages, scales, resid, table)
                     logits, new_caches, aux = api.model_decode(
                         p, caches, cfg, t, pos, act, spmd=spmd
                     )
-                    new_pages, new_resid = paged_writeback(
-                        spec, new_caches, pages, table, pos
+                    new_pages, new_resid, new_scales = paged_writeback_q(
+                        spec, new_caches, pages, scales, table, pos
                     )
-                    return logits, new_pages, new_resid, aux
+                    return logits, new_pages, new_resid, new_scales, aux
 
                 return step
 
             return _cached_jit(
                 "paged_step",
                 (cfg, spmd, self.ctx, self.pool.page_size,
-                 self.pool.n_pages, self._paged_backend),
+                 self.pool.n_pages, self._paged_backend, self.pool.quant),
                 _make_paged_step,
             )
         return _cached_jit(
             "step", (cfg, spmd),
             lambda: lambda p, c, t, pos, act: api.model_decode(
-                p, c, cfg, t, pos, act, spmd=spmd
+                dequantize_params(p), c, cfg, t, pos, act, spmd=spmd
             ),
         )
 
@@ -1325,10 +1429,11 @@ class ServingEngine:
         if lvl:
             self._degraded_decode_steps += 1
         if self._paged:
-            logits, self.pool.pages, self.pool.resid, aux = step_fn(
-                self.params, self.pool.pages, self.pool.resid,
-                self.pool.device_table(), jnp.asarray(tokens),
-                jnp.asarray(pos), jnp.asarray(active),
+            (logits, self.pool.pages, self.pool.resid, self.pool.scales,
+             aux) = step_fn(
+                self.params, self.pool.pages, self.pool.scales,
+                self.pool.resid, self.pool.device_table(),
+                jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(active),
             )
         else:
             logits, self.pool.caches, aux = step_fn(
@@ -1336,6 +1441,8 @@ class ServingEngine:
                 self._place(pos), self._place(active),
             )
         logits_np = np.asarray(logits)
+        if self._logit_tap is not None and active_slots:
+            self._logit_tap(logits_np)
         if self._faults is not None:
             logits_np = self._faults.corrupt_logits(self, logits_np)
         self._positions_computed += B
@@ -1450,8 +1557,8 @@ class ServingEngine:
         if lvl:
             self._degraded_decode_steps += 1
         (logits, seg_logits, seg_resid, self.pool.pages, self.pool.resid,
-         aux) = step_fn(
-            self.params, self.pool.pages, self.pool.resid,
+         self.pool.scales, aux) = step_fn(
+            self.params, self.pool.pages, self.pool.scales, self.pool.resid,
             self.pool.device_table(),
             jnp.asarray(dec_tokens), jnp.asarray(dec_pos), jnp.asarray(dec_act),
             jnp.asarray(pf_tokens), jnp.asarray(seg_slot),
@@ -1459,6 +1566,8 @@ class ServingEngine:
         )
         logits_np = np.asarray(logits)
         seg_logits_np = np.asarray(seg_logits)
+        if self._logit_tap is not None and decode_slots:
+            self._logit_tap(logits_np)
         if self._faults is not None:
             logits_np = self._faults.corrupt_logits(self, logits_np)
 
@@ -1598,8 +1707,9 @@ class ServingEngine:
             active[s.idx] = True
             limit[s.idx] = min(s.req.total_len, self.ctx)
 
-        drafts, logits, resids, self.pool.pages, aux = self._spec_fn(
-            self.params, self.pool.pages, self.pool.resid,
+        (drafts, logits, resids, self.pool.pages, self.pool.scales,
+         aux) = self._spec_fn(
+            self.params, self.pool.pages, self.pool.scales, self.pool.resid,
             self.pool.device_table(), jnp.asarray(tokens),
             jnp.asarray(pos), jnp.asarray(active), jnp.asarray(limit),
         )
@@ -1818,6 +1928,7 @@ class ServingEngine:
 
     def stats(self) -> Dict[str, Any]:
         steps = max(1, self.step_count)
+        cb = self.pool.cache_bytes()
         out = {
             "steps": float(self.step_count),
             "generated_tokens": float(self.generated_tokens),
@@ -1830,7 +1941,12 @@ class ServingEngine:
                 if self._routed_frac_steps
                 else float("nan")
             ),
-            "kv_cache_bytes": self.pool.cache_bytes()["total"],
+            # per-leaf-kind byte split: kv_bytes shrinks under quantized
+            # KV (narrow pages + f32 scales), resid_bytes never does
+            "kv_cache_bytes": cb["total"],
+            "kv_bytes": cb["kv_bytes"],
+            "resid_bytes": cb["resid_bytes"],
+            "quant_kv": self.quant.kv if self.quant is not None else "none",
             "prefill_tokens_computed": float(self._prefill_tokens_computed),
             # fraction of fixed-shape step positions that carried no real
             # token (inactive decode rows, dead/padded prefill segments)

@@ -1,0 +1,241 @@
+"""Quantized KV-cache storage for serving (DESIGN.md §Quantized KV).
+
+The paged pool can hold full-attention K/V pages in int8 or fp8
+(e4m3) with per-page-row scales stored alongside the page tables;
+dequantization is fused into the paged-gather / ragged-attention
+kernels so quantized KV is widened in VMEM and never round-trips
+through HBM at full width. This module is the single home of the
+quantization math — the xla references, the pallas kernel bodies and
+the pool ops all call the same functions on the same values, which is
+what makes the xla==pallas bit-identity of the quantized path hold by
+construction (every op below is element-wise or an order-insensitive
+max; there is no reduction whose float rounding could differ between
+backends).
+
+Scale scheme
+------------
+``optim/compression.py`` proved per-tensor absmax/127 scales for
+gradient wires; KV reuses the absmax idea but rounds the scale *up to
+a power of two*::
+
+    scale = 2 ** ceil(log2(absmax / qmax))        (qmax: 127 | 448)
+
+computed without transcendentals (exponent-field bit arithmetic, so
+both backends produce the same bits).  Power-of-two scales make the
+quantize->dequantize round trip **idempotent**: after one round trip
+every value is q * 2^e with |q| <= qmax, and requantizing such a value
+reproduces it exactly (the re-derived scale exponent can only shift in
+a direction where q * 2^(e-e') stays an exact integer within range).
+Idempotency is what keeps the serving identities alive on the
+quantized path — chunked-prefill pages rewritten at chunk boundaries,
+prefix-cache warm restores, ragged-vs-padded and speculative-vs-plain
+streams all re-quantize rows that were already quantized once, and get
+the same bits back.
+
+Granularity: ``"page"`` stores one f32 scale per (physical page, row)
+over the whole folded feature dim; ``"head"`` stores one per
+(page, row, kv-head) — i.e. per trailing head_dim block of the
+canonical row fold.  Scales live in canonical ``(n_pages, page_size,
+G)`` f32 arrays indexed by physical page id, so refcounted prefix
+sharing and paged rollback carry them for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+QMAX = {"int8": 127.0, "fp8": 448.0}
+KV_MODES = ("none", "int8", "fp8")
+GRANULARITIES = ("page", "head")
+WEIGHT_MODES = ("none", "int8")
+
+
+def fp8_supported() -> bool:
+    """float8_e4m3fn is part of every jax/ml_dtypes this repo pins, but
+    gate anyway: quant falls back with a clear error, never an import
+    crash."""
+    return hasattr(jnp, "float8_e4m3fn")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Serving-side quantization policy (hashable: part of jit-cache keys).
+
+    kv: storage dtype of full-attention K/V pages in the paged pool —
+        ``"none"`` (fp32 pages, the default), ``"int8"``, or ``"fp8"``
+        (e4m3, clipped to +-448).
+    granularity: scale sharing — ``"page"`` (one scale per page row) or
+        ``"head"`` (one per page row per kv head).
+    weights: optional serving-param quantization — ``"none"`` or
+        ``"int8"`` (per-tensor pow2 scales, dequantized at step entry).
+    """
+
+    kv: str = "none"
+    granularity: str = "page"
+    weights: str = "none"
+
+    def __post_init__(self):
+        if self.kv not in KV_MODES:
+            raise ValueError(f"QuantConfig.kv must be one of {KV_MODES}, got {self.kv!r}")
+        if self.granularity not in GRANULARITIES:
+            raise ValueError(
+                f"QuantConfig.granularity must be one of {GRANULARITIES}, "
+                f"got {self.granularity!r}")
+        if self.weights not in WEIGHT_MODES:
+            raise ValueError(
+                f"QuantConfig.weights must be one of {WEIGHT_MODES}, "
+                f"got {self.weights!r}")
+        if self.kv == "fp8" and not fp8_supported():
+            raise ValueError("QuantConfig(kv='fp8'): float8_e4m3fn not "
+                             "available in this jax build")
+
+    @property
+    def enabled(self) -> bool:
+        return self.kv != "none"
+
+    @property
+    def qmax(self) -> float:
+        return QMAX[self.kv]
+
+    def kv_dtype(self):
+        return jnp.int8 if self.kv == "int8" else jnp.float8_e4m3fn
+
+
+def pow2_scale(absmax: jax.Array, qmax: float) -> jax.Array:
+    """Smallest normal power of two >= absmax/qmax, bit-exactly.
+
+    Pure exponent-field arithmetic (bitcast, no log2/exp2), so xla and
+    pallas produce identical bits: take the f32 exponent of
+    ``absmax/qmax``, bump it by one iff the mantissa is nonzero (i.e.
+    the ratio is not itself a power of two), clamp to the normal range,
+    and reassemble.  absmax == 0 maps to scale 1.0.
+    """
+    r = (absmax / jnp.float32(qmax)).astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(r, jnp.uint32)
+    exp = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+    frac = (bits & jnp.uint32(0x7FFFFF)) != 0
+    e = jnp.clip(exp + frac.astype(jnp.int32), -126, 127)
+    s = jax.lax.bitcast_convert_type(
+        ((e + 127).astype(jnp.uint32)) << jnp.uint32(23), jnp.float32)
+    return jnp.where(r > 0, s, jnp.float32(1.0))
+
+
+def row_scales(x: jax.Array, n_groups: int, qc: QuantConfig) -> jax.Array:
+    """Per-block scales for canonical rows: x ``(..., F)`` -> ``(..., G)``."""
+    xb = jnp.abs(x.astype(jnp.float32)).reshape(
+        x.shape[:-1] + (n_groups, x.shape[-1] // n_groups))
+    return pow2_scale(jnp.max(xb, axis=-1), qc.qmax)
+
+
+def quant_rows(x: jax.Array, scales: jax.Array, qc: QuantConfig) -> jax.Array:
+    """Quantize canonical rows ``(..., F)`` against ``(..., G)`` scales."""
+    g = scales.shape[-1]
+    y = x.astype(jnp.float32).reshape(x.shape[:-1] + (g, -1)) / scales[..., None]
+    if qc.kv == "int8":
+        q = jnp.clip(jnp.round(y), -qc.qmax, qc.qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(y, -qc.qmax, qc.qmax).astype(jnp.float8_e4m3fn)
+    return q.reshape(x.shape)
+
+
+def quantize_rows(x: jax.Array, n_groups: int, qc: QuantConfig):
+    """(q, scales) for canonical rows ``(..., F)``."""
+    s = row_scales(x, n_groups, qc)
+    return quant_rows(x, s, qc), s
+
+
+def dequant_rows(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """Widen canonical rows ``(..., F)`` narrow + ``(..., G)`` -> f32.
+
+    This exact expression is also the body of the fused pallas kernels
+    (kernels/paged.py, kernels/ragged.py) — element-wise multiply after
+    a block reshape, so in-kernel and reference dequant agree bit for
+    bit."""
+    g = scales.shape[-1]
+    y = q.astype(jnp.float32).reshape(q.shape[:-1] + (g, -1)) * scales[..., None]
+    return y.reshape(q.shape)
+
+
+def leaf_groups(leaf_shape, qc: QuantConfig, batch_axis: int) -> int:
+    """G of a KV leaf's canonical row fold: 1 per row, or one per
+    trailing head_dim block (the leaf's last axis)."""
+    if qc.granularity == "page":
+        return 1
+    f = 1
+    for a, d in enumerate(leaf_shape):
+        if a not in (batch_axis, batch_axis + 1):
+            f *= d
+    return f // leaf_shape[-1]
+
+
+def roundtrip_leaf(x: jax.Array, batch_axis: int, qc: QuantConfig,
+                   mask: jax.Array | None = None) -> jax.Array:
+    """Quantization round trip of a KV leaf *in leaf layout*
+    ``lead... + (B, ctx) + ... + (head_dim,)``.
+
+    Used at quantization boundaries (chunked-prefill chunk ends,
+    speculative window steps) to make the fp32 working cache agree with
+    what the pool will store: thanks to pow2 idempotency, quantizing
+    these rows again at writeback reproduces the same bits.  ``mask``
+    (bool, ``(B, ctx)``) limits the round trip to the rows a chunk or
+    window step actually wrote.
+
+    Bit-compatible with the canonical-fold quantize in the pool ops:
+    the absmax reduction sees the same element set (max is exact under
+    reordering) and everything else is element-wise.
+    """
+    f32 = x.astype(jnp.float32)
+    if qc.granularity == "head":
+        red = (x.ndim - 1,)
+    else:
+        red = tuple(a for a in range(x.ndim) if a not in (batch_axis, batch_axis + 1))
+    s = pow2_scale(jnp.max(jnp.abs(f32), axis=red, keepdims=True), qc.qmax)
+    y = f32 / s
+    if qc.kv == "int8":
+        q = jnp.clip(jnp.round(y), -qc.qmax, qc.qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(y, -qc.qmax, qc.qmax).astype(jnp.float8_e4m3fn)
+    rt = (q.astype(jnp.float32) * s).astype(x.dtype)
+    if mask is None:
+        return rt
+    mshape = [1] * x.ndim
+    mshape[batch_axis] = x.shape[batch_axis]
+    mshape[batch_axis + 1] = x.shape[batch_axis + 1]
+    return jnp.where(mask.reshape(mshape), rt, x)
+
+
+# --- serving-param (weight) quantization -------------------------------------
+
+_QKEY, _SKEY, _DKEY = "__q8__", "__scale__", "__dt__"
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and _QKEY in x
+
+
+def quantize_params(params):
+    """int8-quantize every float leaf with a per-tensor pow2 scale.
+
+    Each float leaf becomes a small dict node ``{q, scale, dtype-tag}``
+    (the tag is a 0-sized array so the pytree stays jit-traceable);
+    non-float leaves pass through.
+    """
+    def one(p):
+        if not jnp.issubdtype(jnp.asarray(p).dtype, jnp.floating):
+            return p
+        p = jnp.asarray(p)
+        s = pow2_scale(jnp.max(jnp.abs(p.astype(jnp.float32))), QMAX["int8"])
+        q = jnp.clip(jnp.round(p.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+        return {_QKEY: q, _SKEY: s, _DKEY: jnp.zeros((0,), p.dtype)}
+    return jax.tree.map(one, params)
+
+
+def dequantize_params(params):
+    """Invert :func:`quantize_params` (identity on unquantized trees)."""
+    def one(x):
+        if _is_qleaf(x):
+            return (x[_QKEY].astype(jnp.float32) * x[_SKEY]).astype(x[_DKEY].dtype)
+        return x
+    return jax.tree.map(one, params, is_leaf=_is_qleaf)

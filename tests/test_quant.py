@@ -1,0 +1,435 @@
+"""Quantized paged KV (DESIGN.md §Quantized KV) + the EngineConfig surface.
+
+Four layers of coverage:
+
+- scale math: pow2 scales vs the numpy oracle, and the idempotency that
+  every serving identity on the quantized path leans on (requantizing a
+  round-tripped row reproduces the same bits);
+- kernel oracles: fused-dequant paged gather and quantizing scatter,
+  xla == pallas(interpret) == kernels/ref.py, including lead-dim leaf
+  layouts and the quantized ragged flash attention;
+- engine identities: quantized xla == pallas streams, prefix-cache warm
+  restores with scales, speculative rollback over quantized pages,
+  ragged == padded under int8 (cohort-matched admission — MoD
+  batch-capacity routing couples decode rows, so the decode cohorts must
+  match for bit-identity, same caveat as check_mixed_identity), and
+  bounded drift vs the fp32 twin per model family;
+- the EngineConfig API: config-built engines are bit-identical to
+  legacy-kwargs engines, the shim warns exactly once, and validation
+  rejects inconsistent configs with the documented messages.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MoDConfig, MoEConfig
+from repro.kernels import ops, ref
+from repro.models import api
+from repro.serve import EngineConfig, QuantConfig, Request, ServingEngine
+from repro.serve import engine as engine_mod
+from repro.serve.quant import (
+    dequant_rows,
+    fp8_supported,
+    leaf_groups,
+    pow2_scale,
+    quantize_params,
+    dequantize_params,
+    quantize_rows,
+    roundtrip_leaf,
+)
+from tests.helpers import tiny_cfg
+
+# ---------------------------------------------------------------------------
+# Scale math: pow2 scales + idempotent round trips
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_scale_matches_ref_and_properties():
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([
+        np.float32([0.0, 1.0, 127.0, 448.0, 1e-30, 1e30, 0.5, 2.0]),
+        rng.uniform(1e-6, 1e4, size=64).astype(np.float32),
+    ])
+    for qmax in (127.0, 448.0):
+        got = np.asarray(jax.jit(lambda a: pow2_scale(a, qmax))(jnp.asarray(vals)))
+        want = np.asarray(ref.pow2_scale_ref(vals, qmax))
+        np.testing.assert_array_equal(got, want)
+        # every scale is a power of two covering absmax/qmax
+        m, e = np.frexp(got)
+        assert (m == 0.5).all(), "scales must be powers of two"
+        pos = vals > 0
+        assert (got[pos] * qmax >= vals[pos]).all()
+        assert (got[~pos] == 1.0).all(), "absmax == 0 must map to scale 1.0"
+
+
+@pytest.mark.parametrize("kind", ["int8", "fp8"])
+@pytest.mark.parametrize("granularity", ["page", "head"])
+def test_quantize_roundtrip_idempotent(kind, granularity):
+    """One round trip is lossy; the second reproduces identical bits —
+    the property that keeps chunk rewrites / warm restores / speculative
+    replays bit-stable on the quantized path."""
+    if kind == "fp8" and not fp8_supported():
+        pytest.skip("no float8_e4m3fn in this jax build")
+    qc = QuantConfig(kv=kind, granularity=granularity)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((5, 3, 16)) * 3.0, jnp.float32)
+    G = 1 if granularity == "page" else 4  # 16 = 4 blocks of head_dim 4
+    q1, s1 = quantize_rows(x, G, qc)
+    rt = dequant_rows(q1, s1)
+    q2, s2 = quantize_rows(rt, G, qc)
+    # value idempotency — the invariant every serving identity leans on:
+    # requantizing a round-tripped row reproduces the value bits exactly.
+    # (int8 also keeps the scale; fp8 mantissa rounding may shrink a row's
+    # absmax across a pow2 boundary, halving the re-derived scale while
+    # the products q*s — the only thing the kernels ever see — are exact.)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(dequant_rows(q2, s2)))
+    if kind == "int8":
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    # quantizing is a pure function of the value, so the fixed point is
+    # reached after one round trip: a third quantization matches the second
+    q3, s3 = quantize_rows(dequant_rows(q2, s2), G, qc)
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s3))
+    np.testing.assert_array_equal(
+        np.asarray(q2.astype(jnp.float32)), np.asarray(q3.astype(jnp.float32)))
+    # matches the numpy oracle bit for bit
+    qr, sr = ref.quantize_rows_ref(np.asarray(x), G, kind)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(sr))
+    np.testing.assert_array_equal(
+        np.asarray(q1.astype(jnp.float32)), np.asarray(qr.astype(jnp.float32)))
+
+
+def test_roundtrip_leaf_masked_matches_pool_fold():
+    """roundtrip_leaf (the engine's quantization-boundary helper, leaf
+    layout) agrees with the pool's canonical-row quantize on the same
+    rows, and leaves masked-out rows untouched."""
+    qc = QuantConfig(kv="int8", granularity="page")
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 3, 8, 2, 4)), jnp.float32)  # (L, B, ctx, nkv, hd)
+    mask = jnp.asarray(rng.integers(0, 2, size=(3, 8)).astype(bool))
+    rt = roundtrip_leaf(x, 1, qc, mask=mask)
+    # canonical fold: rows are (B, ctx) x folded features (L, nkv, hd)
+    rows = jnp.moveaxis(x, 0, 2).reshape(3, 8, -1)
+    q, s = quantize_rows(rows, leaf_groups(x.shape, qc, 1), qc)
+    want = dequant_rows(q, s).reshape(3, 8, 2, 2, 4)
+    want = jnp.moveaxis(want, 2, 0)
+    np.testing.assert_array_equal(
+        np.asarray(rt), np.asarray(jnp.where(mask[None, :, :, None, None], want, x)))
+
+
+def test_weight_quant_roundtrip():
+    params = {"w": jnp.asarray(np.random.default_rng(3).standard_normal((8, 8)),
+                               jnp.float32),
+              "step": jnp.asarray(7, jnp.int32)}
+    deq = dequantize_params(quantize_params(params))
+    assert deq["w"].dtype == jnp.float32 and deq["step"] == 7
+    np.testing.assert_allclose(np.asarray(deq["w"]), np.asarray(params["w"]),
+                               atol=2e-2)
+    # idempotent like the KV path: requantizing reproduces the same bits
+    deq2 = dequantize_params(quantize_params(deq))
+    np.testing.assert_array_equal(np.asarray(deq2["w"]), np.asarray(deq["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Kernel oracles: fused-dequant gather / quantizing scatter / ragged attn
+# ---------------------------------------------------------------------------
+
+
+def test_paged_gather_dequant_kernels_match_ref_and_xla():
+    rng = np.random.default_rng(4)
+    N, p, F, G, B, P = 9, 4, 8, 2, 3, 2
+    pages = jnp.asarray(rng.integers(-127, 128, size=(N, p, F)), jnp.int8)
+    scales = jnp.asarray(
+        ref.pow2_scale_ref(rng.uniform(0.1, 4.0, size=(N, p, G)), 127.0))
+    table = jnp.asarray(rng.integers(0, N, size=(B, P)), jnp.int32)
+    want = np.asarray(ref.paged_gather_dequant_ref(pages, scales, table))
+    got_x = np.asarray(ops.paged_gather_op(pages, table, scales=scales,
+                                           backend="xla"))
+    got_p = np.asarray(ops.paged_gather_op(pages, table, scales=scales,
+                                           backend="pallas", interpret=True))
+    np.testing.assert_array_equal(want, got_x)
+    np.testing.assert_array_equal(want, got_p)
+
+
+def test_paged_quant_kernels_lead_dims():
+    """Quantized cache leaves carry layer-group lead dims; the ops
+    wrappers fold them into the canonical row layout the scales use."""
+    qc = QuantConfig(kv="int8", granularity="head")
+    rng = np.random.default_rng(5)
+    L, N, p, nkv, hd, B, P = 2, 7, 4, 2, 4, 3, 2
+    G = leaf_groups((L, N, p, nkv, hd), qc, 1)
+    pages = jnp.asarray(rng.integers(-127, 128, size=(L, N, p, nkv, hd)), jnp.int8)
+    scales = jnp.asarray(
+        ref.pow2_scale_ref(rng.uniform(0.1, 4.0, size=(N, p, G)), 127.0))
+    table = jnp.asarray(rng.integers(0, N, size=(B, P)), jnp.int32)
+    rows = jnp.asarray(rng.standard_normal((L, B, nkv, hd)), jnp.float32)
+    pos = jnp.asarray([1, 7, 2], jnp.int32)
+
+    g_x = ops.paged_gather_op(pages, table, page_axis=1, scales=scales,
+                              backend="xla")
+    g_p = ops.paged_gather_op(pages, table, page_axis=1, scales=scales,
+                              backend="pallas", interpret=True)
+    assert g_x.shape == (L, B, P * p, nkv, hd) and g_x.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(g_x), np.asarray(g_p))
+
+    outs = {}
+    for backend in ("xla", "pallas"):
+        np_, ns_ = ops.paged_scatter_rows_op(
+            pages, table, rows, pos, page_axis=1, backend=backend,
+            interpret=True, scales=scales, quant=qc)
+        assert np_.shape == pages.shape and np_.dtype == jnp.int8
+        assert ns_.shape == scales.shape
+        outs[backend] = (np.asarray(np_.astype(jnp.int32)), np.asarray(ns_))
+    np.testing.assert_array_equal(outs["xla"][0], outs["pallas"][0])
+    np.testing.assert_array_equal(outs["xla"][1], outs["pallas"][1])
+    # the written row matches the quantize oracle on the canonical fold
+    b = 0
+    pid, off = int(table[b, int(pos[b]) // p]), int(pos[b]) % p
+    row = np.moveaxis(np.asarray(rows), 1, 0)[b].reshape(-1)  # canonical fold
+    qr, sr = ref.quantize_rows_ref(row, G, "int8")
+    np.testing.assert_array_equal(
+        outs["xla"][0][:, pid, off].reshape(-1),
+        np.asarray(qr.astype(jnp.int32)).reshape(L, nkv, hd).reshape(-1))
+    np.testing.assert_array_equal(outs["xla"][1][pid, off], np.asarray(sr))
+
+
+def test_ragged_attention_quant_matches_oracle():
+    rng = np.random.default_rng(6)
+    B, P, p, nq, nkv, hd = 3, 2, 4, 4, 2, 8
+    lens = (3, 1, 4)
+    N = 2 + B * P
+    kq = jnp.asarray(rng.integers(-127, 128, size=(N, p, nkv, hd)), jnp.int8)
+    vq = jnp.asarray(rng.integers(-127, 128, size=(N, p, nkv, hd)), jnp.int8)
+    ks = jnp.asarray(ref.pow2_scale_ref(rng.uniform(0.05, 2.0, size=(N, p, nkv)), 127.0))
+    vs = jnp.asarray(ref.pow2_scale_ref(rng.uniform(0.05, 2.0, size=(N, p, nkv)), 127.0))
+    table = jnp.asarray(2 + np.arange(B * P).reshape(B, P), jnp.int32)
+    pos_pages = np.full((N, p), -1, np.int32)
+    offs = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+    T = int(offs[-1]) + 2
+    q = jnp.asarray(rng.standard_normal((T, nq, hd)), jnp.float32)
+    q_pos = np.full((T,), -1, np.int32)
+    seg_slot = np.arange(len(lens), dtype=np.int32)
+    for s, L in enumerate(lens):
+        ctx_len = int(rng.integers(max(L, 1), P * p + 1))
+        for t in range(ctx_len):
+            pos_pages[int(table[s, t // p]), t % p] = t
+        q_pos[offs[s]: offs[s + 1]] = np.arange(ctx_len - L, ctx_len)
+    args = (q, kq, vq, jnp.asarray(pos_pages), table, jnp.asarray(offs),
+            jnp.asarray(seg_slot), jnp.asarray(q_pos))
+    out = ops.ragged_attention_op(*args, seg_cap=8, interpret=True,
+                                  k_scales=ks, v_scales=vs)
+    want = ref.ragged_attention_quant_ref(q, kq, ks, vq, vs, *args[3:])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out[int(offs[-1]):]), 0)
+
+
+# ---------------------------------------------------------------------------
+# Engine identities on the quantized path
+# ---------------------------------------------------------------------------
+
+
+def _run_streams(params, cfg, prompts, gen, **fields):
+    eng = ServingEngine(params, cfg, engine=EngineConfig(**fields))
+    for t in prompts:
+        eng.submit(Request(tokens=t, max_new_tokens=gen))
+    return eng, {o.uid: o.full_sequence.tolist() for o in eng.run()}
+
+
+def _families():
+    return {
+        "mod": tiny_cfg(),
+        "dense": tiny_cfg(mod=MoDConfig(enabled=False)),
+        "moe": tiny_cfg(moe=MoEConfig(enabled=True, n_experts=2, top_k=1,
+                                      d_ff_expert=64)),
+    }
+
+
+@pytest.mark.parametrize("kv", ["int8", "fp8"])
+def test_quant_engine_xla_pallas_bit_identical(kv):
+    """The tentpole identity: the quantized pallas path (fused in-kernel
+    dequant) streams bit-identically to the quantized xla reference."""
+    if kv == "fp8" and not fp8_supported():
+        pytest.skip("no float8_e4m3fn in this jax build")
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = np.random.default_rng(9).integers(
+        0, cfg.vocab, size=(3, 7)).astype(np.int32)
+    streams = {}
+    for backend in ("xla", "pallas"):
+        _, streams[backend] = _run_streams(
+            params, cfg, prompts, 6, batch_size=3, ctx=16, page_size=4,
+            prefill_chunk=4, paged_backend=backend,
+            quant=QuantConfig(kv=kv))
+    assert streams["xla"] == streams["pallas"]
+
+
+@pytest.mark.parametrize("granularity", ["page", "head"])
+def test_quant_drift_bounded_per_family(granularity):
+    """int8 KV must cut pool KV bytes >= 1.7x on every family while the
+    greedy streams stay close to the fp32 twin (tiny models: bounded
+    flips, not bit-equality — int8 is lossy by design)."""
+    for fam, cfg in _families().items():
+        params = api.init_model(jax.random.PRNGKey(0), cfg)
+        prompts = np.random.default_rng(10).integers(
+            0, cfg.vocab, size=(3, 8)).astype(np.int32)
+        kw = dict(batch_size=3, ctx=16, page_size=4, prefill_chunk=4)
+        eng_f, s_f = _run_streams(params, cfg, prompts, 8, **kw)
+        eng_q, s_q = _run_streams(params, cfg, prompts, 8,
+                                  quant=QuantConfig(kv="int8",
+                                                    granularity=granularity),
+                                  **kw)
+        ratio = eng_f.stats()["kv_bytes"] / eng_q.stats()["kv_bytes"]
+        assert ratio >= 1.7, (fam, ratio)
+        flips = []
+        for u in s_f:
+            a, b = s_f[u], s_q[u]
+            n = 0  # common greedy prefix length
+            while n < min(len(a), len(b)) and a[n] == b[n]:
+                n += 1
+            flips.append(1.0 - n / max(1, len(a)))
+        assert float(np.mean(flips)) <= 0.25, (fam, flips)
+
+
+def test_quant_prefix_cache_warm_restore():
+    """Prefix hits restore quantized pages + their scales: warm streams
+    equal cold ones while prefill compute measurably drops."""
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab, size=3)
+                               .astype(np.int32)]) for _ in range(4)]
+    outs, engines = {}, {}
+    for prefix in (False, True):
+        eng, s = _run_streams(
+            params, cfg, prompts, 5, batch_size=2, ctx=24, page_size=4,
+            prefill_chunk=4, prefix_cache=prefix,
+            quant=QuantConfig(kv="int8"))
+        outs[prefix], engines[prefix] = s, eng
+    assert outs[False] == outs[True]
+    cold = engines[False].stats()["prefill_tokens_computed"]
+    warm = engines[True].stats()["prefill_tokens_computed"]
+    assert warm < cold and engines[True].stats()["prefix_hit_rate"] > 0.0
+
+
+def test_quant_speculative_matches_plain():
+    """Speculative rollback truncates quantized pages + scales together:
+    greedy streams stay bit-identical to the plain quantized engine."""
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = np.random.default_rng(12).integers(
+        0, cfg.vocab, size=(3, 6)).astype(np.int32)
+    kw = dict(batch_size=3, ctx=20, page_size=4, prefill_chunk=4,
+              quant=QuantConfig(kv="int8"))
+    _, plain = _run_streams(params, cfg, prompts, 10, **kw)
+    _, spec = _run_streams(params, cfg, prompts, 10, speculate=3,
+                           draft_ratio=cfg.mod.capacity_ratio, **kw)
+    assert plain == spec
+
+
+def test_quant_ragged_matches_padded_cohort_matched():
+    """ragged == padded bit-identity on the quantized path, under
+    cohort-matched admission: every prompt drains in the first ragged
+    step (segments >= total chunks), so decode steps see identical batch
+    compositions — the precondition MoD's batch-coupled capacity routing
+    puts on ANY cross-engine identity, quantized or not."""
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (4, 8)]
+    n_chunks = sum(-(-len(t) // 4) for t in prompts)
+    kw = dict(batch_size=2, ctx=16, page_size=4, prefill_chunk=4,
+              quant=QuantConfig(kv="int8"))
+    _, padded = _run_streams(params, cfg, prompts, 6, **kw)
+    _, ragged = _run_streams(params, cfg, prompts, 6, ragged=True,
+                             ragged_segments=n_chunks, **kw)
+    assert padded == ragged
+
+
+def test_quant_weights_engine_runs():
+    """weights="int8" serves from a narrow param tree; streams are valid
+    (bounded drift is all we pin — per-tensor weight quant is lossy)."""
+    cfg = tiny_cfg(mod=MoDConfig(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = np.random.default_rng(14).integers(
+        0, cfg.vocab, size=(2, 6)).astype(np.int32)
+    _, s = _run_streams(params, cfg, prompts, 4, batch_size=2, ctx=12,
+                        page_size=4, prefill_chunk=4,
+                        quant=QuantConfig(kv="int8", weights="int8"))
+    assert all(len(v) >= 6 for v in s.values())
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig surface: kwargs shim equivalence + validation
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_equivalent_to_legacy_kwargs():
+    cfg = tiny_cfg()
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = np.random.default_rng(15).integers(
+        0, cfg.vocab, size=(3, 7)).astype(np.int32)
+    kw = dict(batch_size=3, ctx=16, page_size=4, prefill_chunk=4,
+              prefix_cache=True)
+    engine_mod._WARNED_LEGACY_KWARGS = False
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = ServingEngine(params, cfg, **kw)
+    assert legacy.engine_config == EngineConfig(**kw)
+    modern = ServingEngine(params, cfg, engine=EngineConfig(**kw))
+    streams = {}
+    for name, eng in (("legacy", legacy), ("modern", modern)):
+        for t in prompts:
+            eng.submit(Request(tokens=t, max_new_tokens=6))
+        streams[name] = {o.uid: o.full_sequence.tolist() for o in eng.run()}
+    assert streams["legacy"] == streams["modern"]
+    # the shim warns once per process, not per engine
+    engine_mod._WARNED_LEGACY_KWARGS = False
+    with pytest.warns(DeprecationWarning):
+        ServingEngine(params, cfg, batch_size=2, ctx=8)
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        ServingEngine(params, cfg, batch_size=2, ctx=8)
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="not both"):
+        ServingEngine(None, tiny_cfg(), batch_size=2,
+                      engine=EngineConfig(batch_size=2, ctx=8))
+    with pytest.raises(ValueError, match="batch_size"):
+        EngineConfig(batch_size=0, ctx=8)
+    with pytest.raises(ValueError, match="require page_size"):
+        EngineConfig(batch_size=2, ctx=8, prefix_cache=True)
+    with pytest.raises(ValueError, match="paged pool"):
+        EngineConfig(batch_size=2, ctx=8, ragged=True)
+    with pytest.raises(ValueError, match="rollback"):
+        EngineConfig(batch_size=2, ctx=8, speculate=2)
+    with pytest.raises(ValueError, match="requires speculate"):
+        EngineConfig(batch_size=2, ctx=8, spec_verify_budget=4)
+    with pytest.raises(ValueError, match="adaptive_capacity"):
+        EngineConfig(batch_size=2, ctx=8, capacity_levels=(1.0, 0.5))
+    with pytest.raises(ValueError, match="narrow"):
+        EngineConfig(batch_size=2, ctx=8, quant=QuantConfig(kv="int8"))
+    with pytest.raises(ValueError, match="QuantConfig"):
+        EngineConfig(batch_size=2, ctx=8, quant="int8")
+
+
+def test_quant_config_validation():
+    with pytest.raises(ValueError, match="kv must be one of"):
+        QuantConfig(kv="int4")
+    with pytest.raises(ValueError, match="granularity"):
+        QuantConfig(kv="int8", granularity="tensor")
+    with pytest.raises(ValueError, match="weights"):
+        QuantConfig(weights="fp8")
+    assert not QuantConfig().enabled
+    assert QuantConfig(kv="int8").qmax == 127.0
+    # frozen + hashable: part of jit-cache keys
+    assert hash(QuantConfig(kv="int8")) == hash(QuantConfig(kv="int8"))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        QuantConfig().kv = "int8"
