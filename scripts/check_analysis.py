@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""CI ``analysis`` stage driver: modlint + (when installed) ruff + mypy.
+
+Three gates, in order:
+
+1. ``modlint`` (src/repro/analysis): the repo-specific trace-safety /
+   jit-cache / Pallas kernel-contract rules over ``src`` and ``scripts``,
+   ratcheted against the committed ``analysis_baseline.json``. Always
+   runs — it needs nothing beyond the stdlib ``ast`` module (no JAX
+   execution), which is why the stage is fast enough for ``--fast``.
+2. ``ruff`` (pycodestyle/pyflakes/bugbear subset, configured in
+   pyproject.toml) over ``src/repro/serve`` and ``src/repro/analysis``.
+3. ``mypy`` (configured in pyproject.toml) over the same two trees.
+
+ruff/mypy are dev dependencies (requirements-dev.txt). The pinned local
+container may not ship them; a missing tool is reported as SKIP, not a
+failure — the GitHub Actions analysis lane installs requirements-dev.txt
+and therefore always runs all three.
+
+Exit status: nonzero iff any gate that ran failed.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MODLINT_PATHS = ["src", "scripts"]
+LINT_PATHS = ["src/repro/serve", "src/repro/analysis"]
+
+
+def have_tool(module: str) -> bool:
+    return importlib.util.find_spec(module) is not None
+
+
+def run_modlint() -> int:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.analysis import main as modlint_main
+
+    print("[analysis] modlint: python -m repro.analysis", *MODLINT_PATHS)
+    return modlint_main(MODLINT_PATHS)
+
+
+def run_ruff() -> int:
+    if not have_tool("ruff"):
+        print("[analysis] ruff: SKIP (not installed — pip install -r "
+              "requirements-dev.txt)")
+        return 0
+    cmd = [sys.executable, "-m", "ruff", "check", *LINT_PATHS]
+    print("[analysis] ruff:", " ".join(cmd[2:]))
+    return subprocess.call(cmd, cwd=REPO)
+
+
+def run_mypy() -> int:
+    if not have_tool("mypy"):
+        print("[analysis] mypy: SKIP (not installed — pip install -r "
+              "requirements-dev.txt)")
+        return 0
+    cmd = [sys.executable, "-m", "mypy", "--config-file", "pyproject.toml"]
+    print("[analysis] mypy:", " ".join(cmd[2:]))
+    return subprocess.call(cmd, cwd=REPO)
+
+
+def main() -> int:
+    os.chdir(REPO)
+    failures = []
+    for name, gate in (("modlint", run_modlint), ("ruff", run_ruff),
+                       ("mypy", run_mypy)):
+        rc = gate()
+        if rc != 0:
+            failures.append(name)
+            print(f"[analysis] {name}: FAILED (exit {rc})")
+    if failures:
+        print(f"[analysis] FAILED: {', '.join(failures)}")
+        return 1
+    print("[analysis] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,6 +2,12 @@
 # Tier-1 CI, in named timed stages shared by local runs and the GitHub
 # workflow lanes (.github/workflows/ci.yml):
 #
+#   analysis  static analysis: modlint (python -m repro.analysis — the
+#             repo-specific trace-safety / jit-cache / Pallas
+#             kernel-contract rules, ratcheted against
+#             analysis_baseline.json) plus ruff+mypy when installed
+#             (requirements-dev.txt). Pure AST work, no JAX execution —
+#             runs first and in --fast mode too
 #   unit      full pytest suite on one CPU device (pallas in interpret mode)
 #             — includes tests/test_paged.py: paged-vs-contiguous token
 #             identity, prefix-cache reuse, page-exhaustion preemption —
@@ -26,8 +32,9 @@
 #   docs      markdown link check + quickstart as an executable smoke test
 #
 #   scripts/ci.sh            # all stages
-#   scripts/ci.sh --fast     # unit+backends+spmd+soak+faults only (no
-#                            # perf/docs); needs no network, no BENCH files
+#   scripts/ci.sh --fast     # analysis+unit+backends+spmd+soak+faults only
+#                            # (no perf/docs); needs no network, no BENCH
+#                            # files
 #
 # Extra args after the flags are passed to the unit-stage pytest.
 set -euo pipefail
@@ -63,6 +70,13 @@ if [[ "$HAVE_COV" == 1 ]]; then
   COV_ARGS="--cov=repro.serve --cov-report=term
             --cov-report=xml:coverage-serve.xml --cov-fail-under=70"
 fi
+
+stage analysis
+# static gates before anything compiles: modlint needs only the stdlib
+# ast module, so a trace-safety or kernel-contract violation fails in
+# seconds, not after the test lanes
+python scripts/check_analysis.py
+stage_done analysis $((SECONDS - STAGE_T0))
 
 stage unit
 python -m pytest -x -q $COV_ARGS --ignore=tests/test_serve_soak.py \

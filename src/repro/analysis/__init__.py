@@ -1,0 +1,43 @@
+"""repo-specific static analysis (``modlint``).
+
+MoD's headline property is a *static computation graph with known tensor
+sizes*: every serving config is one frozen, hashable object keying one
+compiled program in a shared jit cache, every Pallas kernel has an xla
+oracle, and nothing Python-side branches on traced values. Those
+invariants have been broken silently before (the PR 5 ``PoolSpec``
+array-field jit-cache pin, non-frozen ladder configs, full-width dequant
+round trips) — this package machine-checks them on every commit.
+
+Usage::
+
+    python -m repro.analysis [paths ...]        # default: src scripts
+    python -m repro.analysis --list-rules
+    python -m repro.analysis --update-baseline  # shrink the ratchet
+
+Findings can be suppressed inline with a rationale::
+
+    risky_line()  # modlint: disable=jit-in-loop -- memoized at module level
+
+or carried temporarily in ``analysis_baseline.json`` (new violations
+fail; the baseline only shrinks — fixing a violation without removing
+its baseline entry also fails, which is what keeps the ratchet honest).
+"""
+
+from repro.analysis.core import Finding, Module, Program, Rule, all_rules, rule
+from repro.analysis.runner import analyze_paths, main
+
+# rule modules register themselves on import
+from repro.analysis import trace_rules as _trace_rules  # noqa: F401
+from repro.analysis import kernel_rules as _kernel_rules  # noqa: F401
+from repro.analysis import engine_rules as _engine_rules  # noqa: F401
+
+__all__ = [
+    "Finding",
+    "Module",
+    "Program",
+    "Rule",
+    "all_rules",
+    "analyze_paths",
+    "main",
+    "rule",
+]

@@ -1,0 +1,80 @@
+"""Baseline ratchet for modlint findings.
+
+``analysis_baseline.json`` carries *known* violations: each entry is
+(rule, path, symbol, count). The comparison is a one-way ratchet:
+
+* a finding not covered by the baseline (new rule/site, or a count above
+  the recorded one) FAILS — new violations never land silently;
+* a baseline entry no longer matched by any finding (or matched below
+  its count) also FAILS, with instructions to shrink the baseline — the
+  file only ever gets smaller, so burned-down debt can't quietly respawn.
+
+Line numbers are deliberately not part of the identity, so unrelated
+edits above a known violation don't churn the file.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+from typing import Dict, List, Tuple
+
+from repro.analysis.core import Finding
+
+BASELINE_VERSION = 1
+
+
+def group(findings: List[Finding]) -> Counter:
+    return Counter(f.key for f in findings)
+
+
+def load(path: str) -> Counter:
+    """Baseline file -> Counter of (rule, path, symbol). Missing file is
+    an empty baseline (the healthy steady state)."""
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except FileNotFoundError:
+        return Counter()
+    if raw.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"{path}: unsupported baseline version {raw.get('version')!r} "
+            f"(expected {BASELINE_VERSION})"
+        )
+    out: Counter = Counter()
+    for e in raw.get("findings", []):
+        out[(e["rule"], e["path"], e.get("symbol", ""))] = int(e.get("count", 1))
+    return out
+
+
+def save(path: str, findings: List[Finding]) -> None:
+    grouped = group(findings)
+    entries = [
+        {"rule": rule, "path": p, "symbol": sym, "count": n}
+        for (rule, p, sym), n in sorted(grouped.items())
+    ]
+    with open(path, "w") as f:
+        json.dump({"version": BASELINE_VERSION, "findings": entries}, f, indent=2)
+        f.write("\n")
+
+
+def compare(
+    findings: List[Finding], baseline: Counter
+) -> Tuple[List[Finding], Dict[Tuple[str, str, str], int]]:
+    """Returns (new_findings, stale_entries).
+
+    ``new_findings``: concrete findings beyond the baselined count for
+    their key (the first ``baseline[key]`` occurrences are absorbed).
+    ``stale_entries``: key -> surplus baseline count with no matching
+    finding (violations that were fixed — shrink the file).
+    """
+    budget = dict(baseline)
+    new: List[Finding] = []
+    for f in findings:
+        left = budget.get(f.key, 0)
+        if left > 0:
+            budget[f.key] = left - 1
+        else:
+            new.append(f)
+    stale = {k: n for k, n in budget.items() if n > 0}
+    return new, stale

@@ -1,0 +1,308 @@
+"""modlint core: findings, suppressions, the rule registry, and the
+parsed-program model shared by every rule.
+
+A ``Rule`` sees one parsed ``Module`` at a time plus the whole
+``Program`` (for cross-file contracts like "every Pallas kernel has a
+``ref.py`` oracle"). Findings are anchored to (rule, path, symbol) — not
+line numbers — so the committed baseline survives unrelated edits.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+# ---------------------------------------------------------------------------
+# findings
+# ---------------------------------------------------------------------------
+
+# `# modlint: disable=rule-a,rule-b -- rationale` — the rule list stops at
+# the first token that isn't a comma-joined identifier, so the (required!)
+# prose rationale after it doesn't leak into the parse
+_SUPPRESS_RE = re.compile(r"#\s*modlint:\s*disable=([\w*\-]+(?:\s*,\s*[\w*\-]+)*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one site."""
+
+    rule: str  # slug, e.g. "jit-in-loop"
+    code: str  # numeric id, e.g. "MOD101"
+    path: str  # posix path as given on the command line
+    line: int  # 1-based source line (display only — not part of identity)
+    symbol: str  # enclosing def/class qualname, "" at module scope
+    message: str
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: stable across unrelated line churn."""
+        return (self.rule, self.path, self.symbol)
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}"
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{where}: {self.code} ({self.rule}){sym}: {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# rule registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    slug: str
+    code: str
+    family: str  # "trace" | "kernel" | "engine"
+    summary: str  # one line: what the rule flags
+    guards: str  # the invariant it protects (shown by --list-rules)
+    check: Callable[["Module", "Program"], Iterable[Finding]]
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def rule(slug: str, code: str, family: str, summary: str, guards: str):
+    """Register ``fn(module, program) -> iterable[Finding]`` as a rule."""
+
+    def deco(fn: Callable[["Module", "Program"], Iterable[Finding]]) -> Rule:
+        r = Rule(slug=slug, code=code, family=family, summary=summary,
+                 guards=guards, check=fn)
+        if slug in _REGISTRY or any(x.code == code for x in _REGISTRY.values()):
+            raise ValueError(f"duplicate rule {slug}/{code}")
+        _REGISTRY[slug] = r
+        return r
+
+    return deco
+
+
+def all_rules() -> List[Rule]:
+    return sorted(_REGISTRY.values(), key=lambda r: r.code)
+
+
+def get_rule(slug: str) -> Rule:
+    return _REGISTRY[slug]
+
+
+# ---------------------------------------------------------------------------
+# parsed module / program model
+# ---------------------------------------------------------------------------
+
+
+class Module:
+    """One parsed source file with the lookups every rule needs."""
+
+    def __init__(self, path: str, source: str) -> None:
+        self.path = path.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree: Optional[ast.Module] = None
+        self.syntax_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            self.syntax_error = e
+            return
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        # line -> suppressed rule slugs/codes ("*" = all)
+        self.suppressions: Dict[int, Set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                names = {t.strip() for t in m.group(1).split(",") if t.strip()}
+                self.suppressions[i] = names
+
+    # -------------------------------------------------------------- structure
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        for a in self.ancestors(node):
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return a
+        return None
+
+    def qualname(self, node: ast.AST) -> str:
+        parts: List[str] = []
+        for a in self.ancestors(node):
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                parts.append(a.name)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            parts.insert(0, node.name)
+        return ".".join(reversed(parts))
+
+    def walk(self) -> Iterator[ast.AST]:
+        if self.tree is None:
+            return iter(())
+        return ast.walk(self.tree)
+
+    # ------------------------------------------------------------ suppression
+    def suppressed(self, line: int, slug: str, code: str) -> bool:
+        """A ``# modlint: disable=`` comment on the flagged line, or in the
+        contiguous comment block directly above it (so a suppression can
+        carry a multi-line rationale — which it should)."""
+
+        def hit(ln: int) -> bool:
+            names = self.suppressions.get(ln)
+            return bool(names and (slug in names or code in names or "*" in names))
+
+        if hit(line):
+            return True
+        ln = line - 1
+        while 1 <= ln <= len(self.lines):
+            text = self.lines[ln - 1].strip()
+            if not text.startswith("#"):
+                break
+            if hit(ln):
+                return True
+            ln -= 1
+        return False
+
+    # --------------------------------------------------------------- helpers
+    def finding(self, r: Rule, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(rule=r.slug, code=r.code, path=self.path, line=line,
+                       symbol=self.qualname(node), message=message)
+
+
+class Program:
+    """All modules of one analysis run, keyed by path."""
+
+    def __init__(self, modules: Iterable[Module]) -> None:
+        self.modules: Dict[str, Module] = {m.path: m for m in modules}
+        # repo-wide dataclass table: class name -> frozen? (used by
+        # replace-nonfrozen; last definition wins, which is fine for a
+        # codebase that doesn't reuse config class names)
+        self.dataclasses: Dict[str, bool] = {}
+        for m in self.modules.values():
+            for node in m.walk():
+                if isinstance(node, ast.ClassDef):
+                    fz = dataclass_frozen(node)
+                    if fz is not None:
+                        self.dataclasses[node.name] = fz
+
+    def sibling(self, module: Module, filename: str) -> Optional[Module]:
+        """The module named ``filename`` in the same directory, if scanned."""
+        head, _, _ = module.path.rpartition("/")
+        want = f"{head}/{filename}" if head else filename
+        return self.modules.get(want)
+
+
+# ---------------------------------------------------------------------------
+# shared AST utilities
+# ---------------------------------------------------------------------------
+
+
+def call_name(node: ast.AST) -> str:
+    """Dotted name of a call/attribute/name node ('' if not name-like)."""
+    if isinstance(node, ast.Call):
+        return call_name(node.func)
+    if isinstance(node, ast.Attribute):
+        base = call_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def name_tokens(name: str, stop: Set[str]) -> frozenset:
+    """Lowercased underscore tokens of an identifier, minus stop words."""
+    return frozenset(t for t in name.lower().strip("_").split("_") if t and t not in stop)
+
+
+def dataclass_frozen(cls: ast.ClassDef) -> Optional[bool]:
+    """None if ``cls`` is not a dataclass, else its frozen flag."""
+    for deco in cls.decorator_list:
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        nm = call_name(target)
+        if nm.split(".")[-1] != "dataclass":
+            continue
+        if isinstance(deco, ast.Call):
+            for kw in deco.keywords:
+                if kw.arg == "frozen":
+                    return isinstance(kw.value, ast.Constant) and kw.value.value is True
+        return False
+    return None
+
+
+def is_namedtuple(cls: ast.ClassDef) -> bool:
+    return any(call_name(b).split(".")[-1] == "NamedTuple" for b in cls.bases)
+
+
+def annotation_text(node: Optional[ast.AST]) -> str:
+    if node is None:
+        return ""
+    return ast.unparse(node)
+
+
+def func_calls(fn: ast.AST, *, into_nested_defs: bool = False) -> Iterator[ast.Call]:
+    """Call nodes lexically inside ``fn``'s own body (nested ``def``s are
+    separate scopes and excluded unless asked for)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        if not into_nested_defs and isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            continue
+        if isinstance(node, ast.Call):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def local_names(fn: ast.AST) -> Set[str]:
+    """Names bound inside ``fn``: params, assignments, for-targets,
+    withitems, nested defs. Used to tell closure state from locals."""
+    out: Set[str] = set()
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        a = fn.args
+        for arg in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+            out.add(arg.arg)
+        if a.vararg:
+            out.add(a.vararg.arg)
+        if a.kwarg:
+            out.add(a.kwarg.arg)
+    elif isinstance(fn, ast.Lambda):
+        a = fn.args
+        for arg in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+            out.add(arg.arg)
+
+    def collect_target(t: ast.AST) -> None:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            out.add(node.name)
+            continue
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                collect_target(t)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            if isinstance(node.target, ast.Name):
+                out.add(node.target.id)
+        elif isinstance(node, ast.For):
+            collect_target(node.target)
+        elif isinstance(node, ast.withitem) and node.optional_vars is not None:
+            collect_target(node.optional_vars)
+        elif isinstance(node, (ast.NamedExpr,)):
+            if isinstance(node.target, ast.Name):
+                out.add(node.target.id)
+        elif isinstance(node, ast.comprehension):
+            collect_target(node.target)
+        stack.extend(ast.iter_child_nodes(node))
+    return out

@@ -1,0 +1,298 @@
+"""Engine-invariant rules (MOD3xx).
+
+The serving engine's books (stats counters, pool accounting) and its
+jitted step bodies have discipline the property tests assert at runtime;
+these rules catch the same classes of bug at commit time: Python side
+effects smuggled into lax.scan/cond bodies (they run once at trace time,
+not per step), non-monotone lifetime counters, dataclasses.replace on
+mutable configs, and blanket exception handlers that swallow real bugs.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional, Set
+
+from repro.analysis.core import (
+    Finding,
+    Module,
+    Program,
+    call_name,
+    local_names,
+    rule,
+)
+
+_CONTROL_FLOW = ("lax.scan", "lax.cond", "lax.while_loop", "lax.fori_loop",
+                 "lax.switch")
+
+_MUTATORS = frozenset({"append", "extend", "add", "insert", "pop", "remove",
+                       "clear", "setdefault", "update"})
+
+
+def _control_flow_bodies(module: Module) -> Iterator[ast.AST]:
+    """Function defs / lambdas passed (by name or inline) to lax control
+    flow primitives. Only locally-defined bodies are resolvable."""
+    for node in module.walk():
+        if not isinstance(node, ast.Call):
+            continue
+        nm = call_name(node)
+        if not any(nm.endswith(cf) for cf in _CONTROL_FLOW):
+            continue
+        enclosing = module.enclosing_function(node)
+        for arg in node.args:
+            if isinstance(arg, ast.Lambda):
+                yield arg
+            elif isinstance(arg, ast.Name) and enclosing is not None:
+                for n in ast.walk(enclosing):
+                    if (
+                        isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and n.name == arg.id
+                    ):
+                        yield n
+
+
+@rule(
+    "scan-body-side-effect",
+    "MOD301",
+    "engine",
+    "Python side effect on closure state inside a lax.scan/cond body",
+    "scan/cond bodies execute ONCE, at trace time — a list.append or "
+    "dict write to closure state records one trace-time value, not one "
+    "per step; per-step outputs must ride the scan's ys / carry",
+)
+def check_scan_body_side_effect(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_scan_body_side_effect
+    seen: Set[int] = set()
+    for body in _control_flow_bodies(module):
+        if id(body) in seen:
+            continue
+        seen.add(id(body))
+        locals_ = local_names(body)
+        if isinstance(body, ast.Lambda):
+            continue  # lambdas can't contain statements; mutator calls below
+        for node in ast.walk(body):
+            # closure_list.append(x) etc.
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                base = node.func.value
+                if (
+                    isinstance(base, ast.Name)
+                    and base.id not in locals_
+                    and node.func.attr in _MUTATORS
+                ):
+                    yield module.finding(
+                        r, node,
+                        f"`{base.id}.{node.func.attr}(...)` mutates closure "
+                        "state inside a lax control-flow body — this runs "
+                        "once at trace time; emit per-step values through "
+                        "the scan carry/ys instead",
+                    )
+            # closure_dict[k] = v / closure_obj.attr = v
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                for t in targets:
+                    inner = t
+                    while isinstance(inner, (ast.Subscript, ast.Attribute)):
+                        inner = inner.value
+                    if (
+                        isinstance(inner, ast.Name)
+                        and inner.id not in locals_
+                        and inner is not t  # plain Name assign creates a local
+                    ):
+                        yield module.finding(
+                            r, t,
+                            f"assignment into closure object `{inner.id}` "
+                            "inside a lax control-flow body — trace-time "
+                            "side effect, not a per-step write",
+                        )
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                yield module.finding(
+                    r, node,
+                    "global/nonlocal rebinding inside a lax control-flow "
+                    "body — trace-time side effect",
+                )
+
+
+# lifetime counters follow a strict discipline: monotone non-decreasing
+# outside __init__/reset so stats() deltas are meaningful across scrapes
+_COUNTERISH = re.compile(
+    r"(^n_|_count$|_total$|tokens$|_steps$|^steps$|shed|expired|cancelled"
+    r"|failed|admitted|preempted|hits$|misses$|compilations)"
+)
+_RESETTISH = re.compile(r"^(__init__|reset|clear|_reset)")
+
+
+@rule(
+    "counter-decrement",
+    "MOD302",
+    "engine",
+    "decrement of a monotone stats counter outside __init__/reset",
+    "stats() counters are contractually monotone (test_serve_stats pins "
+    "it); a -= on one turns every rate/delta computed from scrapes "
+    "negative and silently corrupts the overload controller's signals",
+)
+def check_counter_decrement(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_counter_decrement
+    for node in module.walk():
+        if not isinstance(node, ast.AugAssign) or not isinstance(node.op, ast.Sub):
+            continue
+        target = node.target
+        attr: Optional[str] = None
+        if isinstance(target, ast.Attribute) and isinstance(target.value, ast.Name) \
+                and target.value.id == "self":
+            attr = target.attr
+        elif isinstance(target, ast.Subscript):
+            base = target.value
+            if isinstance(base, ast.Attribute) and isinstance(base.value, ast.Name) \
+                    and base.value.id == "self":
+                sl = target.slice
+                if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+                    attr = sl.value
+        if attr is None or not _COUNTERISH.search(attr):
+            continue
+        fn = module.enclosing_function(node)
+        if fn is not None and _RESETTISH.match(fn.name):
+            continue
+        yield module.finding(
+            r, node,
+            f"`self.{attr} -= ...` decrements a counter-named attribute — "
+            "stats counters are monotone by contract; if this is a gauge, "
+            "rename it or suppress with the rationale",
+        )
+
+
+def _resolve_class(module: Module, call: ast.Call) -> Optional[str]:
+    """Best-effort class name of dataclasses.replace's first argument."""
+    if not call.args:
+        return None
+    arg = call.args[0]
+    fn = module.enclosing_function(call)
+    if isinstance(arg, ast.Name):
+        if fn is None:
+            return None
+        # parameter annotation
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = fn.args
+            for p in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+                if p.arg == arg.id and p.annotation is not None:
+                    return _ann_class(p.annotation)
+        # local annotated assignment or direct construction
+        for n in ast.walk(fn):
+            if isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name) \
+                    and n.target.id == arg.id:
+                return _ann_class(n.annotation)
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                if any(isinstance(t, ast.Name) and t.id == arg.id for t in n.targets):
+                    nm = call_name(n.value).rsplit(".", 1)[-1]
+                    if nm and nm[0].isupper():
+                        return nm
+    elif isinstance(arg, ast.Name) is False and isinstance(arg, ast.Attribute):
+        pass  # self.cfg etc. — not resolvable without type inference
+    if isinstance(arg, ast.Name) and arg.id == "self":
+        for anc in module.ancestors(call):
+            if isinstance(anc, ast.ClassDef):
+                return anc.name
+    return None
+
+
+def _ann_class(ann: ast.AST) -> Optional[str]:
+    # unwrap Optional[X] / "X"
+    if isinstance(ann, ast.Subscript):
+        ann = ann.slice
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.split(".")[-1] or None
+    if isinstance(ann, (ast.Name, ast.Attribute)):
+        nm = call_name(ann)
+        return nm.split(".")[-1] or None
+    return None
+
+
+@rule(
+    "replace-nonfrozen",
+    "MOD303",
+    "engine",
+    "dataclasses.replace on a non-frozen dataclass",
+    "replace() on a frozen config derives a new hashable jit-cache key "
+    "(capacity ladder, draft configs); on a mutable dataclass it papers "
+    "over shared-instance aliasing — mutate or freeze, don't replace",
+)
+def check_replace_nonfrozen(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_replace_nonfrozen
+    for node in module.walk():
+        if not isinstance(node, ast.Call):
+            continue
+        nm = call_name(node)
+        if nm not in ("dataclasses.replace", "replace"):
+            continue
+        if nm == "replace" and not _imports_replace(module):
+            continue
+        cls = _resolve_class(module, node)
+        if cls is None:
+            continue
+        frozen = program.dataclasses.get(cls)
+        if frozen is False:
+            yield module.finding(
+                r, node,
+                f"dataclasses.replace on {cls}, which is a non-frozen "
+                "dataclass — only frozen configs may be replace()-derived "
+                "(each result must be a valid jit cache key)",
+            )
+
+
+def _imports_replace(module: Module) -> bool:
+    for node in module.walk():
+        if isinstance(node, ast.ImportFrom) and node.module == "dataclasses":
+            if any(a.name == "replace" for a in node.names):
+                return True
+    return False
+
+
+_BROAD = ("Exception", "BaseException")
+
+
+@rule(
+    "blanket-except",
+    "MOD304",
+    "engine",
+    "broad except that neither re-raises nor uses the exception",
+    "a bare `except Exception:` around kernel/IO plumbing converts real "
+    "bugs (shape mismatches, trace leaks) into silent fallbacks; catch "
+    "the specific expected types and let the rest propagate",
+)
+def check_blanket_except(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_blanket_except
+    for node in module.walk():
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        broad = node.type is None or (
+            isinstance(node.type, (ast.Name, ast.Attribute))
+            and call_name(node.type).split(".")[-1] in _BROAD
+        )
+        if not broad:
+            continue
+        # a handler that re-raises, or binds the exception and actually
+        # uses it (logging / recording for later re-raise), is deliberate
+        reraises = any(isinstance(n, ast.Raise) for n in ast.walk(node))
+        uses_exc = False
+        if node.name:
+            uses_exc = any(
+                isinstance(n, ast.Name) and n.id == node.name
+                for n in ast.walk(node)
+            )
+        if reraises or uses_exc:
+            continue
+        caught = call_name(node.type) if node.type is not None else "<bare>"
+        yield module.finding(
+            r, node,
+            f"except {caught} swallows everything — catch the specific "
+            "expected exception types (ImportError, OSError, ...) and "
+            "re-raise or propagate the rest",
+        )
+
+
+RULES = [
+    check_scan_body_side_effect,
+    check_counter_decrement,
+    check_replace_nonfrozen,
+    check_blanket_except,
+]

@@ -1,0 +1,230 @@
+"""Pallas kernel-contract rules (MOD2xx). Scoped to files living under a
+``kernels/`` directory.
+
+Every ``pl.pallas_call`` site in this repo carries four standing
+contracts: it has an xla oracle in ``kernels/ref.py`` (the bit-for-bit
+reference the backends stage diffs against), it threads an ``interpret``
+flag (CPU CI exercises kernels in interpret mode only), its grid
+divisibility is guarded by an assert or padding helper, and — for the
+quantized paths (PR 9) — dequantization happens *inside* the kernel in
+VMEM, never as a full-width HBM materialization in the wrapper.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, List, Optional
+
+from repro.analysis.core import (
+    Finding,
+    Module,
+    Program,
+    call_name,
+    func_calls,
+    name_tokens,
+    rule,
+)
+
+# words that name *how* a function computes, not *what* it computes —
+# stripped before matching a kernel entry point to its ref.py oracle
+_STOP = frozenset({
+    "ref", "xla", "pallas", "call", "kernel", "host", "mirror", "op",
+    "flash", "paged", "intra", "fused",
+})
+
+
+def _in_kernels_dir(module: Module) -> bool:
+    parts = module.path.split("/")
+    return "kernels" in parts[:-1]
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    # the common shape is pl.pallas_call(kernel, ...)(operands): only the
+    # inner call (whose func is the pallas_call attribute) is the site —
+    # the outer application would otherwise double-report every kernel
+    if isinstance(node.func, ast.Call):
+        return False
+    nm = call_name(node)
+    return nm.endswith("pallas_call")
+
+
+def _pallas_entries(module: Module) -> List[ast.FunctionDef]:
+    """Top-level-visible functions that directly invoke pl.pallas_call."""
+    out = []
+    for node in module.walk():
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_pallas_call(c) for c in func_calls(node)):
+                out.append(node)
+    return out
+
+
+@rule(
+    "pallas-missing-oracle",
+    "MOD201",
+    "kernel",
+    "pallas_call entry point without a kernels/ref.py oracle",
+    "the backends CI stage proves xla == pallas bit-for-bit through the "
+    "ref.py oracles; a kernel without one is unverifiable — its output is "
+    "whatever interpret mode happens to produce",
+)
+def check_pallas_missing_oracle(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_pallas_missing_oracle
+    if not _in_kernels_dir(module) or module.path.endswith("/ref.py"):
+        return
+    entries = _pallas_entries(module)
+    if not entries:
+        return
+    ref = program.sibling(module, "ref.py")
+    ref_tokens: List[frozenset] = []
+    if ref is not None and ref.tree is not None:
+        for node in ref.tree.body:
+            if isinstance(node, ast.FunctionDef) and node.name.endswith("_ref"):
+                toks = name_tokens(node.name, _STOP)
+                if toks:
+                    ref_tokens.append(toks)
+    for fn in entries:
+        toks = name_tokens(fn.name, _STOP)
+        if not toks:
+            continue
+        ok = any(toks <= rt or rt <= toks for rt in ref_tokens)
+        if not ok:
+            yield module.finding(
+                r, fn,
+                f"{fn.name} invokes pl.pallas_call but kernels/ref.py has no "
+                "matching *_ref oracle (xla reference) — register one so the "
+                "backends stage can diff it",
+            )
+
+
+@rule(
+    "pallas-missing-interpret",
+    "MOD202",
+    "kernel",
+    "pl.pallas_call without an explicit interpret= kwarg",
+    "tier-1 CI runs on CPU where Pallas only executes in interpret mode; "
+    "a call site that doesn't thread the flag is untestable by the suite "
+    "that gates every commit",
+)
+def check_pallas_missing_interpret(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_pallas_missing_interpret
+    if not _in_kernels_dir(module):
+        return
+    for node in module.walk():
+        if isinstance(node, ast.Call) and _is_pallas_call(node):
+            kws = {kw.arg for kw in node.keywords}
+            if "interpret" not in kws:
+                yield module.finding(
+                    r, node,
+                    "pl.pallas_call without interpret= — thread the flag so "
+                    "CPU CI can execute this kernel in interpret mode",
+                )
+
+
+_PAD_HELPER = re.compile(r"(pad|block|div|round|cdiv|align)", re.IGNORECASE)
+
+
+def _has_floordiv(node: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.BinOp) and isinstance(n.op, ast.FloorDiv)
+        for n in ast.walk(node)
+    )
+
+
+def _grid_arg(call: ast.Call) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            return kw.value
+    return None
+
+
+@rule(
+    "pallas-grid-divisibility",
+    "MOD203",
+    "kernel",
+    "floor-divided grid without a divisibility assert or padding helper",
+    "a grid computed as dim // block silently drops the remainder tail — "
+    "out-of-range rows are read/written as garbage; every such site must "
+    "assert divisibility or route through a padding helper",
+)
+def check_pallas_grid_divisibility(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_pallas_grid_divisibility
+    if not _in_kernels_dir(module):
+        return
+    for fn in _pallas_entries(module):
+        guarded = False
+        grid_site: Optional[ast.AST] = None
+        floordiv = False
+        # the grid may be computed inline in the call or assigned earlier
+        # in the function body — scan the whole body for // used near the
+        # pallas_call, and for guards
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assert):
+                t = ast.walk(node.test)
+                if any(isinstance(x, ast.BinOp) and isinstance(x.op, ast.Mod) for x in t):
+                    guarded = True
+        for call in func_calls(fn):
+            if _is_pallas_call(call):
+                g = _grid_arg(call)
+                if g is not None and _has_floordiv(g):
+                    floordiv = True
+                    grid_site = call
+            else:
+                nm = call_name(call).rsplit(".", 1)[-1]
+                if _PAD_HELPER.search(nm):
+                    guarded = True
+        if not floordiv:
+            # grid assigned from a variable: look for `X // b` assignments
+            for node in ast.walk(fn):
+                if (
+                    isinstance(node, ast.Assign)
+                    and any(
+                        isinstance(t, ast.Name) and t.id == "grid"
+                        for t in node.targets
+                    )
+                    and _has_floordiv(node.value)
+                ):
+                    floordiv = True
+                    grid_site = node
+        if floordiv and not guarded and grid_site is not None:
+            yield module.finding(
+                r, grid_site,
+                f"{fn.name} floor-divides its grid but neither asserts "
+                "divisibility (% == 0) nor calls a padding helper — the "
+                "remainder tail is silently dropped",
+            )
+
+
+@rule(
+    "dequant-outside-kernel",
+    "MOD204",
+    "kernel",
+    "full-width dequantize in a pallas wrapper (HBM round trip)",
+    "PR 9's contract: quantized KV pages are widened in VMEM inside the "
+    "kernel; a wrapper-level dequantize materializes the full-width array "
+    "in HBM first, erasing the entire memory win the quant path exists for",
+)
+def check_dequant_outside_kernel(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_dequant_outside_kernel
+    if not _in_kernels_dir(module):
+        return
+    for fn in _pallas_entries(module):
+        for call in func_calls(fn):
+            if _is_pallas_call(call):
+                continue
+            nm = call_name(call).rsplit(".", 1)[-1]
+            if nm.startswith("dequant"):
+                yield module.finding(
+                    r, call,
+                    f"{fn.name} calls {nm}(...) outside the kernel body and "
+                    "then launches pallas_call — dequantize inside the "
+                    "kernel (VMEM), never round-trip HBM at full width",
+                )
+
+
+RULES = [
+    check_pallas_missing_oracle,
+    check_pallas_missing_interpret,
+    check_pallas_grid_divisibility,
+    check_dequant_outside_kernel,
+]

@@ -1,0 +1,163 @@
+"""modlint driver: walk paths, run every registered rule, apply inline
+suppressions and the committed baseline ratchet, report, exit."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Iterable, List, Optional, Tuple
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.core import Finding, Module, Program, all_rules
+
+DEFAULT_PATHS = ("src", "scripts")
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules"}
+
+
+def _iter_py_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs if d not in _SKIP_DIRS and not d.startswith(".")]
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+        else:
+            raise FileNotFoundError(f"no such path: {p}")
+    return sorted(set(out))
+
+
+def load_program(paths: Iterable[str]) -> Program:
+    modules = []
+    for path in _iter_py_files(paths):
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        modules.append(Module(path, source))
+    return Program(modules)
+
+
+def analyze_paths(paths: Iterable[str]) -> Tuple[List[Finding], List[Finding]]:
+    """Run all rules over ``paths``.
+
+    Returns (active, suppressed): findings that count, and findings
+    silenced by an inline ``# modlint: disable=`` comment.
+    """
+    program = load_program(paths)
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    for module in program.modules.values():
+        if module.syntax_error is not None:
+            active.append(
+                Finding(
+                    rule="syntax-error",
+                    code="MOD000",
+                    path=module.path,
+                    line=module.syntax_error.lineno or 1,
+                    symbol="",
+                    message=f"file does not parse: {module.syntax_error.msg}",
+                )
+            )
+            continue
+        for r in all_rules():
+            for f in r.check(module, program):
+                if module.suppressed(f.line, f.rule, f.code):
+                    suppressed.append(f)
+                else:
+                    active.append(f)
+    active.sort(key=lambda f: (f.path, f.line, f.code))
+    return active, suppressed
+
+
+def _print_rules() -> None:
+    for r in all_rules():
+        print(f"{r.code}  {r.slug:28s} [{r.family}]")
+        print(f"       flags : {r.summary}")
+        print(f"       guards: {r.guards}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="modlint: trace-safety, jit-cache and Pallas "
+        "kernel-contract static analysis for this repo",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to scan (default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON (default: %(default)s; missing = empty)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report every active finding")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings "
+                    "(use only to shrink it)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        _print_rules()
+        return 0
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if os.path.exists(p)]
+    if not paths:
+        print("modlint: nothing to scan (no paths given, none of "
+              f"{DEFAULT_PATHS} exist here)", file=sys.stderr)
+        return 2
+
+    active, suppressed = analyze_paths(paths)
+
+    if args.update_baseline:
+        old = baseline_mod.load(args.baseline) if os.path.exists(args.baseline) else None
+        baseline_mod.save(args.baseline, active)
+        grew = old is not None and sum(baseline_mod.group(active).values()) > sum(old.values())
+        print(f"modlint: baseline written to {args.baseline} "
+              f"({len(active)} finding(s))")
+        if grew:
+            print("modlint: WARNING — the baseline GREW; it is meant to "
+                  "shrink monotonically. Fix or inline-suppress new "
+                  "violations instead.", file=sys.stderr)
+        return 0
+
+    if args.no_baseline:
+        new, stale = active, {}
+    else:
+        new, stale = baseline_mod.compare(active, baseline_mod.load(args.baseline))
+
+    if args.format == "json":
+        print(json.dumps({
+            "new": [f.__dict__ for f in new],
+            "baselined": len(active) - len(new),
+            "suppressed": len(suppressed),
+            "stale_baseline": [list(k) + [n] for k, n in stale.items()],
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        if stale:
+            for (rule, path, sym), n in sorted(stale.items()):
+                where = f"{path}" + (f" [{sym}]" if sym else "")
+                print(f"STALE baseline entry: {rule} x{n} at {where} — the "
+                      "violation is gone; shrink the baseline "
+                      "(--update-baseline)")
+        n_files = len(_iter_py_files(paths))
+        print(
+            f"modlint: {n_files} files, {len(all_rules())} rules — "
+            f"{len(new)} new violation(s), "
+            f"{len(active) - len(new)} baselined, "
+            f"{len(suppressed)} suppressed inline, "
+            f"{len(stale)} stale baseline entr{'y' if len(stale) == 1 else 'ies'}"
+        )
+
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,240 @@
+"""Trace-safety / jit-cache rules (MOD1xx).
+
+The serving engine funnels every compiled program through shared,
+bounded jit caches keyed by frozen configs (serve/engine.py
+``_JIT_CACHE``, serve/cache.py ``_POOL_OPS_CACHE``). The whole scheme
+rests on three properties these rules guard: jits are constructed once
+(not per call), cache keys are hashable and array-free, and step bodies
+never branch in Python on traced values.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, List
+
+from repro.analysis.core import (
+    Finding,
+    Module,
+    Program,
+    annotation_text,
+    call_name,
+    dataclass_frozen,
+    is_namedtuple,
+    rule,
+)
+
+_JIT_NAMES = ("jax.jit", "jax.pmap")
+
+# array-ish / unhashable annotation fragments that must not appear on a
+# *Spec class field (they would either fail hashing as a jit static arg
+# or — worse, the PR 5 bug — pin device storage alive via the jit cache)
+_ARRAY_ANN = re.compile(
+    r"(jax\.Array|jnp\.ndarray|np\.ndarray|numpy\.ndarray|ndarray|DeviceArray"
+    r"|ArrayLike|chex\.Array)"
+)
+_UNHASHABLE_ANN = re.compile(r"^(typing\.)?(List|Dict|Set|list|dict|set)\[")
+
+_LOOP_NODES = (ast.For, ast.While, ast.AsyncFor, ast.ListComp, ast.SetComp,
+               ast.DictComp, ast.GeneratorExp)
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    nm = call_name(node)
+    if nm in _JIT_NAMES or nm in ("jit", "pmap"):
+        return True
+    # functools.partial(jax.jit, ...) builds a jit factory — same churn risk
+    if nm.endswith("partial") and node.args:
+        return call_name(node.args[0]) in _JIT_NAMES
+    return False
+
+
+@rule(
+    "jit-in-loop",
+    "MOD101",
+    "trace",
+    "jax.jit constructed inside a loop/comprehension, or immediately invoked",
+    "each jax.jit() call mints a fresh cache; building one per iteration "
+    "(or per call via jax.jit(f)(x)) re-traces and re-compiles every time "
+    "instead of hitting the shared _JIT_CACHE / _POOL_OPS_CACHE LRUs",
+)
+def check_jit_in_loop(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_jit_in_loop
+    for node in module.walk():
+        if not (isinstance(node, ast.Call) and _is_jit_call(node)):
+            continue
+        parent = module.parent(node)
+        if isinstance(parent, ast.Call) and parent.func is node:
+            yield module.finding(
+                r, node,
+                "jax.jit(...) immediately invoked — the compiled executable "
+                "is thrown away after one call; hoist the jit and reuse it",
+            )
+            continue
+        for anc in module.ancestors(node):
+            if isinstance(anc, _LOOP_NODES):
+                yield module.finding(
+                    r, node,
+                    "jax.jit constructed inside a loop/comprehension — one "
+                    "fresh trace cache per iteration; hoist it (or memoize "
+                    "the built jit in a module-level LRU)",
+                )
+                break
+
+
+@rule(
+    "spec-array-field",
+    "MOD102",
+    "trace",
+    "array-valued or unhashable field on a *Spec class",
+    "Spec objects ride jit static args / nondiff_argnums and are closed "
+    "over by cached jitted steps; an array field either fails hashing or "
+    "pins device storage alive through the shared jit cache (the PR 5 "
+    "PoolSpec bug class)",
+)
+def check_spec_array_field(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_spec_array_field
+    for node in module.walk():
+        if not isinstance(node, ast.ClassDef) or not node.name.endswith("Spec"):
+            continue
+        if dataclass_frozen(node) is None and not is_namedtuple(node):
+            continue
+        for stmt in node.body:
+            if not isinstance(stmt, ast.AnnAssign) or not isinstance(
+                stmt.target, ast.Name
+            ):
+                continue
+            ann = annotation_text(stmt.annotation)
+            if _ARRAY_ANN.search(ann):
+                yield module.finding(
+                    r, stmt,
+                    f"{node.name}.{stmt.target.id} is annotated {ann!r} — a "
+                    "Spec must stay array-free so the shared jit cache can't "
+                    "pin pool/device storage alive",
+                )
+            elif _UNHASHABLE_ANN.match(ann):
+                yield module.finding(
+                    r, stmt,
+                    f"{node.name}.{stmt.target.id} is annotated {ann!r} — "
+                    "unhashable; Specs key jit caches, use Tuple/frozenset",
+                )
+
+
+@rule(
+    "nonfrozen-config",
+    "MOD103",
+    "trace",
+    "*Config/*Spec dataclass without frozen=True",
+    "configs key the shared jit caches and materialize capacity-ladder "
+    "levels (core/routing.py capacity_ladder); a mutable config silently "
+    "aliases distinct compiled programs under one cache entry (the PR 8 "
+    "ladder only works because every level is one frozen config)",
+)
+def check_nonfrozen_config(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_nonfrozen_config
+    for node in module.walk():
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if not (node.name.endswith("Config") or node.name.endswith("Spec")):
+            continue
+        fz = dataclass_frozen(node)
+        if fz is False:
+            yield module.finding(
+                r, node,
+                f"dataclass {node.name} is not frozen=True — configs/specs "
+                "must be immutable+hashable to key jit caches and ladder "
+                "levels",
+            )
+
+
+# jnp helpers that compute static metadata, not traced values — branching
+# on these in Python is fine
+_STATIC_JNP = frozenset({
+    "issubdtype", "dtype", "result_type", "finfo", "iinfo", "can_cast",
+    "promote_types", "shape", "ndim", "size", "isdtype",
+})
+
+
+def _mentions_traced(node: ast.AST) -> bool:
+    """Does the expression *directly* produce a traced value: a jnp./
+    jax.numpy./lax. call, or a comparison/bool-op over one? Arguments of
+    static metadata helpers (jnp.issubdtype(...)) are not descended into
+    — the helper collapses them to a Python value."""
+    if isinstance(node, ast.Call):
+        nm = call_name(node)
+        if nm.startswith(("jnp.", "jax.numpy.", "lax.", "jax.lax.")):
+            return nm.rsplit(".", 1)[-1] not in _STATIC_JNP
+    return any(_mentions_traced(c) for c in ast.iter_child_nodes(node))
+
+
+@rule(
+    "traced-branch",
+    "MOD104",
+    "trace",
+    "Python if/while/assert on a jnp./lax. expression",
+    "MoD's static-graph property means control flow must be lax.cond/"
+    "where inside jitted step bodies; Python branching on a traced value "
+    "is a ConcretizationTypeError at best and a silent per-shape "
+    "recompile at worst",
+)
+def check_traced_branch(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_traced_branch
+    for node in module.walk():
+        if isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            kind = "if" if isinstance(node, ast.If) else "while"
+        elif isinstance(node, ast.Assert):
+            test = node.test
+            kind = "assert"
+        else:
+            continue
+        if _mentions_traced(test):
+            yield module.finding(
+                r, node,
+                f"Python `{kind}` over a jnp/lax expression — use jnp.where/"
+                "lax.cond (or hoist to a static config value); Python "
+                "branches don't exist in the traced graph",
+            )
+
+
+_STEPPY = re.compile(r"(^|_)(step|train_step|update)($|_)")
+
+
+@rule(
+    "jit-missing-donate",
+    "MOD105",
+    "trace",
+    "state-threading step jit without donate_argnums",
+    "train/step jits thread their state argument through (state -> state); "
+    "without donation XLA double-buffers the whole state, which at "
+    "production batch sizes is the difference between fitting and OOM",
+)
+def check_jit_missing_donate(module: Module, program: Program) -> Iterator[Finding]:
+    r = check_jit_missing_donate
+    for node in module.walk():
+        if not isinstance(node, ast.Call) or call_name(node) not in _JIT_NAMES:
+            continue
+        if not node.args or not isinstance(node.args[0], ast.Name):
+            continue
+        wrapped = node.args[0].id
+        if not _STEPPY.search(wrapped):
+            continue
+        kws = {kw.arg for kw in node.keywords}
+        if not ({"donate_argnums", "donate_argnames"} & kws):
+            yield module.finding(
+                r, node,
+                f"jax.jit({wrapped}) threads step state but passes no "
+                "donate_argnums/donate_argnames — the state buffer is "
+                "double-allocated per step",
+            )
+
+
+# Keep a handle on the registered rules for tests
+RULES: List[object] = [
+    check_jit_in_loop,
+    check_spec_array_field,
+    check_nonfrozen_config,
+    check_traced_branch,
+    check_jit_missing_donate,
+]

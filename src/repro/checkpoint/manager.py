@@ -24,6 +24,7 @@ import os
 import shutil
 import threading
 import time
+import zipfile
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -149,8 +150,15 @@ class CheckpointManager:
                     raise IOError(f"checksum mismatch for {k}")
                 out[k] = _decode(a, meta["dtype"])
             return out
-        except Exception:
-            return None  # corrupt/partial — caller falls back to older step
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile):
+            # corrupt/partial checkpoint — caller falls back to an older
+            # step. OSError covers unreadable/truncated files (incl. the
+            # checksum IOError above), ValueError covers json decode
+            # errors, KeyError a manifest tensor missing from arrays.npz,
+            # BadZipFile a torn npz write. Anything else (a code bug, not
+            # a bad file) propagates instead of silently losing training
+            # progress to an older step.
+            return None
 
     def restore_latest(
         self,

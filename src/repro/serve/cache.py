@@ -664,6 +664,10 @@ def _build_pool_ops(cfg: ModelConfig, batch: int, ctx: int, page_size: int,
             )
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
+    # modlint: disable=jit-in-loop -- _build_pool_ops itself is memoized in
+    # the module-level _POOL_OPS_CACHE LRU (via _pool_ops), so these four
+    # jits are constructed once per (cfg, batch, ctx, page_size, backend,
+    # quant) key, not per engine build
     return tuple(jax.jit(f) for f in (reset_resid, write, scrub, read))
 
 

@@ -92,7 +92,6 @@ from repro.serve.cache import (
 from repro.models import api
 from repro.serve.config import EngineConfig
 from repro.serve.quant import dequantize_params, quantize_params
-from repro.serve.faults import FaultInjector
 from repro.serve.overload import CapacityController, EngineOverloaded, default_levels
 from repro.serve.request import (
     FINISH_CANCELLED,
@@ -1299,6 +1298,9 @@ class ServingEngine:
         though a ``stream`` callback will see the replay."""
         req = slot.req
         self.pool.release(slot.idx)
+        # modlint: disable=counter-decrement -- not a monotone counter here:
+        # preemption restarts the request from scratch, so its tokens leave
+        # the book and are re-counted on replay; net totals stay exact
         self.generated_tokens -= len(slot.generated)  # regenerated later
         slot.req = None
         slot.state = FREE

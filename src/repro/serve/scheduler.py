@@ -61,8 +61,6 @@ import dataclasses
 from collections import deque
 from typing import Callable, Deque, List, Optional, Tuple
 
-import numpy as np
-
 from repro.serve.request import PRIORITY_LATENCY, Request
 
 FREE = "free"
@@ -250,6 +248,10 @@ class Scheduler:
         all queued batch-tier work — without resetting batch-tier FCFS
         order (the deque position itself no longer carries seniority)."""
         self.queue.appendleft(req)
+        # modlint: disable=counter-decrement -- `admitted` is a gauge of
+        # currently-admitted requests (the pool-accounting invariant
+        # queue+admitted+finished == submitted depends on it unwinding
+        # here), not a lifetime stats counter
         self.admitted -= 1
 
     def drop(self, req: Request) -> None:

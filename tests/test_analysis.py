@@ -1,0 +1,388 @@
+"""modlint (src/repro/analysis) — the analyzer analyzed.
+
+Three layers:
+
+1. fixture trees planting exactly one violation per rule, each asserting
+   the right rule fires (and that a clean twin doesn't);
+2. the suppression + baseline-ratchet mechanics (inline disable honored,
+   growth fails, stale entries fail until the baseline shrinks);
+3. a self-check: the shipped ``src``+``scripts`` tree is clean modulo
+   the committed ``analysis_baseline.json`` — i.e. exactly what the CI
+   ``analysis`` stage gates.
+"""
+
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro.analysis import analyze_paths, all_rules
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.runner import main
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def write_tree(root, files):
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    return [str(root)]
+
+
+def rules_fired(root, files):
+    active, suppressed = analyze_paths(write_tree(root, files))
+    return {f.rule for f in active}, active, suppressed
+
+
+# ---------------------------------------------------------------------------
+# one planted violation per rule
+# ---------------------------------------------------------------------------
+
+_KERNEL_PRELUDE = "from jax.experimental import pallas as pl\n\ndef _k(x_ref, o_ref):\n    o_ref[...] = x_ref[...]\n\n"
+
+FIXTURES = {
+    "jit-in-loop": {
+        "pkg/build.py": (
+            "import jax\n"
+            "def build(fns):\n"
+            "    outs = []\n"
+            "    for f in fns:\n"
+            "        outs.append(jax.jit(f))\n"
+            "    return outs\n"
+        ),
+    },
+    "spec-array-field": {
+        "pkg/spec.py": (
+            "import dataclasses\n"
+            "import jax\n"
+            "@dataclasses.dataclass(frozen=True)\n"
+            "class PoolSpec:\n"
+            "    page_size: int\n"
+            "    pages: jax.Array\n"  # the PR 5 bug class, replanted
+        ),
+    },
+    "nonfrozen-config": {
+        "pkg/cfg.py": (
+            "import dataclasses\n"
+            "@dataclasses.dataclass\n"
+            "class LadderConfig:\n"
+            "    ratio: float = 0.5\n"
+        ),
+    },
+    "traced-branch": {
+        "pkg/step.py": (
+            "import jax.numpy as jnp\n"
+            "def step(x):\n"
+            "    if jnp.any(x > 0):\n"
+            "        return x\n"
+            "    return -x\n"
+        ),
+    },
+    "jit-missing-donate": {
+        "pkg/train.py": (
+            "import jax\n"
+            "def build(cfg):\n"
+            "    def train_step(state, batch):\n"
+            "        return state, 0.0\n"
+            "    return jax.jit(train_step)\n"
+        ),
+    },
+    "pallas-missing-oracle": {
+        "kernels/foo.py": _KERNEL_PRELUDE + (
+            "def mystery_transform(x, *, interpret=False):\n"
+            "    return pl.pallas_call(_k, grid=(4,), interpret=interpret)(x)\n"
+        ),
+        "kernels/ref.py": "def other_thing_ref(x):\n    return x\n",
+    },
+    "pallas-missing-interpret": {
+        "kernels/foo.py": _KERNEL_PRELUDE + (
+            "def mystery_transform(x):\n"
+            "    return pl.pallas_call(_k, grid=(4,))(x)\n"
+        ),
+        "kernels/ref.py": "def mystery_transform_ref(x):\n    return x\n",
+    },
+    "pallas-grid-divisibility": {
+        "kernels/foo.py": _KERNEL_PRELUDE + (
+            "def mystery_transform(x, *, interpret=False):\n"
+            "    m = x.shape[0]\n"
+            "    return pl.pallas_call(_k, grid=(m // 8,), interpret=interpret)(x)\n"
+        ),
+        "kernels/ref.py": "def mystery_transform_ref(x):\n    return x\n",
+    },
+    "dequant-outside-kernel": {
+        "kernels/foo.py": _KERNEL_PRELUDE + (
+            "from repro.serve.quant import dequantize_rows\n"
+            "def mystery_transform(pages, scales, *, interpret=False):\n"
+            "    wide = dequantize_rows(pages, scales)\n"
+            "    return pl.pallas_call(_k, grid=(4,), interpret=interpret)(wide)\n"
+        ),
+        "kernels/ref.py": "def mystery_transform_ref(x):\n    return x\n",
+    },
+    "scan-body-side-effect": {
+        "pkg/scan.py": (
+            "import jax\n"
+            "def run(xs):\n"
+            "    log = []\n"
+            "    def body(c, x):\n"
+            "        log.append(x)\n"
+            "        return c, x\n"
+            "    return jax.lax.scan(body, 0, xs)\n"
+        ),
+    },
+    "counter-decrement": {
+        "pkg/books.py": (
+            "class Engine:\n"
+            "    def preempt(self):\n"
+            "        self.generated_tokens -= 1\n"
+        ),
+    },
+    "replace-nonfrozen": {
+        "pkg/degrade.py": (
+            "import dataclasses\n"
+            "@dataclasses.dataclass\n"
+            "class Mutable:\n"
+            "    r: float = 0.5\n"
+            "def degrade(cfg: Mutable):\n"
+            "    return dataclasses.replace(cfg, r=0.1)\n"
+        ),
+    },
+    "blanket-except": {
+        "pkg/io.py": (
+            "def load(path):\n"
+            "    try:\n"
+            "        return open(path).read()\n"
+            "    except Exception:\n"
+            "        return None\n"
+        ),
+    },
+}
+
+
+@pytest.mark.parametrize("slug", sorted(FIXTURES))
+def test_rule_fires_on_planted_violation(tmp_path, slug):
+    fired, active, _ = rules_fired(tmp_path, FIXTURES[slug])
+    assert slug in fired, f"{slug} did not fire; got {sorted(fired)}: {active}"
+
+
+def test_rule_registry_has_contracted_surface():
+    rules = all_rules()
+    assert len(rules) >= 8  # acceptance floor: >= 8 distinct rule IDs
+    assert len({r.slug for r in rules}) == len(rules)
+    assert len({r.code for r in rules}) == len(rules)
+    assert {r.family for r in rules} == {"trace", "kernel", "engine"}
+    assert {r.slug for r in rules} >= set(FIXTURES)  # every rule has a fixture
+
+
+def test_clean_kernel_module_is_clean(tmp_path):
+    files = {
+        "kernels/foo.py": _KERNEL_PRELUDE + (
+            "def mystery_transform(x, *, interpret=False):\n"
+            "    m = x.shape[0]\n"
+            "    bs = min(8, m)\n"
+            "    assert m % bs == 0\n"
+            "    return pl.pallas_call(_k, grid=(m // bs,), interpret=interpret)(x)\n"
+        ),
+        "kernels/ref.py": "def mystery_transform_ref(x):\n    return x\n",
+    }
+    fired, active, suppressed = rules_fired(tmp_path, files)
+    assert not fired, active
+    assert not suppressed
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    _, active, _ = rules_fired(tmp_path, {"pkg/broken.py": "def f(:\n"})
+    assert [f.rule for f in active] == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_inline_suppression_honored(tmp_path):
+    files = {
+        "pkg/build.py": (
+            "import jax\n"
+            "def build(fns):\n"
+            "    # modlint: disable=jit-in-loop -- memoized by the caller\n"
+            "    return [jax.jit(f) for f in fns]\n"
+        ),
+    }
+    fired, active, suppressed = rules_fired(tmp_path, files)
+    assert not fired, active
+    assert [f.rule for f in suppressed] == ["jit-in-loop"]
+
+
+def test_suppression_rationale_block_scans_upward(tmp_path):
+    files = {
+        "pkg/build.py": (
+            "import jax\n"
+            "def build(fns):\n"
+            "    # modlint: disable=MOD101 -- numeric code works too, and\n"
+            "    # the rationale may run on for several comment lines\n"
+            "    # before the flagged statement itself\n"
+            "    return [jax.jit(f) for f in fns]\n"
+        ),
+    }
+    fired, _, suppressed = rules_fired(tmp_path, files)
+    assert not fired
+    assert len(suppressed) == 1
+
+
+def test_suppression_does_not_leak_through_code_lines(tmp_path):
+    files = {
+        "pkg/build.py": (
+            "import jax\n"
+            "def build(fns):\n"
+            "    # modlint: disable=jit-in-loop -- stale comment\n"
+            "    x = 1\n"
+            "    return [jax.jit(f) for f in fns], x\n"
+        ),
+    }
+    fired, _, _ = rules_fired(tmp_path, files)
+    assert "jit-in-loop" in fired  # a code line breaks the comment block
+
+
+def test_wrong_rule_suppression_does_not_silence(tmp_path):
+    files = {
+        "pkg/build.py": (
+            "import jax\n"
+            "def build(fns):\n"
+            "    # modlint: disable=blanket-except -- wrong rule\n"
+            "    return [jax.jit(f) for f in fns]\n"
+        ),
+    }
+    fired, _, _ = rules_fired(tmp_path, files)
+    assert "jit-in-loop" in fired
+
+
+# ---------------------------------------------------------------------------
+# baseline ratchet
+# ---------------------------------------------------------------------------
+
+
+def _violation(n=1):
+    """A module with ``n`` blanket-except violations in one symbol-distinct
+    function each (the ratchet keys on (rule, path, symbol))."""
+    funcs = [
+        f"def load{i}(path):\n    try:\n        return open(path).read()\n"
+        "    except Exception:\n        return None\n"
+        for i in range(n)
+    ]
+    return {"pkg/io.py": "\n".join(funcs)}
+
+
+def test_baseline_absorbs_known_violations(tmp_path):
+    paths = write_tree(tmp_path, _violation(2))
+    active, _ = analyze_paths(paths)
+    assert len(active) == 2
+    new, stale = baseline_mod.compare(active, baseline_mod.group(active))
+    assert not new and not stale
+
+
+def test_baseline_ratchet_fails_on_growth(tmp_path):
+    paths = write_tree(tmp_path, _violation(1))
+    active1, _ = analyze_paths(paths)
+    base = baseline_mod.group(active1)
+    paths = write_tree(tmp_path, _violation(3))  # two NEW violations
+    active3, _ = analyze_paths(paths)
+    new, stale = baseline_mod.compare(active3, base)
+    assert len(new) == 2 and not stale
+
+
+def test_baseline_ratchet_fails_on_stale_entries(tmp_path):
+    paths = write_tree(tmp_path, _violation(3))
+    active3, _ = analyze_paths(paths)
+    base = baseline_mod.group(active3)
+    paths = write_tree(tmp_path, _violation(1))  # two violations fixed
+    active1, _ = analyze_paths(paths)
+    new, stale = baseline_mod.compare(active1, base)
+    assert not new
+    assert sum(stale.values()) == 2  # must shrink the baseline to pass
+
+
+def test_baseline_roundtrip(tmp_path):
+    paths = write_tree(tmp_path / "t", _violation(2))
+    active, _ = analyze_paths(paths)
+    bp = tmp_path / "b.json"
+    baseline_mod.save(str(bp), active)
+    loaded = baseline_mod.load(str(bp))
+    assert loaded == baseline_mod.group(active)
+    raw = json.loads(bp.read_text())
+    assert raw["version"] == 1
+    assert all(set(e) == {"rule", "path", "symbol", "count"} for e in raw["findings"])
+
+
+def test_baseline_version_mismatch_raises(tmp_path):
+    bp = tmp_path / "b.json"
+    bp.write_text('{"version": 99, "findings": []}')
+    with pytest.raises(ValueError):
+        baseline_mod.load(str(bp))
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (what scripts/ci.sh actually gates on)
+# ---------------------------------------------------------------------------
+
+
+def test_cli_fails_on_new_and_passes_after_update(tmp_path, monkeypatch, capsys):
+    write_tree(tmp_path, _violation(1))
+    monkeypatch.chdir(tmp_path)
+    assert main(["pkg", "--baseline", "b.json"]) == 1  # new violation
+    assert main(["pkg", "--baseline", "b.json", "--update-baseline"]) == 0
+    assert main(["pkg", "--baseline", "b.json"]) == 0  # baselined now
+    capsys.readouterr()
+
+
+def test_cli_fails_on_stale_baseline(tmp_path, monkeypatch, capsys):
+    write_tree(tmp_path, _violation(1))
+    monkeypatch.chdir(tmp_path)
+    assert main(["pkg", "--baseline", "b.json", "--update-baseline"]) == 0
+    (tmp_path / "pkg" / "io.py").write_text("def load(path):\n    return None\n")
+    assert main(["pkg", "--baseline", "b.json"]) == 1  # stale entry
+    out = capsys.readouterr().out
+    assert "STALE" in out
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, monkeypatch, capsys):
+    write_tree(tmp_path, {"pkg/ok.py": "x = 1\n"})
+    monkeypatch.chdir(tmp_path)
+    assert main(["pkg"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in ("MOD101", "MOD201", "MOD301"):
+        assert code in out
+
+
+# ---------------------------------------------------------------------------
+# self-check: the shipped tree is clean modulo the committed baseline
+# ---------------------------------------------------------------------------
+
+
+def test_shipped_tree_is_clean_modulo_baseline(monkeypatch, capsys):
+    monkeypatch.chdir(REPO)
+    assert os.path.exists("analysis_baseline.json")
+    rc = main(["src", "scripts"])
+    out = capsys.readouterr().out
+    assert rc == 0, f"modlint must pass on the shipped tree:\n{out}"
+
+
+def test_shipped_tree_planting_violation_fails(tmp_path, monkeypatch, capsys):
+    """The acceptance scenario: add one bad file to src/ and the CI
+    analysis gate (same entry point) must go red."""
+    monkeypatch.chdir(REPO)
+    bad = pathlib.Path("src/repro/serve/_modlint_selftest_tmp.py")
+    bad.write_text(FIXTURES["nonfrozen-config"]["pkg/cfg.py"])
+    try:
+        rc = main(["src", "scripts"])
+    finally:
+        bad.unlink()
+    capsys.readouterr()
+    assert rc == 1
